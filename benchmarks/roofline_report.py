@@ -1,0 +1,44 @@
+"""Roofline table from dry-run artifacts (results/dryrun/*.json)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir="results/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def table(rows, mesh_prefix="pod"):
+    ok = [r for r in rows if r.get("status") == "ok"
+          and r["mesh"].startswith(mesh_prefix)]
+    lines = []
+    hdr = (f"{'arch':22s} {'shape':12s} {'t_comp':>8s} {'t_mem':>8s} "
+           f"{'t_link':>8s} {'bneck':>7s} {'useful':>7s} {'roofline':>9s}")
+    lines.append(hdr)
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['t_compute']:8.2f} "
+            f"{r['t_memory']:8.2f} {r['t_collective']:8.2f} "
+            f"{r['bottleneck'][:7]:>7s} {r['useful_flops_ratio']:7.2f} "
+            f"{r['roofline_fraction']:9.4f}")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    if not rows:
+        return [("roofline", 0.0, "no dry-run artifacts yet")]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    sk = [r for r in rows if r.get("status") == "skipped"]
+    err = [r for r in rows if r.get("status") == "error"]
+    out = [("dryrun_cells", 0.0,
+            f"{len(ok)} ok / {len(sk)} documented-skip / {len(err)} error")]
+    for r in sorted(ok, key=lambda r: -r["roofline_fraction"])[:3]:
+        out.append((f"roofline_best_{r['arch']}_{r['shape']}", 0.0,
+                    f"{r['roofline_fraction']:.4f} ({r['bottleneck']})"))
+    return out

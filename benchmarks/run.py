@@ -1,0 +1,58 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+  python -m benchmarks.run            # all benches
+  python -m benchmarks.run --only fig5,fig6
+
+Benches (paper artifact -> module):
+  Fig 5 ingress scaling        -> bench_ingress  (sim: calibrated Titan model;
+                                                  real: threaded implementation)
+  Fig 6 hybrid storage         -> bench_hybrid   (real LogStore tiers)
+  SIII-B two-phase I/O         -> bench_twophase (real system flush)
+  SIII-C restart               -> bench_restart  (real BB vs PFS reads)
+  checkpoint stall (framework) -> bench_ckpt     (train-state save paths)
+  roofline summary             -> roofline_report (dry-run artifacts)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_ablation, bench_ckpt, bench_hybrid,
+                            bench_ingress, bench_restart, bench_twophase,
+                            roofline_report)
+    benches = {
+        "fig5": bench_ingress.main,
+        "fig6": bench_hybrid.main,
+        "twophase": bench_twophase.main,
+        "restart": bench_restart.main,
+        "ckpt": bench_ckpt.main,
+        "ablation": bench_ablation.main,
+        "roofline": roofline_report.main,
+    }
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    failed = 0
+    for key, fn in benches.items():
+        if only and key not in only:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:
+            failed += 1
+            print(f"{key},nan,ERROR {e!r}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

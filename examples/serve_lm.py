@@ -1,0 +1,14 @@
+"""Batched serving example: prefill + greedy decode over request batches,
+with weights restorable from the burst buffer (hot restart path).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-9b
+(uses the reduced config on CPU; drop --reduced on real hardware)
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    if "--reduced" not in sys.argv and "--help" not in sys.argv:
+        sys.argv.append("--reduced")
+    serve.main()

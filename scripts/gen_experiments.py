@@ -1,0 +1,77 @@
+"""Generate EXPERIMENTS.md tables from dry-run artifacts + bench CSV.
+
+Usage: PYTHONPATH=src python scripts/gen_experiments.py
+Reads results/dryrun (final), results/dryrun_v* (iteration history),
+results/bench_output.csv if present; writes EXPERIMENTS.md by filling the
+{{...}} slots in scripts/experiments_template.md.
+"""
+import json
+import glob
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.report import (compare, load, md_multipod_delta,
+                                   md_roofline_table, md_skip_table)
+
+
+def fmt_compare(dir_a, dir_b, label_a, label_b, shape="train_4k"):
+    rows = compare(dir_a, dir_b, shape=shape)
+    lines = [f"| arch | temp GB {label_a} | temp GB {label_b} | "
+             f"t_mem {label_a} | t_mem {label_b} | t_coll {label_a} | "
+             f"t_coll {label_b} |", "|---|---|---|---|---|---|---|"]
+    for arch, ta, tb, ma, mb, ca, cb in rows:
+        lines.append(f"| {arch} | {ta:.1f} | {tb:.1f} | {ma:.1f} | {mb:.1f} "
+                     f"| {ca:.1f} | {cb:.1f} |")
+    return "\n".join(lines)
+
+
+def dryrun_summary(rows):
+    ok = [r for r in rows if r.get("status") == "ok"]
+    sk = [r for r in rows if r.get("status") == "skipped"]
+    err = [r for r in rows if r.get("status") == "error"]
+    pods = [r for r in ok if r["mesh"].startswith("pod")]
+    mps = [r for r in ok if "multipod" in r["mesh"]]
+    return (f"**{len(ok)} compiled / {len(sk)} documented-skip / "
+            f"{len(err)} error** across both meshes "
+            f"({len(pods)} single-pod 16x16=256 chips, {len(mps)} "
+            f"multi-pod 2x16x16=512 chips cells).")
+
+
+def mem_fit_table(rows):
+    ok = [r for r in rows if r.get("status") == "ok"
+          and r["mesh"].startswith("pod") and r["shape"] == "train_4k"]
+    lines = ["| arch | args GB/chip | temp GB/chip | fits 16 GB? |",
+             "|---|---|---|---|"]
+    for r in sorted(ok, key=lambda r: r["arch"]):
+        a = r["memory_analysis"]["argument_size_in_bytes"] / 1e9
+        t = r["memory_analysis"]["temp_size_in_bytes"] / 1e9
+        fit = "yes" if t + 0 <= 16 else f"no (temp {t:.0f})"
+        lines.append(f"| {r['arch']} | {a:.1f} | {t:.1f} | {fit} |")
+    return "\n".join(lines)
+
+
+def main():
+    here = os.path.dirname(__file__)
+    rows = load("results/dryrun")
+    tpl = open(os.path.join(here, "experiments_template.md")).read()
+    subs = {
+        "{{DRYRUN_SUMMARY}}": dryrun_summary(rows),
+        "{{ROOFLINE_TABLE}}": md_roofline_table(rows),
+        "{{SKIP_TABLE}}": md_skip_table(rows),
+        "{{MULTIPOD_TABLE}}": md_multipod_delta(
+            [r for r in rows if r.get("shape") == "train_4k"]),
+        "{{MEMFIT_TABLE}}": mem_fit_table(rows),
+        "{{V2_V3_TABLE}}": fmt_compare(
+            "results/dryrun_v2_trainsnapshot", "results/dryrun_v3",
+            "pre", "post") if os.path.isdir("results/dryrun_v3") else "(n/a)",
+    }
+    for k, v in subs.items():
+        tpl = tpl.replace(k, v)
+    open("EXPERIMENTS.md", "w").write(tpl)
+    print("wrote EXPERIMENTS.md", len(tpl), "bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,364 @@
+"""Loop-aware cost analysis over compiled HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE — with
+scan-over-layers and microbatch accumulation that undercounts flops, HBM
+bytes and collectives by orders of magnitude. This analyzer parses the HLO
+module, builds per-computation symbol tables (op -> output shape), resolves
+the call graph (while condition/body, fusion calls, to_apply), extracts loop
+trip counts from while-condition integer constants, and accumulates per-op
+costs scaled by the product of enclosing trip counts.
+
+Costs (all PER CHIP — the HLO is the per-device SPMD program):
+  flops      — dot/conv: 2 * prod(out) * prod(lhs contracting dims);
+               1/elem for arithmetic + transcendental ops; reduce: in-elems.
+  hbm_bytes  — per post-fusion op: operand + output bytes (bookkeeping ops
+               and fusion internals excluded — they stay in VMEM/registers).
+  link_bytes — collectives with ring-algorithm factors (see roofline.py).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.analysis.roofline import (_DTYPE_BYTES, _FACTORS, _GROUPS_LIST_RE,
+                                     _GROUPS_RE)
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->.*{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]\{\},\s]+?))\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_REF_RE = re.compile(r"%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "tanh", "log", "rsqrt", "sqrt", "power", "negate",
+    "select", "compare", "and", "or", "xor", "abs", "floor", "ceil",
+    "sign", "cosine", "sine", "logistic", "atan2", "round-nearest-even",
+    "clamp", "remainder", "exponential-minus-one", "log-plus-one",
+}
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done", "while", "fusion", "call", "conditional",
+    "opt-barrier", "domain",
+}
+_COLL_BASE = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute"}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _text_bytes(text: str) -> int:
+    return sum(_shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+               for dt, dims in _SHAPE_RE.findall(text))
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    out_text: str
+    operands: str
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # op name -> type text
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if current is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                current = Computation(m.group(2), bool(m.group(1)))
+            continue
+        stripped = line.strip()
+        if stripped.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(3), m.group(2).strip(),
+                    m.group(4), m.group(5))
+            current.ops.append(op)
+            current.shapes[op.name] = op.out_text
+    return comps
+
+
+_FUSION_CHARGED = {
+    "dot", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "reduce-window", "sort", "copy",
+    "concatenate", "pad", "slice", "transpose", "rng", "cholesky",
+    "triangular-solve", "fft",
+}
+
+
+@dataclass
+class Stats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0        # raw: every post-fusion op's operands+out
+    hbm_fused: float = 0.0        # TPU-optimistic: elementwise assumed fused
+    link_bytes: float = 0.0
+    coll_detail: Dict[str, dict] = field(default_factory=dict)
+
+    def add(self, other: "Stats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.hbm_fused += other.hbm_fused * mult
+        self.link_bytes += other.link_bytes * mult
+        for k, v in other.coll_detail.items():
+            d = self.coll_detail.setdefault(
+                k, {"count": 0.0, "bytes": 0.0, "link_bytes": 0.0})
+            for kk in d:
+                d[kk] += v[kk] * mult
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "hbm_fused": self.hbm_fused, "link_bytes": self.link_bytes,
+                "collectives": {k: dict(v)
+                                for k, v in self.coll_detail.items()}}
+
+
+class Analyzer:
+    def __init__(self, hlo: str):
+        self.comps = parse_module(hlo)
+        entries = [n for n, c in self.comps.items() if c.is_entry]
+        self.entry = entries[0] if entries else next(iter(self.comps))
+        self._memo: Dict[str, Stats] = {}
+
+    # ------------------------------------------------------------- helpers
+    def _operand_bytes(self, comp: Computation, op: Op) -> int:
+        total = 0
+        for ref in _REF_RE.findall(op.operands):
+            total += _text_bytes(comp.shapes.get(ref, ""))
+        return total
+
+    def _operand_shape(self, comp: Computation, op: Op, idx: int) -> str:
+        refs = _REF_RE.findall(op.operands)
+        if idx < len(refs):
+            return comp.shapes.get(refs[idx], "")
+        return ""
+
+    def _trip_count(self, cond_name: str) -> int:
+        """Loop bound = the integer constant feeding the condition's compare
+        (directly or through the wrapped-compare fusion). Falling back to the
+        max constant would over-count when index-clamp constants (e.g.
+        ``min(i, S-1)``) appear in the condition."""
+        cond = self.comps.get(cond_name)
+        if cond is None:
+            return 1
+
+        def const_val(comp, ref):
+            op = next((o for o in comp.ops if o.name == ref), None)
+            if op is not None and op.opcode == "constant":
+                try:
+                    return int(op.operands.strip())
+                except ValueError:
+                    return None
+            return None
+
+        # 1) direct compare in the condition
+        for op in cond.ops:
+            refs = _REF_RE.findall(op.operands)
+            if op.opcode == "compare":
+                for r in refs:
+                    v = const_val(cond, r)
+                    if v is not None:
+                        return max(v, 1)
+            if op.opcode == "fusion" and op.out_text.startswith("pred"):
+                # operands of the wrapped-compare fusion
+                for r in refs:
+                    v = const_val(cond, r)
+                    if v is not None:
+                        return max(v, 1)
+        # 2) fallback: max integer constant
+        best = 1
+        for op in cond.ops:
+            if op.opcode == "constant" and op.out_text.startswith(
+                    ("s32", "u32", "s64")):
+                try:
+                    best = max(best, int(op.operands.strip()))
+                except ValueError:
+                    pass
+        return best
+
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        out_elems = _shape_elems(_SHAPE_RE.search(op.out_text).group(2)) \
+            if _SHAPE_RE.search(op.out_text) else 0
+        m = _CONTRACT.search(op.attrs)
+        contract = 1
+        if m:
+            lhs = self._operand_shape(comp, op, 0)
+            sm = _SHAPE_RE.search(lhs)
+            if sm:
+                dims = [int(d) for d in sm.group(2).split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        contract *= dims[int(ci)]
+        return 2.0 * out_elems * contract
+
+    def _participants(self, op: Op) -> int:
+        text = op.operands + op.attrs
+        m = _GROUPS_RE.search(text)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LIST_RE.search(text)
+        if m:
+            return len(m.group(1).split(","))
+        if "source_target_pairs" in text:
+            return 2
+        return 1
+
+    # --------------------------------------------------------------- main
+    def stats(self, comp_name: Optional[str] = None,
+              in_fusion: bool = False) -> Stats:
+        name = comp_name or self.entry
+        key = f"{name}|{in_fusion}"
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        total = Stats()
+        self._memo[key] = total
+        if comp is None:
+            return total
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                cond = _COND_RE.search(op.attrs)
+                body = _BODY_RE.search(op.attrs)
+                trip = self._trip_count(cond.group(1)) if cond else 1
+                if body and body.group(1) in self.comps:
+                    total.add(self.stats(body.group(1)), trip)
+                continue
+            if oc == "fusion":
+                if not in_fusion:
+                    b = self._fusion_bytes(comp, op)
+                    total.hbm_bytes += b
+                    total.hbm_fused += b
+                for c in _CALLS_RE.findall(op.attrs):
+                    sub = self.stats(c, in_fusion=True)
+                    total.flops += sub.flops
+                    total.link_bytes += sub.link_bytes
+                continue
+            if oc in ("call", "conditional", "map", "sort", "scatter",
+                      "reduce", "reduce-window", "select-and-scatter",
+                      "custom-call"):
+                for c in _CALLS_RE.findall(op.attrs):
+                    sub = self.stats(c, in_fusion=True)
+                    # applied computations are per-element; their cost is
+                    # folded into the reduce charge below, except real calls
+                    if oc in ("call", "conditional", "custom-call"):
+                        total.add(sub)
+
+            # --- per-op costs ---
+            if oc in ("dot", "convolution"):
+                total.flops += self._dot_flops(comp, op)
+            elif oc in _ELEMWISE:
+                m = _SHAPE_RE.search(op.out_text)
+                if m:
+                    total.flops += _shape_elems(m.group(2))
+            elif oc in ("reduce", "reduce-window"):
+                total.flops += self._operand_bytes(comp, op) // 4 or \
+                    _shape_elems(_SHAPE_RE.search(op.out_text).group(2))
+
+            base = oc.replace("-start", "")
+            if base in _COLL_BASE and not oc.endswith("-done"):
+                n = self._participants(op)
+                if n > 1:
+                    b = _text_bytes(op.out_text)
+                    lb = b * _FACTORS[base](n)
+                    total.link_bytes += lb
+                    d = total.coll_detail.setdefault(
+                        base, {"count": 0.0, "bytes": 0.0, "link_bytes": 0.0})
+                    d["count"] += 1
+                    d["bytes"] += b
+                    d["link_bytes"] += lb
+
+            if not in_fusion and oc not in _SKIP_BYTES \
+                    and base not in _COLL_BASE:
+                if oc == "dynamic-slice":
+                    b = 2 * _text_bytes(op.out_text)     # read slice + write
+                elif oc == "dynamic-update-slice":
+                    upd = self._operand_shape(comp, op, 1)
+                    b = 2 * _text_bytes(upd)             # in-place update
+                else:
+                    b = _text_bytes(op.out_text) \
+                        + self._operand_bytes(comp, op)
+                total.hbm_bytes += b
+                if oc in _FUSION_CHARGED:
+                    total.hbm_fused += b
+        return total
+
+    def _fusion_bytes(self, comp: Computation, op: Op) -> int:
+        """External traffic of a fusion op, accounting for sliced access:
+        - an operand consumed ONLY by dynamic-slice/gather inside the fused
+          computation is charged at the slice size (scan xs / stacked-param
+          reads), not the full array;
+        - a root dynamic-update-slice writing into a param-aliased buffer is
+          charged at the update size (scan ys writes are in-place)."""
+        called = _CALLS_RE.findall(op.attrs)
+        sub = self.comps.get(called[0]) if called else None
+        out_b = _text_bytes(op.out_text)
+        refs = _REF_RE.findall(op.operands)
+        if sub is None:
+            return out_b + self._operand_bytes(comp, op)
+
+        param_name = {}
+        for o in sub.ops:
+            if o.opcode == "parameter":
+                try:
+                    param_name[int(o.operands.strip())] = o.name
+                except ValueError:
+                    pass
+
+        aliased_buf = None
+        root = sub.ops[-1] if sub.ops else None
+        if root is not None and root.opcode == "dynamic-update-slice":
+            rrefs = _REF_RE.findall(root.operands)
+            if len(rrefs) >= 2:
+                upd_b = _text_bytes(sub.shapes.get(rrefs[1], ""))
+                if upd_b:
+                    out_b = upd_b
+                aliased_buf = rrefs[0]
+
+        total = out_b
+        for i, ref in enumerate(refs):
+            full = _text_bytes(comp.shapes.get(ref, ""))
+            pname = param_name.get(i)
+            if pname is None:
+                total += full
+                continue
+            if pname == aliased_buf:
+                continue                      # in-place scan buffer
+            consumers = [o for o in sub.ops
+                         if pname in _REF_RE.findall(o.operands)]
+            if consumers and all(o.opcode in ("dynamic-slice", "gather")
+                                 for o in consumers):
+                total += sum(_text_bytes(o.out_text) for o in consumers)
+            else:
+                total += full
+        return total
+
+
+def analyze(hlo: str) -> Stats:
+    return Analyzer(hlo).stats()

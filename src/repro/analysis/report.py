@@ -1,0 +1,99 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+
+def load(out_dir="results/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def md_roofline_table(rows, mesh_prefix="pod_"):
+    ok = [r for r in rows if r.get("status") == "ok"
+          and r["mesh"].startswith(mesh_prefix)]
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+        "| bottleneck | MODEL/HLO flops | roofline frac | temp GB/chip | "
+        "1-sentence lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        lever = _lever(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.2f} | "
+            f"{r['t_memory']:.2f} | {r['t_collective']:.2f} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} | "
+            f"{r['memory_analysis']['temp_size_in_bytes'] / 1e9:.1f} | "
+            f"{lever} |")
+    return "\n".join(lines)
+
+
+def _lever(r) -> str:
+    b = r["bottleneck"]
+    if b == "collective":
+        top = max((r.get("collectives") or {}).items(),
+                  key=lambda kv: kv[1]["link_bytes"], default=(None, None))[0]
+        return (f"cut {top} traffic (overlap with compute / coarser "
+                f"grain / different sharding axis)")
+    if b == "memory":
+        if r["shape"].startswith("decode") or r["shape"] == "long_500k":
+            return "decode is cache-read bound: quantize KV cache / batch up"
+        return ("reduce activation traffic: larger fused blocks, fp8/bf16 "
+                "intermediates, less remat recompute")
+    return "increase per-chip arithmetic intensity (bigger microbatch)"
+
+
+def md_skip_table(rows):
+    sk = [r for r in rows if r.get("status") == "skipped"
+          and "multipod" not in r["mesh"]]
+    lines = ["| arch | shape | reason |", "|---|---|---|"]
+    for r in sorted(sk, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['reason'][:90]} |")
+    return "\n".join(lines)
+
+
+def md_multipod_delta(rows):
+    by = defaultdict(dict)
+    for r in rows:
+        if r.get("status") == "ok":
+            key = "multipod" if "multipod" in r["mesh"] else "pod"
+            by[(r["arch"], r["shape"])][key] = r
+    lines = [
+        "| arch | shape | pod t_coll (s) | multipod t_coll (s) | "
+        "pod temp GB | multipod temp GB |",
+        "|---|---|---|---|---|---|",
+    ]
+    for (a, s), d in sorted(by.items()):
+        if "pod" in d and "multipod" in d:
+            p, m = d["pod"], d["multipod"]
+            lines.append(
+                f"| {a} | {s} | {p['t_collective']:.2f} | "
+                f"{m['t_collective']:.2f} | "
+                f"{p['memory_analysis']['temp_size_in_bytes']/1e9:.1f} | "
+                f"{m['memory_analysis']['temp_size_in_bytes']/1e9:.1f} |")
+    return "\n".join(lines)
+
+
+def compare(dir_a, dir_b, shape="train_4k", mesh_prefix="pod_"):
+    """Per-arch before/after across two artifact dirs."""
+    def idx(d):
+        return {(r["arch"], r["shape"]): r for r in load(d)
+                if r.get("status") == "ok" and r["mesh"].startswith(mesh_prefix)}
+    A, B = idx(dir_a), idx(dir_b)
+    out = []
+    for key in sorted(B):
+        if key in A and key[1] == shape:
+            a, b = A[key], B[key]
+            out.append((key[0],
+                        a["memory_analysis"]["temp_size_in_bytes"] / 1e9,
+                        b["memory_analysis"]["temp_size_in_bytes"] / 1e9,
+                        a["t_memory"], b["t_memory"],
+                        a["t_collective"], b["t_collective"]))
+    return out

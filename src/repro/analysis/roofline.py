@@ -1,0 +1,182 @@
+"""Three-term roofline analysis from dry-run compile artifacts.
+
+Terms (seconds, per step, per chip — TPU v5e constants):
+  compute    = flops_per_chip / PEAK_FLOPS          (197 TFLOP/s bf16)
+  memory     = hbm_bytes_per_chip / HBM_BW          (819 GB/s)
+  collective = ici_traffic_per_chip / LINK_BW       (~50 GB/s/link)
+
+Sources: ``compiled.cost_analysis()`` reports per-chip flops and per-chip
+"bytes accessed" (an upper-bound HBM-traffic proxy: XLA counts operand +
+output bytes per op, so fusion-internal reuse is already excluded but
+VMEM-resident reuse between ops is counted — we report it as-is and note the
+bias). Collective traffic is parsed from the compiled HLO: every
+all-gather/all-reduce/reduce-scatter/all-to-all/collective-permute op's
+output shape, dtype and replica-group size, converted to per-chip link bytes
+with ring-algorithm factors:
+  all-gather (n-1)/n * out | reduce-scatter (n-1) * out (out is the shard)
+  all-reduce 2(n-1)/n * size | all-to-all (n-1)/n * size | permute 1 * size
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(.*?\)\s+)?(\w+)\[([\d,]*)\][^=]*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_TUPLE_COLL_RE = re.compile(
+    r"=\s+\((.*?)\)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SHAPE_IN_TUPLE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _participants(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    if "source_target_pairs" in line:
+        return 2
+    return 1
+
+
+_FACTORS = {
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: (n - 1),
+    "all-reduce": lambda n: 2 * (n - 1) / max(n, 1),
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def parse_collectives(hlo_text: str) -> List[dict]:
+    """Extract collective ops with per-chip link-byte estimates."""
+    out = []
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        shapes: List[tuple] = []
+        op = None
+        if m:
+            op = m.group(3)
+            shapes = [(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if mt:
+                op = mt.group(2)
+                shapes = _SHAPE_IN_TUPLE.findall(mt.group(1))
+        if not op or not shapes:
+            continue
+        n = _participants(line)
+        if n <= 1:
+            continue
+        bytes_out = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        link_bytes = bytes_out * _FACTORS[op](n)
+        out.append({"op": op, "bytes": bytes_out, "participants": n,
+                    "link_bytes": link_bytes})
+    return out
+
+
+def collective_summary(colls: List[dict]) -> dict:
+    summary: Dict[str, dict] = {}
+    for c in colls:
+        s = summary.setdefault(c["op"], {"count": 0, "bytes": 0,
+                                         "link_bytes": 0.0})
+        s["count"] += 1
+        s["bytes"] += c["bytes"]
+        s["link_bytes"] += c["link_bytes"]
+    return summary
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    link_bytes_per_chip: float
+    model_flops: float                  # 6ND train / 2ND inference (total)
+    params_bytes_per_chip: float = 0.0
+    temp_bytes_per_chip: float = 0.0
+    collectives: Optional[dict] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.link_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline the *useful* model flops achieve
+        at the step time implied by the dominant term (ideal overlap)."""
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_step <= 0:
+            return 0.0
+        achieved = self.model_flops / self.chips / t_step
+        return achieved / PEAK_FLOPS
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops_for(cfg, shape, n_active: int) -> float:
+    """6·N·D for training, 2·N·D for inference forward passes."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch          # one new token per sequence
+    return 2.0 * n_active * tokens

@@ -1,0 +1,167 @@
+"""BBCheckpointManager: async burst-buffer checkpointing for JAX training.
+
+This is the paper's checkpointing flow mapped onto a training loop:
+  1. save(step, state): serialize the sharded train state into KV segments
+     and put() them into the burst buffer — the only part on the critical
+     path, bounded by BB ingress (DRAM write + replication ACK), not PFS.
+  2. A background flush thread triggers the servers' two-phase I/O so the
+     checkpoint drains to the PFS while the next compute phase runs.
+  3. Recent epochs are retained in the buffer (paper §III-C) so restore()
+     is served from server DRAM/SSD without touching the PFS; older epochs
+     are evicted once durably flushed.
+  4. restore() falls back: BB get -> BB lookup-table range read -> PFS file.
+
+On a multi-host pod each host runs one client pinned (ISO placement) to the
+co-located server, and puts only its addressable shards; here one process
+plays all clients round-robin.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import serializer as ser
+from repro.core.system import BurstBufferSystem
+
+
+class BBCheckpointManager:
+    def __init__(self, system: BurstBufferSystem, *,
+                 quantize: bool = False,
+                 retention: int = 2,
+                 chunk_bytes: int = 4 << 20):
+        self.system = system
+        self.quantize = quantize
+        self.retention = retention
+        self.chunk_bytes = chunk_bytes
+        self.saved_steps: List[int] = []
+        self._flush_threads: List[threading.Thread] = []
+        self.metrics: Dict[int, dict] = {}
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state, *, blocking_flush: bool = False):
+        """Ingest the state into the burst buffer; flush to PFS off-path."""
+        t0 = time.perf_counter()
+        policy = ser.default_quant_policy if self.quantize else None
+        payloads, manifest = ser.serialize_tree(state, policy)
+        fname = f"ckpt_{step:08d}"
+        clients = self.system.clients
+        offset_of = {m["name"]: m["offset"] for m in manifest["leaves"]}
+
+        i = 0
+        for name, data in payloads.items():
+            base = offset_of[name]
+            # chunk large leaves so segments stay transport-friendly and
+            # spread over servers (ketama) / pipeline nicely (iso)
+            for off in range(0, max(len(data), 1), self.chunk_bytes):
+                piece = data[off:off + self.chunk_bytes]
+                c = clients[i % len(clients)]
+                ok = c.put(f"{fname}:{base + off}", piece,
+                           file=fname, offset=base + off)
+                if not ok:
+                    raise RuntimeError(f"burst buffer put failed: {name}")
+                i += 1
+        mb = ser.manifest_bytes(manifest)
+        ok = clients[0].put(f"{fname}.manifest:0", mb,
+                            file=f"{fname}.manifest", offset=0)
+        if not ok:
+            raise RuntimeError("manifest put failed")
+        ingest_s = time.perf_counter() - t0
+
+        self.saved_steps.append(step)
+        self.metrics[step] = {"ingest_s": ingest_s,
+                              "bytes": manifest["total_bytes"]}
+
+        epoch = step
+        if blocking_flush:
+            self.system.flush(epoch)
+            self._retire(step)
+        else:
+            t = threading.Thread(target=self._flush_async,
+                                 args=(epoch, step), daemon=True)
+            t.start()
+            self._flush_threads.append(t)
+        return ingest_s
+
+    def _flush_async(self, epoch: int, step: int):
+        t0 = time.perf_counter()
+        self.system.flush(epoch)
+        self.metrics[step]["flush_s"] = time.perf_counter() - t0
+        self._retire(step)
+
+    def _retire(self, step: int):
+        """Evict buffered epochs beyond the retention window (they are
+        durable on the PFS by now)."""
+        keep = sorted(self.saved_steps)[-self.retention:]
+        for s in list(self.saved_steps):
+            if s not in keep:
+                self.system.evict(f"ckpt_{s:08d}")
+                self.saved_steps.remove(s)
+
+    def wait_flushes(self, timeout: float = 60.0):
+        for t in self._flush_threads:
+            t.join(timeout)
+        self._flush_threads = []
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        if self.saved_steps:
+            return max(self.saved_steps)
+        # fall back to PFS directory listing
+        pfs = self.system.pfs_dir
+        steps = [int(f[5:13]) for f in os.listdir(pfs)
+                 if f.startswith("ckpt_") and not f.endswith(".manifest")]
+        return max(steps) if steps else None
+
+    def restore(self, target_state, step: Optional[int] = None):
+        """Rebuild a train state. target_state provides structure/shapes
+        (e.g. a freshly-initialized state)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint found")
+        fname = f"ckpt_{step:08d}"
+        client = self.system.clients[0]
+
+        mb = client.get(f"{fname}.manifest:0")
+        if mb is None:
+            mb = self._read_fallback(client, f"{fname}.manifest", 0, None)
+        manifest = ser.manifest_from_bytes(bytes(mb))
+
+        payloads: Dict[str, bytes] = {}
+        for meta in manifest["leaves"]:
+            data = self._read_segment(client, fname, meta["offset"],
+                                      meta["nbytes"])
+            payloads[meta["name"]] = data
+        return ser.deserialize_tree(target_state, payloads, manifest), step
+
+    def _read_segment(self, client, fname: str, offset: int, nbytes: int
+                      ) -> bytes:
+        # fast path: buffered KV pieces (chunked on save)
+        out = bytearray()
+        got_all = True
+        for off in range(offset, offset + max(nbytes, 1), self.chunk_bytes):
+            piece = client.get(f"{fname}:{off}")
+            if piece is None:
+                got_all = False
+                break
+            out += piece
+        if got_all and len(out) >= nbytes:
+            return bytes(out[:nbytes])
+        # lookup-table range read (post-shuffle, still no PFS)
+        data = client.read_file(fname, offset, nbytes)
+        if data is not None:
+            return data
+        # durable PFS fallback
+        return self._read_fallback(client, fname, offset, nbytes)
+
+    def _read_fallback(self, client, fname: str, offset: int,
+                       nbytes: Optional[int]) -> bytes:
+        path = os.path.join(self.system.pfs_dir, fname)
+        with open(path, "rb") as f:
+            f.seek(offset)
+            return f.read(nbytes if nbytes is not None else -1)

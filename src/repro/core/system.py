@@ -1,0 +1,125 @@
+"""BurstBufferSystem: wires manager + servers + clients over one transport.
+
+This is the deployable composition root. On a real pod each server would be
+one daemon per host and the transport a network fabric; here they are
+threads, but all interaction is message-passing so the topology, protocols
+and failure behaviour are identical.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.client import BBClient
+from repro.core.manager import BBManager
+from repro.core.server import BBServer
+from repro.core.transport import Transport
+
+
+@dataclass
+class BBConfig:
+    num_servers: int = 4
+    num_clients: int = 4
+    replication: int = 2
+    placement: str = "iso"              # iso | ketama | rendezvous
+    dram_capacity: int = 64 << 20
+    ssd_dir: Optional[str] = None       # None -> tmpdir
+    pfs_dir: Optional[str] = None       # None -> tmpdir
+    stabilize_interval: float = 0.25
+
+
+class BurstBufferSystem:
+    def __init__(self, cfg: BBConfig):
+        self.cfg = cfg
+        self.transport = Transport()
+        self._tmp = tempfile.mkdtemp(prefix="bbsys_")
+        self.ssd_dir = cfg.ssd_dir or os.path.join(self._tmp, "ssd")
+        self.pfs_dir = cfg.pfs_dir or os.path.join(self._tmp, "pfs")
+        os.makedirs(self.ssd_dir, exist_ok=True)
+        os.makedirs(self.pfs_dir, exist_ok=True)
+
+        self.manager = BBManager(self.transport, cfg.num_servers)
+        self.servers: Dict[str, BBServer] = {}
+        for i in range(cfg.num_servers):
+            name = f"server/{i}"
+            self.servers[name] = BBServer(
+                name, self.transport,
+                dram_capacity=cfg.dram_capacity,
+                ssd_dir=self.ssd_dir, pfs_dir=self.pfs_dir,
+                replication=cfg.replication,
+                stabilize_interval=cfg.stabilize_interval)
+        self.clients: List[BBClient] = [
+            BBClient(f"client/{i}", self.transport, client_index=i,
+                     placement=cfg.placement, replication=cfg.replication)
+            for i in range(cfg.num_clients)]
+
+    # ---------------------------------------------------------------- launch
+    def start(self):
+        self.manager.start()
+        for s in self.servers.values():
+            s.start()
+            self.transport.send(s.tname, "manager", "register", {})
+        assert self.manager.wait_ring(10.0), "ring init failed"
+        for c in self.clients:
+            c.connect()
+        return self
+
+    def stop(self):
+        for s in self.servers.values():
+            s.stop()
+        self.manager.stop()
+        shutil.rmtree(self._tmp, ignore_errors=True)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # --------------------------------------------------------------- actions
+    def flush(self, epoch: int, timeout: float = 30.0) -> bool:
+        self.manager.begin_flush(epoch)
+        return self.manager.wait_flush(epoch, timeout)
+
+    def evict(self, prefix: str):
+        self.manager.evict(prefix)
+
+    def kill_server(self, name: str):
+        """Failure injection: stop the thread and black-hole its traffic."""
+        srv = self.servers[name]
+        srv.stop()
+        self.transport.drop(name)
+
+    def join_server(self, pred: Optional[str] = None) -> str:
+        i = len(self.servers)
+        name = f"server/{i}"
+        srv = BBServer(name, self.transport,
+                       dram_capacity=self.cfg.dram_capacity,
+                       ssd_dir=self.ssd_dir, pfs_dir=self.pfs_dir,
+                       replication=self.cfg.replication,
+                       stabilize_interval=self.cfg.stabilize_interval)
+        self.servers[name] = srv
+        srv.start()
+        # the joining server knows the ring via the manager's ring_update;
+        # seed its view first so it can serve immediately (paper Fig 3)
+        srv.ring = self.manager.alive_ring() + [name]
+        srv.alive = {s: True for s in srv.ring}
+        self.transport.send(name, "manager", "join_request",
+                            {"server": name, "pred": pred})
+        return name
+
+    def server_stats(self) -> Dict[str, dict]:
+        out = {}
+        probe = self.clients[0] if self.clients else None
+        for name in self.servers:
+            if not self.transport.alive(name):
+                continue
+            r = self.transport.request(probe.ep, name, "stats_query", {},
+                                       timeout=1.0) if probe else None
+            if r is not None:
+                out[name] = r.payload
+        return out

@@ -1,0 +1,135 @@
+"""Message transport between burst-buffer entities.
+
+The paper uses CCI over Gemini/IB verbs; here entities (clients, servers,
+manager) are threads in one process and the transport is a registry of
+per-endpoint queues. All inter-entity interaction goes through ``send`` /
+``request`` — entities never touch each other's state directly, so the
+protocol logic is exactly what would run over a socket/RDMA transport on a
+real deployment (swap Transport for a gRPC/CCI-backed one).
+
+``drop()`` black-holes an endpoint (failure injection): messages to a dropped
+endpoint vanish, requests to it time out — matching the paper's §IV-B2
+timeout-based failure detection.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+
+@dataclass
+class Message:
+    kind: str
+    src: str
+    dst: str
+    payload: Any = None
+    msg_id: int = 0
+    reply_to: Optional[int] = None     # msg_id this replies to
+
+
+class Endpoint:
+    def __init__(self, name: str, transport: "Transport"):
+        self.name = name
+        self.transport = transport
+        self.inbox: "queue.Queue[Message]" = queue.Queue()
+        self._pending: Dict[int, "queue.Queue[Message]"] = {}
+        self._lock = threading.Lock()
+
+    def deliver(self, msg: Message):
+        if msg.reply_to is not None:
+            with self._lock:
+                waiter = self._pending.get(msg.reply_to)
+            if waiter is not None:
+                waiter.put(msg)
+                return
+        self.inbox.put(msg)
+
+    def recv(self, timeout: Optional[float] = None) -> Optional[Message]:
+        try:
+            return self.inbox.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+
+class Transport:
+    def __init__(self):
+        self._endpoints: Dict[str, Endpoint] = {}
+        self._dropped: set = set()
+        self._ids = itertools.count(1)
+        self._lock = threading.Lock()
+        self.bytes_sent: Dict[str, int] = {}
+
+    def register(self, name: str) -> Endpoint:
+        ep = Endpoint(name, self)
+        with self._lock:
+            self._endpoints[name] = ep
+            self._dropped.discard(name)
+        return ep
+
+    def drop(self, name: str):
+        """Fail an endpoint: all future traffic to it is black-holed."""
+        with self._lock:
+            self._dropped.add(name)
+
+    def restore(self, name: str):
+        with self._lock:
+            self._dropped.discard(name)
+
+    def alive(self, name: str) -> bool:
+        with self._lock:
+            return name in self._endpoints and name not in self._dropped
+
+    def endpoints(self):
+        with self._lock:
+            return sorted(self._endpoints)
+
+    def _size_of(self, payload) -> int:
+        if isinstance(payload, (bytes, bytearray, memoryview)):
+            return len(payload)
+        if isinstance(payload, dict):
+            return sum(self._size_of(v) for v in payload.values())
+        if isinstance(payload, (list, tuple)):
+            return sum(self._size_of(v) for v in payload)
+        return 64   # control-message overhead estimate
+
+    def send(self, src: str, dst: str, kind: str, payload: Any = None,
+             reply_to: Optional[int] = None) -> int:
+        msg_id = next(self._ids)
+        with self._lock:
+            ep = self._endpoints.get(dst)
+            dead = dst in self._dropped or src in self._dropped
+            self.bytes_sent[src] = self.bytes_sent.get(src, 0) \
+                + self._size_of(payload)
+        if ep is None or dead:
+            return msg_id                          # black hole
+        ep.deliver(Message(kind, src, dst, payload, msg_id, reply_to))
+        return msg_id
+
+    def request(self, src_ep: Endpoint, dst: str, kind: str,
+                payload: Any = None, timeout: float = 2.0) -> Optional[Message]:
+        """Blocking RPC: send and wait for the reply (None on timeout)."""
+        waiter: "queue.Queue[Message]" = queue.Queue()
+        msg_id = next(self._ids)
+        with src_ep._lock:
+            src_ep._pending[msg_id] = waiter
+        with self._lock:
+            ep = self._endpoints.get(dst)
+            dead = dst in self._dropped or src_ep.name in self._dropped
+            self.bytes_sent[src_ep.name] = \
+                self.bytes_sent.get(src_ep.name, 0) + self._size_of(payload)
+        if ep is not None and not dead:
+            ep.deliver(Message(kind, src_ep.name, dst, payload, msg_id))
+        try:
+            return waiter.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        finally:
+            with src_ep._lock:
+                src_ep._pending.pop(msg_id, None)
+
+    def reply(self, src: str, msg: Message, kind: str, payload: Any = None):
+        self.send(src, msg.src, kind, payload, reply_to=msg.msg_id)

@@ -1,0 +1,156 @@
+"""mLSTM (xLSTM matrix-memory cell) chunkwise-parallel Pallas TPU kernel.
+
+The sequential cell is
+    m_t = max(lf_t + m_{t-1}, li_t)
+    C_t = exp(lf_t + m_{t-1} - m_t) C_{t-1} + exp(li_t - m_t) k_t v_t^T
+    n_t = exp(lf_t + m_{t-1} - m_t) n_{t-1} + exp(li_t - m_t) k_t
+    h_t = C_t q_t / max(|n_t . q_t|, exp(-m_t))
+
+TPU adaptation (chunkwise-parallel form): within a chunk of size c the
+contribution of in-chunk tokens is an attention-like masked matmul
+(MXU-friendly (c×c) x (c×d)), while the cross-chunk contribution comes from
+the carried (d×d) state; both are stabilized in a shared log-space max. The
+(d×d) state, (d,) normalizer and scalar stabilizer live in VMEM scratch and
+carry across the sequential chunk grid dimension — the state never touches
+HBM. This replaces the GPU formulation's warp-level recurrence with a
+systolic-matmul-dominant form.
+
+Grid: (batch, heads, s_chunks) — trailing dim sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, lf_ref, li_ref,
+                  h_ref, c_out, n_out, m_out,
+                  c_scr, n_scr, m_scr, *, chunk, scale):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # (c, d)
+    k = k_ref[0, 0].astype(jnp.float32) * scale
+    v = v_ref[0, 0].astype(jnp.float32)
+    lf = lf_ref[0, 0, 0].astype(jnp.float32)              # (c,)
+    li = li_ref[0, 0, 0].astype(jnp.float32)
+
+    # cumulative log-forget within the chunk: F[t] = sum_{u<=t} lf[u]
+    F = jnp.cumsum(lf)                                    # (c,)
+    m_prev = m_scr[0, 0]
+
+    # log coefficient of the *carried* state at step t: F[t] + m_prev
+    # log coefficient of in-chunk source u<=t: (F[t] - F[u]) + li[u]
+    src = li - F                                          # (c,)
+    # running stabilizer per step: m_t = max(m_prev + F[t], max_{u<=t}(F[t]+src[u]))
+    run_src = jax.lax.cummax(src)
+    m_t = F + jnp.maximum(m_prev, run_src)                # (c,)
+
+    # in-chunk attention-like term
+    d_mat = F[:, None] + src[None, :] - m_t[:, None]      # (c, c) log weights
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    d_mat = jnp.where(u_idx <= t_idx, d_mat, NEG)
+    w = jnp.exp(d_mat)                                    # (c, c)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (c, c)
+    ws = w * s
+    intra_num = jax.lax.dot_general(ws, v, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    # n_t . q_t = carry_coeff * (n_prev . q_t) + sum_u w[t,u] * (k_u . q_t)
+    intra_den = jnp.sum(ws, axis=1)                       # (c,)
+
+    carry_coeff = jnp.exp(F + m_prev - m_t)               # (c,)
+    inter_num = jax.lax.dot_general(q, c_scr[0], (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    inter_den = jax.lax.dot_general(q, n_scr[0][:, None],
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)[:, 0]
+
+    num = inter_num * carry_coeff[:, None] + intra_num    # (c, d)
+    den = inter_den * carry_coeff + intra_den             # (c,)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    h_ref[0, 0] = (num / den[:, None]).astype(h_ref.dtype)
+
+    # ---- state update to end of chunk ----
+    m_last = m_t[-1]
+    # carried state coefficient
+    f_all = F[-1]
+    state_coeff = jnp.exp(f_all + m_prev - m_last)
+    # each in-chunk source u contributes exp(F[c-1]-F[u]+li[u]-m_last) k_u v_u^T
+    src_coeff = jnp.exp(f_all + src - m_last)             # (c,)
+    kc = k * src_coeff[:, None]
+    c_new = c_scr[0] * state_coeff + jax.lax.dot_general(
+        kc, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    n_new = n_scr[0] * state_coeff + jnp.sum(kc, axis=0)
+    c_scr[0] = c_new
+    n_scr[0] = n_new
+    m_scr[0, 0] = m_last
+
+    @pl.when(si == ns - 1)
+    def _final():
+        c_out[0, 0] = c_new.astype(c_out.dtype)
+        n_out[0, 0] = n_new.astype(n_out.dtype)
+        m_out[0, 0, 0] = m_last
+
+
+def mlstm_pallas(q, k, v, log_f, log_i, *, chunk=128, interpret=False):
+    """q/k/v: (B, S, H, D); log_f/log_i: (B, S, H).
+
+    Returns (h (B,S,H,D), (C (B,H,D,D), n (B,H,D), m (B,H))).
+    Fresh state (zero init), matching ref.mlstm with no initial state.
+    """
+    b, s, h, d = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    qt = q.transpose(0, 2, 1, 3)                          # (B,H,S,D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    lft = log_f.transpose(0, 2, 1)[:, :, None, :]         # (B,H,1,S)
+    lit = log_i.transpose(0, 2, 1)[:, :, None, :]
+
+    grid = (b, h, s // chunk)
+    kernel = functools.partial(_mlstm_kernel, chunk=chunk, scale=d ** -0.5)
+
+    hseq, c_f, n_f, m_f = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, si: (b_, h_, si, 0)),
+            pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, si: (b_, h_, si, 0)),
+            pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, si: (b_, h_, si, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b_, h_, si: (b_, h_, 0, si)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b_, h_, si: (b_, h_, 0, si)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, si: (b_, h_, si, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda b_, h_, si: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda b_, h_, si: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b_, h_, si: (b_, h_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, d, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, d, d), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, lft, lit)
+    return hseq.transpose(0, 2, 1, 3), (c_f, n_f, m_f[..., 0])

@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for every Pallas kernel. Small, obviously-correct, f32."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    q_offset=0):
+    """Naive full-matrix attention oracle.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KV, D). GQA via kv-head repetition.
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill=0).
+    """
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    if kvh != h:
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rg_lru(a, gx, h0=None):
+    """Linear recurrence h_t = a_t * h_{t-1} + gx_t.
+
+    a, gx: (B, S, D) (already gated/scaled inputs); h0: (B, D) or None.
+    Returns (h_seq (B,S,D), h_last (B,D)). f32 scan oracle.
+    """
+    af = a.astype(jnp.float32)
+    gf = gx.astype(jnp.float32)
+    b, s, d = a.shape
+    init = jnp.zeros((b, d), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        at, gt = t
+        h = at * h + gt
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, init, (af.swapaxes(0, 1), gf.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(a.dtype), h_last.astype(a.dtype)
+
+
+def mlstm(q, k, v, log_f, log_i, c0=None, n0=None, m0=None):
+    """mLSTM (xLSTM matrix memory) sequential oracle, log-space stabilized.
+
+    q/k/v: (B, S, H, D); log_f/log_i: (B, S, H) log forget/input gates.
+    C: (B,H,D,D) matrix state; n: (B,H,D) normalizer; m: (B,H) stabilizer.
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))   [xLSTM eq. 19-27]
+    Returns (h (B,S,H,D), (C,n,m) final).
+    """
+    b, s, h, d = q.shape
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    lf = log_f.astype(jnp.float32)
+    li = log_i.astype(jnp.float32)
+    scale = d ** -0.5
+    C = jnp.zeros((b, h, d, d), jnp.float32) if c0 is None else c0.astype(jnp.float32)
+    n = jnp.zeros((b, h, d), jnp.float32) if n0 is None else n0.astype(jnp.float32)
+    m = jnp.full((b, h), -1e30, jnp.float32) if m0 is None else m0.astype(jnp.float32)
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt, lft, lit = t                     # (B,H,D)... (B,H)
+        m_new = jnp.maximum(lft + m, lit)
+        fg = jnp.exp(lft + m - m_new)[..., None]     # (B,H,1)
+        ig = jnp.exp(lit - m_new)[..., None]
+        kt = kt * scale
+        C = fg[..., None] * C + ig[..., None] * (kt[..., :, None] * vt[..., None, :])
+        n = fg * n + ig * kt
+        num = jnp.einsum("bhdk,bhd->bhk", C, qt)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    xs = (qf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), lf.transpose(1, 0, 2), li.transpose(1, 0, 2))
+    (C, n, m), hs = jax.lax.scan(step, (C, n, m), xs)
+    return hs.transpose(1, 0, 2, 3).astype(q.dtype), (C.astype(q.dtype),
+                                                      n.astype(q.dtype),
+                                                      m.astype(jnp.float32))
+
+
+def quantize_blockwise(x, block: int = 2048):
+    """Blockwise symmetric int8 quantization. x: flat (N,) with N % block == 0.
+
+    Returns (q int8 (N,), scales f32 (N/block,)).
+    """
+    n = x.shape[0]
+    xb = x.astype(jnp.float32).reshape(n // block, block)
+    scale = jnp.max(jnp.abs(xb), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(n), scale
+
+
+def dequantize_blockwise(q, scale, block: int = 2048):
+    n = q.shape[0]
+    xb = q.astype(jnp.float32).reshape(n // block, block) * scale[:, None]
+    return xb.reshape(n)

@@ -1,0 +1,80 @@
+"""RG-LRU linear recurrence as a Pallas TPU kernel (RecurrentGemma/Griffin).
+
+h_t = a_t * h_{t-1} + gx_t, elementwise over the channel dim. The gates
+(a_t, gx_t) are computed outside (einsum-friendly); the kernel fuses the
+sequential scan so the carry never leaves VMEM.
+
+Grid: (batch, d_blocks, s_blocks) — the trailing seq dimension runs
+sequentially on TPU, so the (1, block_d) carry persists in VMEM scratch
+across seq blocks. Inside a block the time loop is a fori_loop over rows
+already resident in VMEM: pure VPU work, one HBM read per input element and
+one write per output element (memory-bound optimal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rg_lru_kernel(a_ref, gx_ref, h0_ref, h_ref, hlast_ref, carry, *,
+                   block_s, seq_len):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        carry[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)        # (block_s, block_d)
+    gx = gx_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + gx[t]
+        h_ref[0, t] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, carry[0])
+    carry[0] = h
+
+    @pl.when(si == ns - 1)
+    def _final():
+        hlast_ref[0] = h.astype(hlast_ref.dtype)
+
+
+def rg_lru_pallas(a, gx, h0=None, *, block_s=256, block_d=128,
+                  interpret=False):
+    """a, gx: (B, S, D); h0: (B, D) or None -> (h (B,S,D), h_last (B,D))."""
+    b, s, d = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d), a.dtype)
+    block_s = min(block_s, s)
+    block_d = min(block_d, d)
+    assert s % block_s == 0 and d % block_d == 0, (s, d, block_s, block_d)
+
+    grid = (b, d // block_d, s // block_s)
+    kernel = functools.partial(_rg_lru_kernel, block_s=block_s, seq_len=s)
+
+    h, hlast = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda b_, di, si: (b_, si, di)),
+            pl.BlockSpec((1, block_s, block_d), lambda b_, di, si: (b_, si, di)),
+            pl.BlockSpec((1, block_d), lambda b_, di, si: (b_, di)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda b_, di, si: (b_, si, di)),
+            pl.BlockSpec((1, block_d), lambda b_, di, si: (b_, di)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, d), a.dtype),
+            jax.ShapeDtypeStruct((b, d), a.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(a, gx, h0)
+    return h, hlast

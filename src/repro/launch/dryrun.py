@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import — jax locks the device count
+at first init, and the production meshes need 512 host devices.
+
+For each runnable cell (see configs/cells.py):
+  train_4k     -> jit(train_step)   with sharded TrainState + batch
+  prefill_32k  -> jit(prefill)      params + cache + (B, S) tokens
+  decode_32k   -> jit(decode_step)  params + seq-sharded KV cache + (B, 1)
+  long_500k    -> decode with a 524288-token cache (sub-quadratic archs)
+
+All inputs are ShapeDtypeStructs (no allocation). The compiled artifact's
+memory_analysis / cost_analysis / collective schedule are dumped to JSON for
+the roofline analysis (analysis/roofline.py) and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def input_specs(cfg, shape):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {}
+    if shape.kind == "train":
+        specs["inputs"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        n_tok = s if shape.kind == "prefill" else 1
+        specs["tokens"] = jax.ShapeDtypeStruct((b, n_tok), jnp.int32)
+    if cfg.encoder_seq and shape.kind in ("train", "prefill"):
+        specs["enc_input"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.encoder_dim), jnp.bfloat16)
+    return specs
+
+
+def accum_steps_for(cfg, shape, dp_shards: int) -> int:
+    from repro.configs.cells import TRAIN_ACCUM
+    want = TRAIN_ACCUM.get(cfg.name, 4)
+    b = shape.global_batch
+    accum = min(want, max(b // dp_shards, 1))
+    while b % accum or (b // accum) % dp_shards:
+        accum -= 1
+    return max(accum, 1)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             donate: bool = True, hlo_path: str = "") -> dict:
+    from repro.analysis import roofline as rl
+    from repro.configs.base import SHAPES_BY_NAME, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.sharding import (RuleSet, batch_axes, cache_axes,
+                                       use_rules)
+    from repro.models.registry import build_model, count_params
+    from repro.runtime.train_step import (init_train_state, make_optimizer,
+                                          make_train_step,
+                                          state_logical_axes)
+
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    rules = RuleSet(mesh)
+    model = build_model(cfg)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    t0 = time.time()
+
+    key = jax.random.PRNGKey(0)
+    params_struct = jax.eval_shape(model.init, key)
+    dp = chips // mesh.shape["model"]
+
+    with mesh, use_rules(rules):
+        if shape.kind == "train":
+            optimizer = make_optimizer(cfg)
+            opt_struct = jax.eval_shape(optimizer.init, params_struct)
+            from repro.runtime.train_step import TrainState
+            state_struct = TrainState(params_struct, opt_struct)
+            axes = state_logical_axes(cfg, model, optimizer)
+            state_shardings = rules.tree_shardings(axes, state_struct)
+            batch = input_specs(cfg, shape)
+            b_shardings = rules.tree_shardings(batch_axes(batch), batch)
+            accum = accum_steps_for(cfg, shape, dp)
+            step_fn = make_train_step(cfg, model, optimizer,
+                                      accum_steps=accum)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(state_shardings, b_shardings),
+                             out_shardings=(state_shardings, None),
+                             donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(state_struct, batch)
+        elif shape.kind == "prefill":
+            cache_struct = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            p_shardings = rules.tree_shardings(
+                jax.tree.map(lambda d: d, model.param_axes(),
+                             is_leaf=lambda x: isinstance(x, tuple)),
+                params_struct)
+            c_shardings = rules.tree_shardings(
+                cache_axes(cfg, cache_struct), cache_struct)
+            specs = input_specs(cfg, shape)
+            tok_sh = rules.tree_shardings(batch_axes(specs), specs)
+
+            def prefill_fn(params, cache, specs):
+                return model.prefill(params, cache, specs["tokens"],
+                                     specs.get("enc_input"))
+
+            jitted = jax.jit(prefill_fn,
+                             in_shardings=(p_shardings, c_shardings, tok_sh),
+                             out_shardings=(None, c_shardings),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_struct, cache_struct, specs)
+        else:   # decode
+            cache_struct = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            p_shardings = rules.tree_shardings(model.param_axes(),
+                                               params_struct)
+            c_shardings = rules.tree_shardings(
+                cache_axes(cfg, cache_struct), cache_struct)
+            specs = input_specs(cfg, shape)
+            tok_sh = rules.tree_shardings(batch_axes(specs), specs)
+
+            def decode_fn(params, cache, specs, pos):
+                return model.decode_step(params, cache, specs["tokens"], pos)
+
+            jitted = jax.jit(decode_fn,
+                             in_shardings=(p_shardings, c_shardings, tok_sh,
+                                           None),
+                             out_shardings=(None, c_shardings),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_struct, cache_struct, specs,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    from repro.analysis.hlo_stats import analyze
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    if hlo_path:
+        import gzip
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+    stats = analyze(hlo)          # loop-aware per-chip flops/bytes/collectives
+
+    n_active = count_params(cfg, active_only=True)
+    result = rl.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_chip=stats.flops,
+        hbm_bytes_per_chip=stats.hbm_fused,
+        link_bytes_per_chip=stats.link_bytes,
+        model_flops=rl.model_flops_for(cfg, shape, n_active),
+        params_bytes_per_chip=float(getattr(mem, "argument_size_in_bytes", 0)),
+        temp_bytes_per_chip=float(getattr(mem, "temp_size_in_bytes", 0)),
+        collectives=stats.coll_detail,
+    ).to_dict()
+    result.update(
+        status="ok", lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory_analysis={
+            k: int(getattr(mem, k, 0)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes")} if mem else None,
+        hbm_bytes_raw_per_chip=stats.hbm_bytes,
+        xla_cost_analysis={"flops_body_once": float(cost.get("flops", 0.0)),
+                           "bytes_accessed_body_once":
+                               float(cost.get("bytes accessed", 0.0))},
+        n_params=count_params(cfg), n_active=n_active,
+        hlo_bytes=len(hlo),
+    )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true",
+                    help="gzip the compiled HLO next to each JSON")
+    args = ap.parse_args()
+
+    from repro.configs.cells import all_cells
+
+    cells = [c for c in all_cells()
+             if (args.all or ((not args.arch or c.arch == args.arch)
+                              and (not args.shape or c.shape == args.shape)))]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for cell in cells:
+        for multi_pod in meshes:
+            mesh_name = "multipod" if multi_pod else "pod"
+            path = os.path.join(args.out,
+                                f"{cell.key}__{mesh_name}.json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip-cached] {cell.key} {mesh_name}")
+                continue
+            if cell.skip:
+                json.dump({"arch": cell.arch, "shape": cell.shape,
+                           "mesh": mesh_name, "status": "skipped",
+                           "reason": cell.skip}, open(path, "w"), indent=1)
+                print(f"[skipped] {cell.key}: {cell.skip}")
+                continue
+            print(f"[run] {cell.key} {mesh_name} ...", flush=True)
+            try:
+                hlo_path = path.replace(".json", ".hlo.gz") \
+                    if args.save_hlo else ""
+                res = run_cell(cell.arch, cell.shape, multi_pod,
+                               hlo_path=hlo_path)
+                json.dump(res, open(path, "w"), indent=1)
+                print(f"  ok: compile={res['compile_s']}s "
+                      f"flops/chip={res['flops_per_chip']:.3g} "
+                      f"hbm/chip={res['hbm_bytes_per_chip']:.3g} "
+                      f"link/chip={res['link_bytes_per_chip']:.3g} "
+                      f"bottleneck={res['bottleneck']}", flush=True)
+            except Exception as e:
+                failures += 1
+                json.dump({"arch": cell.arch, "shape": cell.shape,
+                           "mesh": mesh_name, "status": "error",
+                           "error": repr(e),
+                           "traceback": traceback.format_exc()},
+                          open(path, "w"), indent=1)
+                print(f"  ERROR: {e!r}", flush=True)
+    print(f"done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips, both axes on ICI.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis crosses
+DCN, so the sharding rules place only data parallelism (gradient all-reduce,
+batch splitting) on it; ``model`` carries TP/EP/SP collectives on ICI.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh for tests (requires xla_force_host_platform_device_count)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

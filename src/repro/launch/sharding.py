@@ -1,0 +1,182 @@
+"""Logical-axis -> mesh sharding rules (DP / FSDP / TP / EP / SP).
+
+Every parameter descriptor carries logical axis names; this module resolves
+them to PartitionSpecs against the active mesh with (a) divisibility checks
+(a dim only shards if evenly divisible — jit input shardings require it) and
+(b) conflict avoidance (one mesh axis at most once per tensor, resolved in
+dim order).
+
+Baseline rule table (the §Perf iterations adjust per-arch overrides):
+  batch        -> (pod, data)   data parallelism (pod = DCN-only axis)
+  seq          -> model         sequence-sharded KV caches (decode) / CP
+  embed        -> data          FSDP: weights gathered at use
+  ffn/vocab    -> model         tensor parallelism (Megatron col/row)
+  heads        -> model         head TP when head count divides the axis
+  experts      -> (data, model) 256-expert one-per-chip EP (deepseek) or
+                  model         16-way EP (llama4)
+Activation constraints are applied inside model code via ``constrain`` —
+a no-op unless a rule set is active (models stay mesh-agnostic).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# candidates: logical axis -> tuple of options; each option is a tuple of
+# mesh axes used jointly for that dim (tried in order until one fits)
+DEFAULT_RULES: Dict[Optional[str], Tuple[Tuple[str, ...], ...]] = {
+    "batch": (("pod", "data"), ("data",), ("pod",)),
+    "seq": (("model",),),
+    "embed": (("data",),),
+    "embed_out": (("model",),),
+    "ffn": (("model",),),
+    "ffn_out": (("data",),),
+    "vocab": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (),
+    "head_dim": (),
+    "head_dim2": (),
+    "q_lora": (),
+    "kv_lora": (),
+    "rope_dim": (),
+    "experts": (("data", "model"), ("data",), ("model",)),
+    "experts_flat": (("model",),),
+    "layers": (),
+    "enc_dim": (),
+    None: (),
+}
+
+
+class RuleSet:
+    def __init__(self, mesh: Mesh, overrides: Optional[dict] = None):
+        self.mesh = mesh
+        self.sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.rules = dict(DEFAULT_RULES)
+        if overrides:
+            self.rules.update(overrides)
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """Resolve logical axes to a PartitionSpec with divisibility +
+        conflict checks. shape=None skips divisibility (constraints only)."""
+        used: set = set()
+        out = []
+        for i, name in enumerate(logical_axes):
+            choice = None
+            for option in self.rules.get(name, ()):
+                axes = tuple(a for a in option if a in self.sizes)
+                if not axes or any(a in used for a in axes):
+                    continue
+                k = math.prod(self.sizes[a] for a in axes)
+                if shape is not None and shape[i] % k != 0:
+                    continue
+                choice = axes
+                break
+            if choice:
+                used.update(choice)
+                out.append(choice if len(choice) > 1 else choice[0])
+            else:
+                out.append(None)
+        return P(*out)
+
+    def sharding(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+    def tree_shardings(self, axes_tree, shape_tree):
+        """axes_tree: logical-axis tuples; shape_tree: matching
+        ShapeDtypeStructs (or arrays). Returns a NamedSharding tree."""
+        def is_axes_leaf(x):
+            return isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x)
+        flat_axes, treedef = jax.tree.flatten(axes_tree, is_leaf=is_axes_leaf)
+        flat_shapes = treedef.flatten_up_to(shape_tree)
+        shardings = [self.sharding(a, s.shape)
+                     for a, s in zip(flat_axes, flat_shapes)]
+        return jax.tree.unflatten(treedef, shardings)
+
+
+# ---------------------------------------------------------------------------
+# activation constraints from inside model code (contextvar-scoped)
+
+_ACTIVE: contextvars.ContextVar[Optional[RuleSet]] = \
+    contextvars.ContextVar("repro_ruleset", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[RuleSet]):
+    token = _ACTIVE.set(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_rules() -> Optional[RuleSet]:
+    return _ACTIVE.get()
+
+
+def constrain(x, logical_axes: Sequence[Optional[str]]):
+    """with_sharding_constraint against the active rule set (no-op outside
+    a distributed context). Divisibility-checked against x.shape."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    spec = rules.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# cache logical axes (mirrors transformer.init_cache structure)
+
+
+def cache_axes(cfg, cache) -> Any:
+    """Assign logical axes to decode-cache leaves by their role. The cache
+    tree is {seg*: {pos*: kind-cache}}; leaves are identified by key path."""
+    def assign(path, leaf):
+        names = [_pstr(p) for p in path]
+        rank = np.ndim(leaf)
+        last = names[-1] if names else ""
+        if last in ("k", "v"):              # (L,B,S,KV,HD) attn ring/cross
+            return ("layers", "batch", "seq", "kv_heads", "head_dim")[:rank]
+        if last == "c_kv":
+            return ("layers", "batch", "seq", "kv_lora")[:rank]
+        if last == "k_rope":
+            return ("layers", "batch", "seq", "rope_dim")[:rank]
+        if last == "C":                     # (L,B,H,dk,dv) mlstm state
+            return ("layers", "batch", "heads", "head_dim", "head_dim2")[:rank]
+        if last == "n":
+            return ("layers", "batch", "heads", "head_dim")[:rank]
+        if last == "m":
+            return ("layers", "batch", "heads")[:rank]
+        if last == "conv":                  # (L,B,W-1,du)
+            return ("layers", "batch", None, "ffn")[:rank]
+        if last == "h":                     # (L,B,width) rglru state
+            return ("layers", "batch", "ffn")[:rank]
+        if "state" in names:                # slstm tuple (L,B,H,dh)
+            return ("layers", "batch", "heads", "head_dim")[:rank]
+        return ("layers", "batch") + (None,) * max(rank - 2, 0)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [tuple(assign(p, l)) for p, l in flat])
+
+
+def _pstr(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def batch_axes(batch) -> Any:
+    """Input batch dict: tokens/labels (B,S); enc_input (B,S,E)."""
+    return jax.tree.map(
+        lambda x: ("batch",) + (None,) * (np.ndim(x) - 1), batch)

@@ -1,0 +1,195 @@
+"""Attention: GQA/MQA/MHA self-attention (global / sliding-window), cross-attention.
+
+Training/prefill uses the fused flash-attention op from ``repro.kernels.ops``
+(Pallas on TPU, chunked online-softmax jnp on CPU — same math, flash-like
+memory profile). Decode attends one query token against a fixed-size KV cache
+(ring buffer), written so the cache can be *sequence-sharded* across the
+``model`` mesh axis: softmax max/sum reductions and the PV contraction over
+the sharded seq dim lower to small all-reduces under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, apply_rope
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# parameter descriptors
+
+
+def attn_descs(cfg, *, cross: bool = False):
+    d, h, kv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    descs = {
+        "wq": P((d, h, hd), ("embed", "heads", "head_dim"), "fanin"),
+        "wk": P((d, kv, hd), ("embed", "kv_heads", "head_dim"), "fanin"),
+        "wv": P((d, kv, hd), ("embed", "kv_heads", "head_dim"), "fanin"),
+        "wo": P((h, hd, d), ("heads", "head_dim", "embed"), "fanin"),
+    }
+    return descs
+
+
+# ---------------------------------------------------------------------------
+# projections
+
+
+def _project_qkv(cfg, p, x, ctx=None):
+    """q from x; k/v from ctx (cross) or x (self)."""
+    src = x if ctx is None else ctx
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
+    return q, k, v
+
+
+def _out_proj(cfg, p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+# ---------------------------------------------------------------------------
+# train / prefill
+
+
+def _cp_eligible(cfg, seq: int) -> bool:
+    """Context parallelism for archs whose head count cannot shard over the
+    model axis (e.g. gemma3's 8 heads on a 16-wide axis): shard Q over the
+    sequence instead, so attention compute splits n-ways instead of running
+    replicated on every model rank. KV stays replicated (it already is —
+    kv_heads are unsharded), so each rank scans the full KV against its
+    query block; causal/window masks use absolute positions and need no
+    ring exchange."""
+    from repro.launch.sharding import active_rules
+    rules = active_rules()
+    if rules is None:
+        return False
+    m = rules.sizes.get("model", 1)
+    return cfg.num_heads % m != 0 and seq % m == 0 and seq > 1
+
+
+def self_attention(cfg, p, x, positions, *, window: int = 0,
+                   causal: bool = True, rope_theta: Optional[float] = None):
+    """x: (B, S, d); positions: (B, S) int32. window=0 -> global."""
+    from repro.launch.sharding import constrain
+    q, k, v = _project_qkv(cfg, p, x)
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    if _cp_eligible(cfg, q.shape[1]):
+        q = constrain(q, ("batch", "seq", None, None))
+    o = kops.flash_attention(
+        q, k, v,
+        causal=causal,
+        window=window,
+        softcap=cfg.logit_softcap,
+    )
+    return _out_proj(cfg, p, o)
+
+
+def cross_attention(cfg, p, x, ctx):
+    """x: (B, S, d); ctx: (B, S_ctx, d) encoder/vision states (no mask)."""
+    from repro.launch.sharding import constrain
+    q, k, v = _project_qkv(cfg, p, x, ctx=ctx)
+    if _cp_eligible(cfg, q.shape[1]):
+        q = constrain(q, ("batch", "seq", None, None))
+    o = kops.flash_attention(q, k, v, causal=False, window=0, softcap=0.0)
+    return _out_proj(cfg, p, o)
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a KV cache)
+
+
+def init_self_cache(cfg, batch: int, max_seq: int, *, window: int = 0):
+    """Ring-buffer KV cache. Local-attention layers only allocate the window."""
+    size = min(window, max_seq) if window else max_seq
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jnp.zeros((batch, size, kv, hd), dt),
+        "v": jnp.zeros((batch, size, kv, hd), dt),
+    }
+
+
+def init_cross_cache(cfg, batch: int, ctx_len: int):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jnp.zeros((batch, ctx_len, kv, hd), dt),
+        "v": jnp.zeros((batch, ctx_len, kv, hd), dt),
+    }
+
+
+def decode_self_attention(cfg, p, x, cache, pos, *, window: int = 0,
+                          rope_theta: Optional[float] = None):
+    """x: (B, 1, d); pos: scalar int32 = number of tokens already cached.
+
+    The new token's KV is written at ``pos % cache_size`` (ring semantics for
+    windowed layers); attention runs over the whole buffer with validity and
+    window masking by absolute position.
+    """
+    b, _, _ = x.shape
+    q, k_new, v_new = _project_qkv(cfg, p, x)
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    pos_b = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, pos_b, theta)
+        k_new = apply_rope(k_new, pos_b, theta)
+
+    size = cache["k"].shape[1]
+    slot = jnp.mod(pos, size)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    new_cache = {"k": k, "v": v}
+
+    # absolute position held by each ring slot after the write
+    idx = jnp.arange(size, dtype=jnp.int32)
+    n_written = pos + 1
+    wraps = (n_written + size - 1 - idx) // size          # cycles completed per slot
+    abs_pos = idx + (wraps - 1) * size                    # latest abs pos in slot
+    valid = (abs_pos >= 0) & (abs_pos < n_written)
+    if window:
+        valid &= abs_pos >= (pos - window + 1)
+
+    o = _cache_attend(cfg, q, k, v, valid)
+    return _out_proj(cfg, o=o, p=p), new_cache
+
+
+def decode_cross_attention(cfg, p, x, cache):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    valid = jnp.ones((cache["k"].shape[1],), bool)
+    o = _cache_attend(cfg, q, cache["k"], cache["v"], valid)
+    return _out_proj(cfg, p, o)
+
+
+def prefill_cross_cache(cfg, p, ctx):
+    k = jnp.einsum("bsd,dhk->bshk", ctx, p["wk"].astype(ctx.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", ctx, p["wv"].astype(ctx.dtype))
+    return {"k": k, "v": v}
+
+
+def _cache_attend(cfg, q, k, v, valid):
+    """q: (B,1,H,D); k/v: (B,S,KV,D); valid: (S,) bool.
+
+    f32 softmax; seq dim of k/v may be sharded — reductions over it become
+    all-reduces under GSPMD.
+    """
+    b, _, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k.astype(jnp.float32))
+    if cfg.logit_softcap:
+        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(b, 1, h, hd).astype(q.dtype)

@@ -1,0 +1,180 @@
+"""Shared building blocks: param descriptors, norms, RoPE, embeddings.
+
+Parameters are plain nested dicts of jnp arrays. Every module declares its
+parameters as a tree of ``P`` descriptors; ``init_tree`` materializes arrays
+and ``axes_tree`` extracts the logical-axis annotations consumed by
+launch/sharding.py. No flax/haiku — descriptor trees keep init, sharding and
+checkpoint layout in one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Parameter descriptor: shape + logical axes + init scheme."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"              # normal | zeros | ones | fanin
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _materialize(desc: P, key, dtype) -> jax.Array:
+    if desc.init == "zeros":
+        return jnp.zeros(desc.shape, dtype)
+    if desc.init == "ones":
+        return jnp.ones(desc.shape, dtype)
+    if desc.init == "fanin":
+        fan_in = desc.shape[-2] if len(desc.shape) >= 2 else desc.shape[-1]
+        std = desc.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, desc.shape, jnp.float32) * std).astype(dtype)
+    if desc.init == "normal":
+        return (jax.random.normal(key, desc.shape, jnp.float32) * desc.scale).astype(dtype)
+    raise ValueError(desc.init)
+
+
+def is_desc(x) -> bool:
+    return isinstance(x, P)
+
+
+def init_tree(tree, key, dtype) -> Any:
+    """Materialize a descriptor tree into a param tree (single key fold-in walk)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_desc)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    arrs = [_materialize(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def axes_tree(tree) -> Any:
+    """Same structure as the param tree, leaves = logical-axis tuples."""
+    return jax.tree.map(lambda d: d.axes, tree, is_leaf=is_desc)
+
+
+def stack_descs(tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacked (scan) dimension of size n to every descriptor."""
+    def f(d: P) -> P:
+        return P((n,) + d.shape, (axis_name,) + d.axes, d.init, d.scale)
+    return jax.tree.map(f, tree, is_leaf=is_desc)
+
+
+def count_tree(tree) -> int:
+    total = 0
+    for d in jax.tree.leaves(tree, is_leaf=is_desc):
+        total += int(np.prod(d.shape))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# numerics
+
+
+def norm_descs(cfg, dim: Optional[int] = None):
+    dim = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": P((dim,), ("embed",), "ones"),
+                "bias": P((dim,), ("embed",), "zeros")}
+    return {"scale": P((dim,), ("embed",), "ones")}
+
+
+def apply_norm(cfg, p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        x = x - jnp.mean(x, axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+        return (x * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(dt)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def activation(cfg, x):
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                     # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)               # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]               # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sincos_positions(seq: int, dim: int) -> np.ndarray:
+    """Fixed sinusoidal table (whisper encoder)."""
+    pos = np.arange(seq)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10_000.0, 2 * i / dim)
+    table = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return table.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+
+
+def padded_vocab(cfg) -> int:
+    """Vocab padded to a multiple of 256 so the vocab dim shards on any mesh
+    axis combination (e.g. whisper's 51866 -> 51968). Pad logits train toward
+    -inf naturally; serving masks them."""
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+def embed_descs(cfg):
+    v = padded_vocab(cfg)
+    d = {"tokens": P((v, cfg.d_model), ("vocab", "embed"), "normal", 0.02)}
+    if not cfg.tie_embeddings:
+        d["unembed"] = P((cfg.d_model, v), ("embed", "vocab"), "fanin")
+    if cfg.pos_embed == "learned":
+        d["positions"] = P((cfg.max_position, cfg.d_model), (None, "embed"),
+                           "normal", 0.02)
+    return d
+
+
+def embed_tokens(cfg, p, tokens, positions=None):
+    x = p["tokens"].astype(cfg_dtype(cfg))[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.pos_embed == "learned":
+        assert positions is not None
+        x = x + p["positions"].astype(x.dtype)[positions]
+    return x
+
+
+def unembed(cfg, p, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, p["tokens"].astype(x.dtype))
+    return jnp.einsum("...d,dv->...v", x, p["unembed"].astype(x.dtype))
+
+
+def cfg_dtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def cfg_param_dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)

@@ -1,0 +1,126 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries go through a low-rank bottleneck (q_lora_rank); keys/values share a
+compressed latent c_kv (kv_lora_rank) plus a single decoupled RoPE key per
+token. The decode cache stores only (c_kv, k_rope) — (r_kv + d_rope) floats
+per token instead of 2*H*head_dim — which is the reason this arch is eligible
+for the 500k-context decode cell.
+
+Decode uses the *absorbed* formulation: W_uk is folded into the query so
+attention scores are computed directly in the compressed latent space
+(q_abs . c_kv), and W_uv is applied once after the softmax — per-step FLOPs
+independent of reconstructing per-head K/V over the full cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, apply_rope, norm_descs, apply_norm
+from repro.kernels import ops as kops
+
+
+def mla_descs(cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": P((d, rq), ("embed", "q_lora"), "fanin"),
+        "q_norm": norm_descs(cfg, rq),
+        "wq_b": P((rq, h, dn + dr), ("q_lora", "heads", "head_dim"), "fanin"),
+        "wkv_a": P((d, rkv + dr), ("embed", "kv_lora"), "fanin"),
+        "kv_norm": norm_descs(cfg, rkv),
+        "wk_b": P((rkv, h, dn), ("kv_lora", "heads", "head_dim"), "fanin"),
+        "wv_b": P((rkv, h, dv), ("kv_lora", "heads", "head_dim"), "fanin"),
+        "wo": P((h, dv, d), ("heads", "head_dim", "embed"), "fanin"),
+    }
+
+
+def _project_q(cfg, p, x, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype))
+    cq = apply_norm(cfg, p["q_norm"], cq)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(cfg, p, x, positions):
+    rkv, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    c_kv, k_rope = ckv[..., :rkv], ckv[..., rkv:]
+    c_kv = apply_norm(cfg, p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(cfg, p, x, positions):
+    """Training/prefill path: reconstruct per-head K/V, use the fused kernel."""
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    h = cfg.num_heads
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    c_kv, k_rope = _compress_kv(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"].astype(x.dtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          k_rope.shape[:2] + (h, dr))], axis=-1)
+    # pad v head_dim to qk dim for the fused kernel, slice after
+    pad = (dn + dr) - dv
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad > 0 else v
+    o = kops.flash_attention(q, k, vp, causal=True)
+    o = o[..., :dv]
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode with compressed cache (absorbed matmuls)
+
+
+def init_mla_cache(cfg, batch: int, max_seq: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dt),
+    }
+
+
+def decode_mla_attention(cfg, p, x, cache, pos):
+    """x: (B, 1, d); cache seq dim shardable over the model axis."""
+    b = x.shape[0]
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    pos_b = jnp.full((b, 1), pos, jnp.int32)
+
+    q_nope, q_rope = _project_q(cfg, p, x, pos_b)           # (B,1,H,dn/dr)
+    c_new, kr_new = _compress_kv(cfg, p, x, pos_b)          # (B,1,rkv),(B,1,dr)
+
+    size = cache["c_kv"].shape[1]
+    slot = jnp.mod(pos, size)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, slot, 0))
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+
+    # absorb W_uk into q: q_abs (B,1,H,rkv)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(x.dtype))
+    scale = (dn + dr) ** -0.5
+    s = jnp.einsum("bshr,btr->bhst", q_abs.astype(jnp.float32),
+                   c_kv.astype(jnp.float32)) * scale
+    s = s + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                       k_rope.astype(jnp.float32)) * scale
+
+    idx = jnp.arange(size, dtype=jnp.int32)
+    valid = idx <= pos                                      # ring never wraps here
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    # attend in latent space, then decompress once per new token
+    o_lat = jnp.einsum("bhst,btr->bshr", w, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bshr,rhk->bshk", o_lat.astype(x.dtype),
+                   p["wv_b"].astype(x.dtype))               # (B,1,H,dv)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), new_cache

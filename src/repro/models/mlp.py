@@ -1,0 +1,27 @@
+"""Dense MLPs: gated (SwiGLU/GeGLU) and plain two-layer."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import P, activation
+
+
+def mlp_descs(cfg, d_ff=None):
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    descs = {
+        "w_up": P((d, f), ("embed", "ffn"), "fanin"),
+        "w_down": P((f, d), ("ffn", "embed"), "fanin"),
+    }
+    if cfg.mlp_gated:
+        descs["w_gate"] = P((d, f), ("embed", "ffn"), "fanin")
+    return descs
+
+
+def apply_mlp(cfg, p, x):
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    if cfg.mlp_gated:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = activation(cfg, gate) * up
+    else:
+        h = activation(cfg, up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))

@@ -1,0 +1,111 @@
+"""Mixture-of-experts FFN with sorted capacity-based dispatch.
+
+Dispatch is sort-based (no (T, E, C) one-hot blow-up): assignments are sorted
+by expert id, ranked within expert, dropped beyond capacity, gathered into an
+(E, C, d) buffer, run through a batched expert MLP (einsum over the expert
+dim — MXU-friendly, EP-shardable on E), and scatter-added back weighted by the
+router probabilities. All shapes static; capacity = ceil(T*topk/E * cf).
+
+Sharding: the expert dim is annotated "experts" -> EP over the model axis (or
+(data, model) when E is divisible by 256, e.g. deepseek-v3's 256 experts map
+one-per-chip on a single pod).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, activation
+from repro.launch.sharding import constrain
+
+
+def moe_descs(cfg):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    descs = {
+        "router": P((d, e), ("embed", "experts_flat"), "fanin"),
+        "w_gate": P((e, d, f), ("experts", "embed", "ffn"), "fanin"),
+        "w_up": P((e, d, f), ("experts", "embed", "ffn"), "fanin"),
+        "w_down": P((e, f, d), ("experts", "ffn", "embed"), "fanin"),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.d_ff_shared or cfg.d_ff_expert * cfg.num_shared_experts
+        descs["shared"] = {
+            "w_gate": P((d, fs), ("embed", "ffn"), "fanin"),
+            "w_up": P((d, fs), ("embed", "ffn"), "fanin"),
+            "w_down": P((fs, d), ("ffn", "embed"), "fanin"),
+        }
+    return descs
+
+
+def capacity(cfg, tokens: int) -> int:
+    c = math.ceil(tokens * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)   # pad to 8 for layout friendliness
+
+
+def apply_moe(cfg, p, x):
+    """x: (B, S, d) -> (B, S, d). Uses the shard_map expert-parallel path
+    (moe_sharded.py) when a distributed rule set is active and the expert
+    count matches the mesh; else the pure-SPMD sort-based dispatch below."""
+    from repro.launch.sharding import active_rules
+    from repro.models import moe_sharded
+    rules = active_rules()
+    if moe_sharded.sharded_moe_available(cfg, rules):
+        return moe_sharded.apply_moe_sharded(cfg, p, x, rules)
+    return _apply_moe_dense(cfg, p, x)
+
+
+def _apply_moe_dense(cfg, p, x):
+    """Pure-SPMD sort-based dispatch (reference path; also the oracle for
+    the shard_map path in tests)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    # --- routing (f32 for numerics) ---
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                    # (t, k)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+
+    # --- sorted capacity dispatch ---
+    cap = capacity(cfg, t)
+    flat_e = topi.reshape(-1)                               # (t*k,)
+    flat_w = topw.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e)                             # stable
+    se, stok, sw = flat_e[order], flat_tok[order], flat_w[order]
+    # rank within expert: position - start offset of that expert
+    counts = jnp.bincount(se, length=e)                     # (e,)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[se]
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)        # overflow -> dump row
+
+    xe = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(xt[stok])
+    xe = constrain(xe[:-1].reshape(e, cap, d), ("experts", None, None))
+
+    # --- batched expert MLP (EP-sharded on e) ---
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(x.dtype))
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(x.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", activation(cfg, gate) * up,
+                    p["w_down"].astype(x.dtype))
+    ye = constrain(ye, ("experts", None, None))
+
+    # --- combine ---
+    ye_flat = jnp.concatenate([ye.reshape(e * cap, d),
+                               jnp.zeros((1, d), x.dtype)], axis=0)
+    contrib = ye_flat[slot] * sw[:, None].astype(x.dtype) \
+        * keep[:, None].astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[stok].add(contrib)
+
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        g = jnp.einsum("td,df->tf", xt, sp["w_gate"].astype(x.dtype))
+        u = jnp.einsum("td,df->tf", xt, sp["w_up"].astype(x.dtype))
+        out = out + jnp.einsum("tf,fd->td", activation(cfg, g) * u,
+                               sp["w_down"].astype(x.dtype))
+    return out.reshape(b, s, d)

@@ -1,0 +1,55 @@
+"""Model registry: build per-arch model handles + analytic param counting."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.models import transformer
+from repro.models.common import count_tree, is_desc
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable                      # (key) -> params
+    param_axes: Callable                # () -> logical axes tree
+    forward: Callable                   # (params, tokens, enc_input=None) -> logits
+    init_cache: Callable                # (batch, max_seq) -> cache
+    decode_step: Callable               # (params, cache, tokens, pos) -> (logits, cache)
+    prefill: Callable                   # (params, cache, tokens, enc_input=None)
+
+
+def build_model(cfg) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        param_axes=lambda: transformer.param_axes(cfg),
+        forward=lambda params, tokens, enc_input=None: transformer.forward(
+            cfg, params, tokens, enc_input),
+        init_cache=lambda batch, max_seq: transformer.init_cache(
+            cfg, batch, max_seq),
+        decode_step=lambda params, cache, tokens, pos, enc_input=None:
+            transformer.decode_step(cfg, params, cache, tokens, pos, enc_input),
+        prefill=lambda params, cache, tokens, enc_input=None:
+            transformer.prefill(cfg, params, cache, tokens, enc_input),
+    )
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    """Analytic parameter count from the descriptor tree.
+
+    active_only: count routed-expert params at the top_k/num_experts fraction
+    (MoE "activated parameters" — used for MODEL_FLOPS = 6 * N_active * D).
+    """
+    tree = transformer.model_descs(cfg)
+    total = 0
+    for path, d in jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=is_desc)[0]:
+        n = int(np.prod(d.shape))
+        if active_only and "experts" in (d.axes or ()):
+            n = int(n * cfg.top_k / max(cfg.num_experts, 1))
+        total += n
+    return total

@@ -1,0 +1,74 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block: norm -> [gate branch: linear+GELU] x [input branch: linear -> causal
+conv4 -> gated linear recurrence] -> output projection. The recurrence is
+  r_t = sigmoid(W_r xi_t);  i_t = sigmoid(W_i xi_t)
+  log_a_t = -c * softplus(Lambda) * r_t          (c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * xi_t)
+run by the rg_lru kernel (Pallas on TPU, associative scan on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, norm_descs, apply_norm
+from repro.models.xlstm import _conv_descs, _causal_conv
+from repro.kernels import ops as kops
+
+_C = 8.0
+
+
+def rglru_descs(cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "norm": norm_descs(cfg),
+        "w_gate_branch": P((d, w), ("embed", "ffn"), "fanin"),
+        "w_input": P((d, w), ("embed", "ffn"), "fanin"),
+        "conv": _conv_descs(w, cfg.conv1d_width),
+        "w_r": P((w, w), ("ffn", "ffn_out"), "fanin"),
+        "w_i": P((w, w), ("ffn", "ffn_out"), "fanin"),
+        "lam": P((w,), ("ffn",), "normal", 0.6),
+        "w_out": P((w, d), ("ffn", "embed"), "fanin"),
+    }
+
+
+def _recurrence_inputs(cfg, p, xn, conv_state=None):
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", xn,
+                                  p["w_gate_branch"].astype(xn.dtype)))
+    xi = jnp.einsum("bsd,dw->bsw", xn, p["w_input"].astype(xn.dtype))
+    xi, new_conv = _causal_conv(p["conv"], xi, conv_state)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xi,
+                                  p["w_r"].astype(xn.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xi,
+                                  p["w_i"].astype(xn.dtype)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) \
+        * (i * xi.astype(jnp.float32))
+    return a.astype(xn.dtype), gx.astype(xn.dtype), gate, new_conv
+
+
+def apply_rglru_block(cfg, p, x):
+    xn = apply_norm(cfg, p["norm"], x)
+    a, gx, gate, _ = _recurrence_inputs(cfg, p, xn)
+    h, _ = kops.rg_lru(a, gx)
+    return x + jnp.einsum("bsw,wd->bsd", h * gate, p["w_out"].astype(x.dtype))
+
+
+def init_rglru_cache(cfg, batch):
+    w = cfg.lru_width or cfg.d_model
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "h": jnp.zeros((batch, w), dt),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dt),
+    }
+
+
+def decode_rglru_block(cfg, p, x, cache):
+    xn = apply_norm(cfg, p["norm"], x)
+    a, gx, gate, new_conv = _recurrence_inputs(cfg, p, xn, cache["conv"])
+    h, h_last = kops.rg_lru(a, gx, cache["h"])
+    out = x + jnp.einsum("bsw,wd->bsd", h * gate, p["w_out"].astype(x.dtype))
+    return out, {"h": h_last, "conv": new_conv}

@@ -1,0 +1,554 @@
+"""Generic multi-family transformer built from scanned layer segments.
+
+A model = embedding -> [segments] -> final norm -> unembedding, where each
+segment is ``lax.scan`` over ``repeats`` of a fixed ``unit`` (tuple of layer
+kinds). HLO size is O(sum of unit lengths), independent of depth — essential
+for compiling 61-100 layer models 80 times on one CPU.
+
+Layer kinds are registered in KINDS; each provides descriptor/apply/cache/
+decode functions. Heterogeneous stacks (gemma3 5:1 local:global, griffin
+(R,R,A), xLSTM (m*7,s), vision cross every 5th) are expressed as periodic
+units, so every kind's params stack cleanly along the scan dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (P, apply_norm, cfg_dtype, cfg_param_dtype,
+                                 embed_descs, embed_tokens, init_tree,
+                                 axes_tree, norm_descs, sincos_positions,
+                                 stack_descs, unembed)
+from repro.models.mlp import apply_mlp, mlp_descs
+from repro.launch.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class Kind:
+    descs: Callable            # (cfg) -> descriptor tree
+    apply: Callable            # (cfg, p, x, ext) -> x
+    init_cache: Callable       # (cfg, batch, max_seq) -> cache tree (or {})
+    decode: Callable           # (cfg, p, x, cache, ext) -> (x, cache)
+    prefill: Callable          # (cfg, p, x, cache, ext) -> (x, cache)
+
+
+# ---------------------------------------------------------------------------
+# attention-family kinds (self-attn + dense/MoE FFN)
+
+
+def _attn_descs(cfg, ffn="dense"):
+    d = {"norm1": norm_descs(cfg), "attn": attn.attn_descs(cfg),
+         "norm2": norm_descs(cfg)}
+    if ffn == "dense":
+        d["mlp"] = mlp_descs(cfg)
+    elif ffn == "moe":
+        d["moe"] = moe_mod.moe_descs(cfg)
+    return d
+
+
+def _make_attn_kind(*, window_attr=None, rope=True, local_theta=False,
+                    ffn="dense", causal=True):
+    def descs(cfg):
+        return _attn_descs(cfg, ffn)
+
+    def _window(cfg):
+        return getattr(cfg, window_attr) if window_attr else 0
+
+    def _theta(cfg):
+        if not rope:
+            return None
+        return cfg.rope_theta_local if local_theta else cfg.rope_theta
+
+    def apply(cfg, p, x, ext):
+        h = apply_norm(cfg, p["norm1"], x)
+        if rope:
+            h = attn.self_attention(cfg, p["attn"], h, ext["positions"],
+                                    window=_window(cfg), causal=causal,
+                                    rope_theta=_theta(cfg))
+        else:
+            nope = dataclasses.replace(cfg, pos_embed="none")
+            h = attn.self_attention(nope, p["attn"], h, ext["positions"],
+                                    window=_window(cfg), causal=causal)
+        x = x + h
+        h = apply_norm(cfg, p["norm2"], x)
+        h = apply_mlp(cfg, p["mlp"], h) if ffn == "dense" \
+            else moe_mod.apply_moe(cfg, p["moe"], h)
+        return x + h
+
+    def init_cache(cfg, batch, max_seq):
+        return {"kv": attn.init_self_cache(cfg, batch, max_seq,
+                                           window=_window(cfg))}
+
+    def decode(cfg, p, x, cache, ext):
+        h = apply_norm(cfg, p["norm1"], x)
+        acfg = cfg if rope else dataclasses.replace(cfg, pos_embed="none")
+        h, kv = attn.decode_self_attention(acfg, p["attn"], h, cache["kv"],
+                                           ext["pos"], window=_window(cfg),
+                                           rope_theta=_theta(cfg) if rope else None)
+        x = x + h
+        h = apply_norm(cfg, p["norm2"], x)
+        h = apply_mlp(cfg, p["mlp"], h) if ffn == "dense" \
+            else moe_mod.apply_moe(cfg, p["moe"], h)
+        return x + h, {"kv": kv}
+
+    def prefill(cfg, p, x, cache, ext):
+        h = apply_norm(cfg, p["norm1"], x)
+        src = h
+        acfg = cfg if rope else dataclasses.replace(cfg, pos_embed="none")
+        q, k, v = attn._project_qkv(acfg, p["attn"], src)
+        theta = _theta(cfg)
+        if rope and cfg.pos_embed == "rope":
+            from repro.models.common import apply_rope
+            q = apply_rope(q, ext["positions"], theta)
+            k = apply_rope(k, ext["positions"], theta)
+        from repro.kernels import ops as kops
+        if attn._cp_eligible(cfg, q.shape[1]):
+            q = constrain(q, ("batch", "seq", None, None))
+        o = kops.flash_attention(q, k, v, causal=causal, window=_window(cfg),
+                                 softcap=cfg.logit_softcap)
+        h = attn._out_proj(cfg, p["attn"], o)
+        x = x + h
+        h = apply_norm(cfg, p["norm2"], x)
+        h = apply_mlp(cfg, p["mlp"], h) if ffn == "dense" \
+            else moe_mod.apply_moe(cfg, p["moe"], h)
+        x = x + h
+        # write the (possibly windowed) tail of k/v into the ring cache
+        buf = cache["kv"]["k"].shape[1]
+        s = k.shape[1]
+        if s >= buf:
+            kw, vw = k[:, -buf:], v[:, -buf:]
+            kcache = kw.astype(cache["kv"]["k"].dtype)
+            vcache = vw.astype(cache["kv"]["v"].dtype)
+            # ring alignment: slot of token t is t % buf
+            shift = s % buf
+            kcache = jnp.roll(kcache, shift, axis=1)
+            vcache = jnp.roll(vcache, shift, axis=1)
+        else:
+            kcache = jax.lax.dynamic_update_slice(
+                cache["kv"]["k"], k.astype(cache["kv"]["k"].dtype), (0, 0, 0, 0))
+            vcache = jax.lax.dynamic_update_slice(
+                cache["kv"]["v"], v.astype(cache["kv"]["v"].dtype), (0, 0, 0, 0))
+        return x, {"kv": {"k": kcache, "v": vcache}}
+
+    return Kind(descs, apply, init_cache, decode, prefill)
+
+
+# ---------------------------------------------------------------------------
+# MLA kinds
+
+
+def _make_mla_kind(ffn):
+    def descs(cfg):
+        d = {"norm1": norm_descs(cfg), "attn": mla_mod.mla_descs(cfg),
+             "norm2": norm_descs(cfg)}
+        if ffn == "dense":
+            d["mlp"] = mlp_descs(cfg)
+        else:
+            d["moe"] = moe_mod.moe_descs(cfg)
+        return d
+
+    def apply(cfg, p, x, ext):
+        h = apply_norm(cfg, p["norm1"], x)
+        x = x + mla_mod.mla_attention(cfg, p["attn"], h, ext["positions"])
+        h = apply_norm(cfg, p["norm2"], x)
+        h = apply_mlp(cfg, p["mlp"], h) if ffn == "dense" \
+            else moe_mod.apply_moe(cfg, p["moe"], h)
+        return x + h
+
+    def init_cache(cfg, batch, max_seq):
+        return {"mla": mla_mod.init_mla_cache(cfg, batch, max_seq)}
+
+    def decode(cfg, p, x, cache, ext):
+        h = apply_norm(cfg, p["norm1"], x)
+        h, c = mla_mod.decode_mla_attention(cfg, p["attn"], h, cache["mla"],
+                                            ext["pos"])
+        x = x + h
+        h = apply_norm(cfg, p["norm2"], x)
+        h = apply_mlp(cfg, p["mlp"], h) if ffn == "dense" \
+            else moe_mod.apply_moe(cfg, p["moe"], h)
+        return x + h, {"mla": c}
+
+    def prefill(cfg, p, x, cache, ext):
+        h = apply_norm(cfg, p["norm1"], x)
+        c_kv, k_rope = mla_mod._compress_kv(cfg, p["attn"], h, ext["positions"])
+        x = x + mla_mod.mla_attention(cfg, p["attn"], h, ext["positions"])
+        h = apply_norm(cfg, p["norm2"], x)
+        h = apply_mlp(cfg, p["mlp"], h) if ffn == "dense" \
+            else moe_mod.apply_moe(cfg, p["moe"], h)
+        x = x + h
+        s = c_kv.shape[1]
+        c = {
+            "c_kv": jax.lax.dynamic_update_slice(
+                cache["mla"]["c_kv"],
+                c_kv.astype(cache["mla"]["c_kv"].dtype), (0, 0, 0)),
+            "k_rope": jax.lax.dynamic_update_slice(
+                cache["mla"]["k_rope"],
+                k_rope.astype(cache["mla"]["k_rope"].dtype), (0, 0, 0)),
+        }
+        return x, {"mla": c}
+
+    return Kind(descs, apply, init_cache, decode, prefill)
+
+
+# ---------------------------------------------------------------------------
+# recurrent kinds
+
+
+def _rglru_descs(cfg):
+    return {"block": rglru_mod.rglru_descs(cfg), "norm2": norm_descs(cfg),
+            "mlp": mlp_descs(cfg)}
+
+
+def _rglru_apply(cfg, p, x, ext):
+    x = rglru_mod.apply_rglru_block(cfg, p["block"], x)
+    h = apply_norm(cfg, p["norm2"], x)
+    return x + apply_mlp(cfg, p["mlp"], h)
+
+
+def _rglru_cache(cfg, batch, max_seq):
+    return {"rec": rglru_mod.init_rglru_cache(cfg, batch)}
+
+
+def _rglru_decode(cfg, p, x, cache, ext):
+    x, c = rglru_mod.decode_rglru_block(cfg, p["block"], x, cache["rec"])
+    h = apply_norm(cfg, p["norm2"], x)
+    return x + apply_mlp(cfg, p["mlp"], h), {"rec": c}
+
+
+def _rglru_prefill(cfg, p, x, cache, ext):
+    # run decode-style over the full sequence to obtain the final state
+    x, c = rglru_mod.decode_rglru_block(cfg, p["block"], x, cache["rec"])
+    h = apply_norm(cfg, p["norm2"], x)
+    return x + apply_mlp(cfg, p["mlp"], h), {"rec": c}
+
+
+def _mlstm_cache(cfg, batch, max_seq):
+    return {"rec": xlstm_mod.init_mlstm_cache(cfg, batch)}
+
+
+def _slstm_cache(cfg, batch, max_seq):
+    return xlstm_mod.init_slstm_cache(cfg, batch)
+
+
+# ---------------------------------------------------------------------------
+# cross-attention kind (vision layers / whisper decoder)
+
+
+def _cross_descs(cfg):
+    return {"norm1": norm_descs(cfg), "attn": attn.attn_descs(cfg),
+            "norm_c": norm_descs(cfg), "xattn": attn.attn_descs(cfg),
+            "norm2": norm_descs(cfg), "mlp": mlp_descs(cfg)}
+
+
+def _cross_apply(cfg, p, x, ext):
+    h = apply_norm(cfg, p["norm1"], x)
+    x = x + attn.self_attention(cfg, p["attn"], h, ext["positions"])
+    h = apply_norm(cfg, p["norm_c"], x)
+    x = x + attn.cross_attention(cfg, p["xattn"], h, ext["ctx"])
+    h = apply_norm(cfg, p["norm2"], x)
+    return x + apply_mlp(cfg, p["mlp"], h)
+
+
+def _cross_cache(cfg, batch, max_seq):
+    return {"kv": attn.init_self_cache(cfg, batch, max_seq),
+            "xkv": attn.init_cross_cache(cfg, batch, max(cfg.encoder_seq, 1))}
+
+
+def _cross_decode(cfg, p, x, cache, ext):
+    h = apply_norm(cfg, p["norm1"], x)
+    h, kv = attn.decode_self_attention(cfg, p["attn"], h, cache["kv"],
+                                       ext["pos"])
+    x = x + h
+    h = apply_norm(cfg, p["norm_c"], x)
+    x = x + attn.decode_cross_attention(cfg, p["xattn"], h, cache["xkv"])
+    h = apply_norm(cfg, p["norm2"], x)
+    return x + apply_mlp(cfg, p["mlp"], h), {"kv": kv, "xkv": cache["xkv"]}
+
+
+def _cross_prefill(cfg, p, x, cache, ext):
+    h = apply_norm(cfg, p["norm1"], x)
+    q, k, v = attn._project_qkv(cfg, p["attn"], h)
+    if cfg.pos_embed == "rope":
+        from repro.models.common import apply_rope
+        q = apply_rope(q, ext["positions"], cfg.rope_theta)
+        k = apply_rope(k, ext["positions"], cfg.rope_theta)
+    from repro.kernels import ops as kops
+    if attn._cp_eligible(cfg, q.shape[1]):
+        q = constrain(q, ("batch", "seq", None, None))
+    o = kops.flash_attention(q, k, v, causal=True)
+    x = x + attn._out_proj(cfg, p["attn"], o)
+    h = apply_norm(cfg, p["norm_c"], x)
+    xkv = attn.prefill_cross_cache(cfg, p["xattn"], ext["ctx"])
+    x = x + attn.cross_attention(cfg, p["xattn"], h, ext["ctx"])
+    h = apply_norm(cfg, p["norm2"], x)
+    x = x + apply_mlp(cfg, p["mlp"], h)
+    kv = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["kv"]["k"], k.astype(cache["kv"]["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["kv"]["v"], v.astype(cache["kv"]["v"].dtype), (0, 0, 0, 0)),
+    }
+    return x, {"kv": kv, "xkv": {k2: v2.astype(cache["xkv"][k2].dtype)
+                                 for k2, v2 in xkv.items()}}
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+
+def _stateless(kind: Kind) -> Kind:
+    return kind
+
+
+KINDS: Dict[str, Kind] = {
+    "attn": _make_attn_kind(),
+    "attn_local": _make_attn_kind(window_attr="window_size", local_theta=True),
+    "moe": _make_attn_kind(ffn="moe"),
+    "moe_local": _make_attn_kind(window_attr="window_size", ffn="moe"),
+    "moe_nope": _make_attn_kind(rope=False, ffn="moe"),
+    "mla_dense": _make_mla_kind("dense"),
+    "mla_moe": _make_mla_kind("moe"),
+    "rglru": Kind(_rglru_descs, _rglru_apply, _rglru_cache, _rglru_decode,
+                  _rglru_prefill),
+    "mlstm": Kind(lambda cfg: xlstm_mod.mlstm_descs(cfg),
+                  lambda cfg, p, x, ext: xlstm_mod.apply_mlstm_block(cfg, p, x),
+                  _mlstm_cache,
+                  lambda cfg, p, x, c, ext: (
+                      lambda r: (r[0], {"rec": r[1]}))(
+                          xlstm_mod.decode_mlstm_block(cfg, p, x, c["rec"])),
+                  lambda cfg, p, x, c, ext: (
+                      lambda r: (r[0], {"rec": r[1]}))(
+                          xlstm_mod.decode_mlstm_block(cfg, p, x, c["rec"]))),
+    "slstm": Kind(lambda cfg: xlstm_mod.slstm_descs(cfg),
+                  lambda cfg, p, x, ext: xlstm_mod.apply_slstm_block(cfg, p, x),
+                  _slstm_cache,
+                  lambda cfg, p, x, c, ext: xlstm_mod.decode_slstm_block(
+                      cfg, p, x, c),
+                  lambda cfg, p, x, c, ext: xlstm_mod.decode_slstm_block(
+                      cfg, p, x, c)),
+    "cross": Kind(_cross_descs, _cross_apply, _cross_cache, _cross_decode,
+                  _cross_prefill),
+    "enc": _make_attn_kind(causal=False),
+}
+
+
+# ---------------------------------------------------------------------------
+# model assembly
+
+
+def model_descs(cfg):
+    d: Dict[str, Any] = {"embed": embed_descs(cfg)}
+    d["segments"] = {}
+    for i, (unit, reps) in enumerate(cfg.segments):
+        seg = {str(j): KINDS[k].descs(cfg) for j, k in enumerate(unit)}
+        d["segments"][f"seg{i}"] = stack_descs(seg, reps)
+    d["final_norm"] = norm_descs(cfg)
+    if cfg.mtp_depth:
+        # DeepSeek-V3 multi-token prediction module (depth 1): shares the
+        # embedding/unembedding; one extra transformer layer of the same
+        # kind as the trunk's last segment, fed by a projection of
+        # [norm(h_t) ; norm(emb(t+1))]
+        last_kind = cfg.segments[-1][0][-1]
+        d["mtp"] = {
+            "h_norm": norm_descs(cfg),
+            "e_norm": norm_descs(cfg),
+            "proj": P((2 * cfg.d_model, cfg.d_model),
+                      (None, "embed"), "fanin"),
+            "layer": stack_descs({"0": KINDS[last_kind].descs(cfg)}, 1),
+            "final_norm": norm_descs(cfg),
+        }
+    if cfg.num_encoder_layers:
+        d["enc_proj"] = P((cfg.encoder_dim, cfg.d_model),
+                          ("enc_dim", "embed"), "fanin")
+        seg = {"0": KINDS["enc"].descs(cfg)}
+        d["encoder"] = stack_descs(seg, cfg.num_encoder_layers)
+        d["enc_final_norm"] = norm_descs(cfg)
+    elif cfg.cross_source:   # vision: projection only, no encoder stack
+        d["enc_proj"] = P((cfg.encoder_dim, cfg.d_model),
+                          ("enc_dim", "embed"), "fanin")
+    return d
+
+
+def init_params(cfg, key):
+    return init_tree(model_descs(cfg), key, cfg_param_dtype(cfg))
+
+
+def param_axes(cfg):
+    return axes_tree(model_descs(cfg))
+
+
+def _encode(cfg, params, enc_input):
+    """enc_input: (B, S_enc, encoder_dim) stub frontend output -> (B,S_enc,d)."""
+    x = jnp.einsum("bse,ed->bsd", enc_input.astype(cfg_dtype(cfg)),
+                   params["enc_proj"].astype(cfg_dtype(cfg)))
+    if not cfg.num_encoder_layers:
+        return x
+    pos_table = jnp.asarray(sincos_positions(x.shape[1], cfg.d_model))
+    x = x + pos_table[None].astype(x.dtype)
+    ext = {"positions": jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2]), "ctx": None}
+    kind = KINDS["enc"]
+
+    def body(h, p_layer):
+        return kind.apply(cfg, p_layer["0"], h, ext), None
+
+    body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def forward(cfg, params, tokens, enc_input=None):
+    """Training/scoring forward. tokens: (B, S) -> logits (B, S, V)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(cfg, params["embed"], tokens, positions)
+    x = constrain(x, ("batch", None, None))
+    ctx = _encode(cfg, params, enc_input) if enc_input is not None else None
+    ext = {"positions": positions, "ctx": ctx}
+
+    for i, (unit, reps) in enumerate(cfg.segments):
+        seg_params = params["segments"][f"seg{i}"]
+
+        def body(h, p_layer, unit=unit):
+            for j, kname in enumerate(unit):
+                # remat per LAYER (not per unit): the unit backward then
+                # keeps at most one layer's recomputed internals live
+                apply = KINDS[kname].apply
+                if cfg.remat == "full":
+                    apply = jax.checkpoint(apply, static_argnums=(0,))
+                h = apply(cfg, p_layer[str(j)], h, ext)
+            return constrain(h, ("batch", None, None)), None
+
+        x, _ = jax.lax.scan(body, x, seg_params)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    return unembed(cfg, params["embed"], x)
+
+
+def forward_with_mtp(cfg, params, tokens, enc_input=None):
+    """Training forward + MTP head: returns (logits over positions 0..S-1
+    predicting t+1, mtp_logits over positions 0..S-2 predicting t+2)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(cfg, params["embed"], tokens, positions)
+    x = constrain(x, ("batch", None, None))
+    ctx = _encode(cfg, params, enc_input) if enc_input is not None else None
+    ext = {"positions": positions, "ctx": ctx}
+
+    for i, (unit, reps) in enumerate(cfg.segments):
+        seg_params = params["segments"][f"seg{i}"]
+
+        def body(h, p_layer, unit=unit):
+            for j, kname in enumerate(unit):
+                apply = KINDS[kname].apply
+                if cfg.remat == "full":
+                    apply = jax.checkpoint(apply, static_argnums=(0,))
+                h = apply(cfg, p_layer[str(j)], h, ext)
+            return constrain(h, ("batch", None, None)), None
+
+        x, _ = jax.lax.scan(body, x, seg_params)
+
+    h_final = x
+    logits = unembed(cfg, params["embed"],
+                     apply_norm(cfg, params["final_norm"], h_final))
+
+    # --- MTP: predict token t+2 from (h_t, emb(token_{t+1})) ---
+    mp = params["mtp"]
+    h = apply_norm(cfg, mp["h_norm"], h_final[:, :-1])
+    e_next = embed_tokens(cfg, params["embed"], tokens[:, 1:],
+                          positions[:, 1:])
+    e = apply_norm(cfg, mp["e_norm"], e_next)
+    hcat = jnp.concatenate([h, e], axis=-1)
+    hm = jnp.einsum("bsd,de->bse", hcat, mp["proj"].astype(hcat.dtype))
+    hm = constrain(hm, ("batch", None, None))
+    last_kind = cfg.segments[-1][0][-1]
+    mtp_ext = {"positions": positions[:, 1:], "ctx": ctx}
+    apply = KINDS[last_kind].apply
+    if cfg.remat == "full":
+        apply = jax.checkpoint(apply, static_argnums=(0,))
+    hm = apply(cfg, jax.tree.map(lambda a: a[0], mp["layer"]["0"]), hm,
+               mtp_ext)
+    mtp_logits = unembed(cfg, params["embed"],
+                         apply_norm(cfg, mp["final_norm"], hm))
+    return logits, mtp_logits
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    cache: Dict[str, Any] = {}
+    for i, (unit, reps) in enumerate(cfg.segments):
+        seg = {str(j): KINDS[k].init_cache(cfg, batch, max_seq)
+               for j, k in enumerate(unit)}
+        cache[f"seg{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (reps,) + a.shape).copy()
+            if reps > 1 else a[None], seg)
+    return cache
+
+
+def decode_step(cfg, params, cache, tokens, pos, enc_input=None,
+                ctx_cacheable=True):
+    """One-token decode. tokens: (B, 1); pos: scalar int32 (tokens cached).
+
+    For cross-attn models the encoder context is assumed cached inside each
+    layer's xkv cache (filled by prefill); enc_input is only used when a
+    fresh context is supplied.
+    """
+    b = tokens.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x = embed_tokens(cfg, params["embed"], tokens, positions)
+    ctx = _encode(cfg, params, enc_input) if enc_input is not None else None
+    ext = {"positions": positions, "pos": pos, "ctx": ctx}
+
+    new_cache: Dict[str, Any] = {}
+    for i, (unit, reps) in enumerate(cfg.segments):
+        seg_params = params["segments"][f"seg{i}"]
+        seg_cache = cache[f"seg{i}"]
+
+        def body(h, xs, unit=unit):
+            p_layer, c_layer = xs
+            c_out = {}
+            for j, kname in enumerate(unit):
+                h, c_out[str(j)] = KINDS[kname].decode(
+                    cfg, p_layer[str(j)], h, c_layer[str(j)], ext)
+            return h, c_out
+
+        x, new_seg = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_cache[f"seg{i}"] = new_seg
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    return unembed(cfg, params["embed"], x), new_cache
+
+
+def prefill(cfg, params, cache, tokens, enc_input=None):
+    """Fill caches for tokens[0..S) and return last-position logits + cache."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(cfg, params["embed"], tokens, positions)
+    ctx = _encode(cfg, params, enc_input) if enc_input is not None else None
+    ext = {"positions": positions, "ctx": ctx}
+
+    new_cache: Dict[str, Any] = {}
+    for i, (unit, reps) in enumerate(cfg.segments):
+        seg_params = params["segments"][f"seg{i}"]
+        seg_cache = cache[f"seg{i}"]
+
+        def body(h, xs, unit=unit):
+            p_layer, c_layer = xs
+            c_out = {}
+            for j, kname in enumerate(unit):
+                h, c_out[str(j)] = KINDS[kname].prefill(
+                    cfg, p_layer[str(j)], h, c_layer[str(j)], ext)
+            return h, c_out
+
+        x, new_seg = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_cache[f"seg{i}"] = new_seg
+
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    return unembed(cfg, params["embed"], x), new_cache

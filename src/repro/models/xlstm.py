@@ -1,0 +1,207 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel kernel) and sLSTM
+(scalar memory, inherently sequential -> lax.scan).
+
+mLSTM block (pre up-projection, proj_factor 2):
+  x -> norm -> up (2x: value path v & output gate z)
+            -> causal conv4 on value path -> q,k projections
+            -> mlstm(q,k,v, log_f, log_i) -> headwise groupnorm
+            -> (* silu(z)) -> down-projection
+sLSTM block: norm -> fused gates (input + recurrent, per-head block-diagonal
+recurrence) -> stabilized scalar cell -> headwise groupnorm -> out proj,
+followed by a gated FFN (proj_factor 4/3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, norm_descs, apply_norm
+from repro.kernels import ops as kops
+
+
+def _conv_descs(dim, width):
+    return {"kernel": P((width, dim), (None, "embed"), "fanin"),
+            "bias": P((dim,), ("embed",), "zeros")}
+
+
+def _causal_conv(p, x, state=None):
+    """x: (B,S,D). state: (B,W-1,D) trailing inputs from the previous step.
+    Returns (y, new_state)."""
+    w = p["kernel"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * p["kernel"][i].astype(x.dtype)
+            for i in range(w))
+    y = y + p["bias"].astype(x.dtype)
+    new_state = xp[:, -(w - 1):]
+    return y, new_state
+
+
+def _groupnorm_heads(x, eps=1e-6):
+    """x: (B,S,H,D) — normalize per head (no learned params here)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+
+
+def mlstm_descs(cfg):
+    d = cfg.d_model
+    du = int(d * cfg.mlstm_proj_factor)
+    h = cfg.num_heads
+    return {
+        "norm": norm_descs(cfg),
+        "w_up_v": P((d, du), ("embed", "ffn"), "fanin"),
+        "w_up_z": P((d, du), ("embed", "ffn"), "fanin"),
+        "conv": _conv_descs(du, cfg.conv1d_width),
+        "wq": P((du, du), ("ffn", "ffn_out"), "fanin"),
+        "wk": P((du, du), ("ffn", "ffn_out"), "fanin"),
+        "w_if": P((d, 2 * h), ("embed", None), "fanin"),
+        "w_down": P((du, d), ("ffn", "embed"), "fanin"),
+    }
+
+
+def _mlstm_qkv(cfg, p, xn, conv_state=None):
+    b, s, _ = xn.shape
+    du = p["w_up_v"].shape[1]
+    h = cfg.num_heads
+    dh = du // h
+    v_path = jnp.einsum("bsd,de->bse", xn, p["w_up_v"].astype(xn.dtype))
+    z = jnp.einsum("bsd,de->bse", xn, p["w_up_z"].astype(xn.dtype))
+    c, new_conv = _causal_conv(p["conv"], v_path, conv_state)
+    c = jax.nn.silu(c)
+    q = jnp.einsum("bse,ef->bsf", c, p["wq"].astype(xn.dtype))
+    k = jnp.einsum("bse,ef->bsf", c, p["wk"].astype(xn.dtype))
+    gates = jnp.einsum("bsd,dg->bsg", xn, p["w_if"].astype(xn.dtype))
+    log_i = gates[..., :h].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32) + 3.0)
+    shp = (b, s, h, dh)
+    return (q.reshape(shp), k.reshape(shp), v_path.reshape(shp),
+            log_f, log_i, z, new_conv)
+
+
+def apply_mlstm_block(cfg, p, x):
+    xn = apply_norm(cfg, p["norm"], x)
+    q, k, v, log_f, log_i, z, _ = _mlstm_qkv(cfg, p, xn)
+    hseq, _ = kops.mlstm(q, k, v, log_f, log_i)
+    hseq = _groupnorm_heads(hseq)
+    b, s = x.shape[:2]
+    hflat = hseq.reshape(b, s, -1) * jax.nn.silu(z)
+    return x + jnp.einsum("bse,ed->bsd", hflat, p["w_down"].astype(x.dtype))
+
+
+def init_mlstm_cache(cfg, batch):
+    du = int(cfg.d_model * cfg.mlstm_proj_factor)
+    h = cfg.num_heads
+    dh = du // h
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), dt),
+        "n": jnp.zeros((batch, h, dh), dt),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, du), dt),
+    }
+
+
+def decode_mlstm_block(cfg, p, x, cache):
+    xn = apply_norm(cfg, p["norm"], x)
+    q, k, v, log_f, log_i, z, new_conv = _mlstm_qkv(cfg, p, xn, cache["conv"])
+    hseq, (C, n, m) = kops.mlstm(q, k, v, log_f, log_i,
+                                 state=(cache["C"], cache["n"], cache["m"]))
+    hseq = _groupnorm_heads(hseq)
+    hflat = hseq.reshape(x.shape[0], x.shape[1], -1) * jax.nn.silu(z)
+    out = x + jnp.einsum("bse,ed->bsd", hflat, p["w_down"].astype(x.dtype))
+    return out, {"C": C, "n": n, "m": m, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+
+
+def slstm_descs(cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    df = int(d * cfg.slstm_proj_factor)
+    return {
+        "norm": norm_descs(cfg),
+        "w_in": P((d, 4 * d), ("embed", None), "fanin"),
+        "w_rec": P((h, dh, 4 * dh), ("heads", "head_dim", None), "fanin",
+                   0.5),
+        "w_out": P((d, d), ("embed", "embed_out"), "fanin"),
+        "norm2": norm_descs(cfg),
+        "w_ff_gate": P((d, df), ("embed", "ffn"), "fanin"),
+        "w_ff_up": P((d, df), ("embed", "ffn"), "fanin"),
+        "w_ff_down": P((df, d), ("ffn", "embed"), "fanin"),
+    }
+
+
+def _slstm_scan(cfg, p, gates_in, state):
+    """gates_in: (B,S,4d) input contribution; sequential over S."""
+    b, s, _ = gates_in.shape
+    h = cfg.num_heads
+    d = cfg.d_model
+    dh = d // h
+    w_rec = p["w_rec"].astype(jnp.float32)
+
+    def step(carry, g_in):
+        c, n, m, hprev = carry                       # (B,H,dh) x3, m:(B,H,dh)
+        g_rec = jnp.einsum("bhd,hdg->bhg", hprev, w_rec)
+        g = g_in.reshape(b, h, 4 * dh).astype(jnp.float32) + g_rec
+        zi, ii, fi, oi = jnp.split(g, 4, axis=-1)    # (B,H,dh)
+        zt = jnp.tanh(zi)
+        ot = jax.nn.sigmoid(oi)
+        log_i = ii
+        log_f = jax.nn.log_sigmoid(fi + 3.0)
+        m_new = jnp.maximum(log_f + m, log_i)
+        c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(log_i - m_new) * zt
+        n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(log_i - m_new)
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    state, hs = jax.lax.scan(step, state, gates_in.swapaxes(0, 1))
+    return hs.swapaxes(0, 1).reshape(b, s, d), state
+
+
+def _slstm_init_state(cfg, batch):
+    h, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return (z, z, jnp.full((batch, h, dh), -1e30, jnp.float32), z)
+
+
+def apply_slstm_block(cfg, p, x):
+    xn = apply_norm(cfg, p["norm"], x)
+    g_in = jnp.einsum("bsd,dg->bsg", xn, p["w_in"].astype(x.dtype))
+    hs, _ = _slstm_scan(cfg, p, g_in, _slstm_init_state(cfg, x.shape[0]))
+    hs = _groupnorm_heads(hs.reshape(*x.shape[:2], cfg.num_heads, -1))
+    hs = hs.reshape(x.shape).astype(x.dtype)
+    x = x + jnp.einsum("bsd,de->bse", hs, p["w_out"].astype(x.dtype))
+    xn2 = apply_norm(cfg, p["norm2"], x)
+    gate = jnp.einsum("bsd,df->bsf", xn2, p["w_ff_gate"].astype(x.dtype))
+    up = jnp.einsum("bsd,df->bsf", xn2, p["w_ff_up"].astype(x.dtype))
+    return x + jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up,
+                          p["w_ff_down"].astype(x.dtype))
+
+
+def init_slstm_cache(cfg, batch):
+    return {"state": _slstm_init_state(cfg, batch)}
+
+
+def decode_slstm_block(cfg, p, x, cache):
+    xn = apply_norm(cfg, p["norm"], x)
+    g_in = jnp.einsum("bsd,dg->bsg", xn, p["w_in"].astype(x.dtype))
+    hs, state = _slstm_scan(cfg, p, g_in, cache["state"])
+    hs = _groupnorm_heads(hs.reshape(x.shape[0], x.shape[1], cfg.num_heads, -1))
+    hs = hs.reshape(x.shape).astype(x.dtype)
+    x = x + jnp.einsum("bsd,de->bse", hs, p["w_out"].astype(x.dtype))
+    xn2 = apply_norm(cfg, p["norm2"], x)
+    gate = jnp.einsum("bsd,df->bsf", xn2, p["w_ff_gate"].astype(x.dtype))
+    up = jnp.einsum("bsd,df->bsf", xn2, p["w_ff_up"].astype(x.dtype))
+    out = x + jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up,
+                         p["w_ff_down"].astype(x.dtype))
+    return out, {"state": state}

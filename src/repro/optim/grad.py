@@ -1,0 +1,51 @@
+"""Gradient utilities: global-norm clipping and int8 compression with error
+feedback (a cross-pod DCN bandwidth optimization — beyond-paper trick,
+applied to the *gradient* traffic the same way the burst buffer's int8
+kernel is applied to *checkpoint* traffic)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), norm
+
+
+def compress_int8(tree):
+    """Per-leaf symmetric int8 quantization. Returns (q_tree, scale_tree)."""
+    def q(x):
+        xf = x.astype(jnp.float32)
+        s = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+        return jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8), s
+    qs = jax.tree.map(q, tree)
+    pick = lambda i: jax.tree.map(lambda t: t[i], qs,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), pick(1)
+
+
+def decompress_int8(q_tree, scale_tree, dtype=jnp.float32):
+    return jax.tree.map(lambda q, s: (q.astype(jnp.float32) * s).astype(dtype),
+                        q_tree, scale_tree)
+
+
+def compress_error_feedback(tree, residual):
+    """int8 compress (tree + residual); returns (q, scales, new_residual)."""
+    biased = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r.astype(jnp.float32),
+        tree, residual)
+    q, s = compress_int8(biased)
+    recon = decompress_int8(q, s)
+    new_res = jax.tree.map(lambda b, r: b - r, biased, recon)
+    return q, s, new_res

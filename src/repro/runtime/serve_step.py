@@ -1,0 +1,31 @@
+"""Serving steps: batched single-token decode + prefill, jit-friendly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import padded_vocab
+
+
+def make_decode_step(cfg, model):
+    def decode_step(params, cache, tokens, pos):
+        """tokens: (B,1) int32; pos: scalar int32 -> (logits (B,1,V), cache)."""
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        return logits, cache
+    return decode_step
+
+
+def make_prefill(cfg, model):
+    def prefill(params, cache, tokens, enc_input=None):
+        return model.prefill(params, cache, tokens, enc_input)
+    return prefill
+
+
+def greedy_token(cfg, logits):
+    """Mask vocab padding, take argmax. logits: (B,1,Vp)."""
+    v = cfg.vocab_size
+    vp = padded_vocab(cfg)
+    if vp != v:
+        mask = jnp.arange(vp) < v
+        logits = jnp.where(mask[None, None, :], logits, -jnp.inf)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,139 @@
+"""Training step: loss, microbatch gradient accumulation, optimizer update.
+
+The step consumes a global batch dict {"inputs": (B,S), "labels": (B,S),
+optional "enc_input": (B,S_enc,E)} and runs ``accum_steps`` microbatches via
+lax.scan, accumulating grads in ``cfg.grad_accum_dtype``. Optimizer is AdamW
+or Adafactor per the arch config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models.common import padded_vocab
+from repro.optim.adafactor import Adafactor
+from repro.optim.adamw import AdamW
+from repro.optim.grad import clip_by_global_norm
+from repro.optim.schedule import warmup_cosine
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+
+
+def make_optimizer(cfg, *, peak_lr=3e-4, warmup=200, total=10_000):
+    sched = warmup_cosine(peak_lr, warmup, total)
+    if cfg.optimizer == "adafactor":
+        return Adafactor(lr=sched, momentum=0.9)
+    state_dtype = ("bfloat16" if cfg.grad_accum_dtype == "bfloat16"
+                   else "float32")
+    return AdamW(lr=sched, state_dtype=state_dtype)
+
+
+def init_train_state(cfg, model, optimizer, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt_state=optimizer.init(params))
+
+
+def state_logical_axes(cfg, model, optimizer):
+    """Logical-axis tree matching TrainState(params, opt_state): optimizer
+    state mirrors param axes (factored Adafactor moments drop the factored
+    dim's annotation)."""
+    import jax
+    from repro.models.common import is_desc
+    from repro.optim.adafactor import Adafactor, AdafactorState
+    from repro.optim.adamw import AdamW, AdamWState
+    from repro.models import transformer
+
+    descs = transformer.model_descs(cfg)
+    p_axes = jax.tree.map(lambda d: d.axes, descs, is_leaf=is_desc)
+    p_shapes = jax.tree.map(lambda d: d.shape, descs, is_leaf=is_desc)
+
+    if isinstance(optimizer, AdamW):
+        opt_axes = AdamWState(step=(), m=p_axes, v=p_axes)
+    else:
+        def vr_axes(a, s):
+            return a[:-1] if len(s) >= 2 else a
+
+        def vc_axes(a, s):
+            return a[:-2] + (a[-1],) if len(s) >= 2 else (None,)
+
+        def m_axes(a, s):
+            return a if optimizer.momentum else (None,)
+
+        zip_map = lambda f: jax.tree.map(
+            f, p_axes, p_shapes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                e is None or isinstance(e, str) for e in x))
+        opt_axes = AdafactorState(step=(), vr=zip_map(vr_axes),
+                                  vc=zip_map(vc_axes), m=zip_map(m_axes))
+    return TrainState(params=p_axes, opt_state=opt_axes)
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """logits: (B,S,Vp) any dtype; labels: (B,S) int32. f32 stable xent."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_train_step(cfg, model, optimizer, *, accum_steps: int = 1,
+                    clip_norm: float = 1.0):
+    vp = padded_vocab(cfg)
+
+    def loss_fn(params, micro):
+        if cfg.mtp_depth:
+            from repro.models import transformer
+            logits, mtp_logits = transformer.forward_with_mtp(
+                cfg, params, micro["inputs"], micro.get("enc_input"))
+            loss = cross_entropy(logits, micro["labels"], vp)
+            # MTP target at position t is token t+2 = labels[t+1]
+            mtp_loss = cross_entropy(mtp_logits, micro["labels"][:, 1:], vp)
+            return loss + 0.3 * mtp_loss
+        logits = model.forward(params, micro["inputs"],
+                               micro.get("enc_input"))
+        return cross_entropy(logits, micro["labels"], vp)
+
+    def train_step(state: TrainState, batch):
+        b = batch["inputs"].shape[0]
+        mb = b // accum_steps
+        adt = jnp.dtype(cfg.grad_accum_dtype)
+
+        def micro_slices(x):
+            x = x.reshape((accum_steps, mb) + x.shape[1:])
+            # keep the *microbatch* dim data-parallel — without this, SPMD
+            # may shard the accum dim instead and every weight matmul turns
+            # into a partial-sum all-reduce of full activations
+            return constrain(x, (None, "batch") + (None,) * (x.ndim - 2))
+
+        micros = {k: micro_slices(v) for k, v in batch.items()}
+
+        def accum_body(carry, micro):
+            g_acc, l_acc = carry
+            micro = {k: constrain(v, ("batch",) + (None,) * (v.ndim - 1))
+                     for k, v in micro.items()}
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, micro)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(adt) / accum_steps, g_acc, grads)
+            return (g_acc, l_acc + loss / accum_steps), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), state.params)
+        if accum_steps > 1:
+            (grads, loss), _ = jax.lax.scan(accum_body, (g0, 0.0), micros)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                state.params, {k: v[0] for k, v in micros.items()})
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = optimizer.update(grads, state.opt_state,
+                                             state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return TrainState(params=params, opt_state=opt_state), metrics
+
+    return train_step

@@ -1,0 +1,99 @@
+"""Loop-aware HLO analyzer: exact on known programs; collective parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_stats import Analyzer, analyze
+from repro.analysis.roofline import (Roofline, collective_summary,
+                                     model_flops_for, parse_collectives)
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_exact():
+    w = jnp.ones((64, 64), jnp.float32)
+    x = jnp.ones((64, 64), jnp.float32)
+
+    def body(c, _):
+        return c @ w, None
+
+    def scanned(x):
+        return jax.lax.scan(body, x, None, length=12)[0]
+
+    stats = analyze(_compile(scanned, x))
+    expect = 2 * 64 ** 3 * 12
+    assert stats.flops == pytest.approx(expect, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    w = jnp.ones((32, 32), jnp.float32)
+    x = jnp.ones((32, 32), jnp.float32)
+
+    def inner(c, _):
+        return c @ w, None
+
+    def outer(c, _):
+        return jax.lax.scan(inner, c, None, length=5)[0], None
+
+    def fn(x):
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    stats = analyze(_compile(fn, x))
+    assert stats.flops == pytest.approx(2 * 32 ** 3 * 15, rel=0.01)
+
+
+def test_unrolled_matches_scanned():
+    w = jnp.ones((48, 48), jnp.float32)
+    x = jnp.ones((48, 48), jnp.float32)
+
+    def unrolled(x):
+        for _ in range(6):
+            x = x @ w
+        return x
+
+    def scanned(x):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=6)[0]
+
+    su = analyze(_compile(unrolled, x))
+    ss = analyze(_compile(scanned, x))
+    assert su.flops == pytest.approx(ss.flops, rel=0.01)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="train_4k", mesh="pod", chips=256,
+                 flops_per_chip=197e12, hbm_bytes_per_chip=819e9 * 2,
+                 link_bytes_per_chip=50e9 * 0.5,
+                 model_flops=197e12 * 256 * 0.5)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    # achieved useful flops/chip at t=2.0: 0.5*197e12/2 -> 1/4 of peak
+    assert r.roofline_fraction == pytest.approx(0.25)
+
+
+def test_parse_collectives_from_text():
+    txt = """
+  %ar = bf16[16,128]{1,0} all-reduce(bf16[16,128]{1,0} %x), replica_groups=[8,8]<=[64], to_apply=%sum
+  %ag = f32[64,32]{1,0} all-gather(f32[8,32]{1,0} %y), replica_groups=[4,16]<=[64], dimensions={0}
+"""
+    colls = parse_collectives(txt)
+    assert len(colls) == 2
+    ar = [c for c in colls if c["op"] == "all-reduce"][0]
+    assert ar["participants"] == 8
+    assert ar["bytes"] == 16 * 128 * 2
+    summary = collective_summary(colls)
+    assert summary["all-gather"]["count"] == 1
+
+
+def test_model_flops_train_vs_decode():
+    from repro.configs.base import SHAPES_BY_NAME
+    n = 1_000_000
+    t = model_flops_for(None, SHAPES_BY_NAME["train_4k"], n)
+    d = model_flops_for(None, SHAPES_BY_NAME["decode_32k"], n)
+    assert t == 6.0 * n * 256 * 4096
+    assert d == 2.0 * n * 128

@@ -1,0 +1,61 @@
+"""Data pipeline: determinism, shard disjointness, prefetch, resume."""
+import numpy as np
+
+from repro.data.pipeline import SyntheticLMPipeline
+
+
+def _mk(**kw):
+    args = dict(vocab_size=1000, seq_len=16, global_batch=8)
+    args.update(kw)
+    return SyntheticLMPipeline(**args)
+
+
+def test_deterministic_same_seed():
+    a, b = _mk(), _mk()
+    for _ in range(3):
+        ba, bb = next(a), next(b)
+        np.testing.assert_array_equal(ba["inputs"], bb["inputs"])
+        np.testing.assert_array_equal(ba["labels"], bb["labels"])
+
+
+def test_labels_are_shifted_inputs():
+    batch = next(_mk())
+    np.testing.assert_array_equal(batch["inputs"][:, 1:],
+                                  batch["labels"][:, :-1])
+
+
+def test_shards_disjoint_and_cover():
+    full_batches = [next(_mk(num_shards=1)) for _ in range(2)]
+    shard0 = _mk(num_shards=2, shard_id=0)
+    shard1 = _mk(num_shards=2, shard_id=1)
+    b0, b1 = next(shard0), next(shard1)
+    assert b0["inputs"].shape[0] == 4 and b1["inputs"].shape[0] == 4
+    assert not np.array_equal(b0["inputs"], b1["inputs"])
+
+
+def test_prefetch_matches_sync():
+    sync = _mk(seed=7)
+    pre = _mk(seed=7).start_prefetch()
+    try:
+        for _ in range(4):
+            np.testing.assert_array_equal(next(sync)["inputs"],
+                                          next(pre)["inputs"])
+    finally:
+        pre.stop_prefetch()
+
+
+def test_resume_from_state_dict():
+    a = _mk(seed=3)
+    for _ in range(5):
+        next(a)
+    state = a.state_dict()
+    b = _mk(seed=3)
+    b.load_state_dict(state)
+    np.testing.assert_array_equal(next(a)["inputs"], next(b)["inputs"])
+
+
+def test_modality_stub_inputs():
+    p = _mk(enc_seq=10, enc_dim=4)
+    batch = next(p)
+    assert batch["enc_input"].shape == (8, 10, 4)
+    assert batch["enc_input"].dtype == np.float32

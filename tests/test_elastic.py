@@ -1,0 +1,78 @@
+"""Elastic scaling: restore a BB checkpoint onto a different (smaller) mesh
+via logical-key resharding, plus flush-domain work stealing."""
+import subprocess
+import sys
+import os
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.launch.elastic import rebalance_domains
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_rebalance_domains_penalizes_stragglers():
+    servers = ["s0", "s1", "s2", "s3"]
+    tp = {"s0": 100.0, "s1": 100.0, "s2": 100.0, "s3": 10.0}   # s3 straggles
+    weighted = rebalance_domains(tp, servers)
+    assert weighted.count("s3") == 0          # below slack -> no domains
+    assert weighted.count("s0") >= 1
+
+
+def test_rebalance_domains_balanced_noop():
+    servers = ["a", "b"]
+    assert sorted(rebalance_domains({"a": 5.0, "b": 5.0}, servers)) == \
+        ["a", "b"]
+
+
+@pytest.mark.slow
+def test_elastic_restore_smaller_mesh_subprocess():
+    """Save on a (2,2) mesh, restore onto a degraded (1,2) mesh: values must
+    be identical (shards are keyed by logical path, not device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import get_config, reduced
+        from repro.core import BBConfig, BurstBufferSystem
+        from repro.checkpoint.bbckpt import BBCheckpointManager
+        from repro.launch.elastic import degraded_mesh, elastic_restore
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.sharding import RuleSet, use_rules
+        from repro.models.registry import build_model
+        from repro.runtime.train_step import (init_train_state,
+                                              make_optimizer)
+
+        cfg = reduced(get_config("h2o-danube-1.8b"))
+        model = build_model(cfg)
+        opt = make_optimizer(cfg)
+
+        mesh = make_host_mesh(data=2, model=2)
+        rules = RuleSet(mesh)
+        with mesh, use_rules(rules):
+            state = init_train_state(cfg, model, opt, jax.random.PRNGKey(0))
+
+        with BurstBufferSystem(BBConfig(num_servers=2, num_clients=2,
+                                        dram_capacity=64 << 20)) as bb:
+            mgr = BBCheckpointManager(bb, quantize=False)
+            ck = {"params": state.params, "opt_state": state.opt_state}
+            mgr.save(3, ck, blocking_flush=True)
+
+            small = degraded_mesh(total_hosts=4, lost_hosts=2, model_axis=2)
+            placed, step = elastic_restore(mgr, cfg, model, opt, small, ck)
+            assert step == 3
+            for a, b in zip(jax.tree.leaves(placed["params"]),
+                            jax.tree.leaves(state.params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            # restored arrays live on the degraded mesh
+            leaf = jax.tree.leaves(placed["params"])[0]
+            assert len(leaf.sharding.mesh.devices.ravel()) == 2
+        print("ELASTIC-OK")
+    """
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ELASTIC-OK" in out.stdout

@@ -1,0 +1,91 @@
+"""Property tests for data placement (paper §II/§V)."""
+import string
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import IsoPlacement, KetamaRing, RendezvousHash
+
+servers_st = st.lists(
+    st.text(string.ascii_lowercase + string.digits, min_size=3, max_size=8),
+    min_size=2, max_size=12, unique=True)
+keys_st = st.lists(st.text(string.printable, min_size=1, max_size=24),
+                   min_size=1, max_size=60, unique=True)
+
+
+@given(servers_st, keys_st)
+@settings(max_examples=50, deadline=None)
+def test_ketama_lookup_stable_and_valid(servers, keys):
+    ring = KetamaRing(servers)
+    for k in keys:
+        owner = ring.lookup(k)
+        assert owner in servers
+        assert ring.lookup(k) == owner          # deterministic
+
+
+@given(servers_st, keys_st)
+@settings(max_examples=50, deadline=None)
+def test_ketama_minimal_remap_on_removal(servers, keys):
+    """Removing one server only remaps keys it owned (consistent hashing)."""
+    ring = KetamaRing(servers)
+    before = {k: ring.lookup(k) for k in keys}
+    victim = servers[0]
+    ring.remove_server(victim)
+    for k, owner in before.items():
+        if owner != victim:
+            assert ring.lookup(k) == owner
+        else:
+            assert ring.lookup(k) != victim
+
+
+@given(servers_st, keys_st)
+@settings(max_examples=30, deadline=None)
+def test_ketama_remap_on_join_only_to_new(servers, keys):
+    ring = KetamaRing(servers)
+    before = {k: ring.lookup(k) for k in keys}
+    ring.add_server("zz-new-server")
+    for k, owner in before.items():
+        after = ring.lookup(k)
+        assert after == owner or after == "zz-new-server"
+
+
+@given(servers_st, st.integers(min_value=2, max_value=3), keys_st)
+@settings(max_examples=30, deadline=None)
+def test_ketama_successors_distinct(servers, n, keys):
+    ring = KetamaRing(servers)
+    n = min(n, len(servers))
+    for k in keys:
+        succ = ring.successors(k, n)
+        assert len(succ) == n
+        assert len(set(succ)) == n
+        assert succ[0] == ring.lookup(k)
+
+
+@given(servers_st, st.integers(min_value=0, max_value=1000))
+@settings(max_examples=50, deadline=None)
+def test_iso_pins_client_to_one_server(servers, client_idx):
+    iso = IsoPlacement(servers)
+    assert iso.lookup_for_client(client_idx) == \
+        servers[client_idx % len(servers)]
+
+
+@given(servers_st, keys_st)
+@settings(max_examples=50, deadline=None)
+def test_rendezvous_minimal_remap(servers, keys):
+    h = RendezvousHash(servers)
+    before = {k: h.lookup(k) for k in keys}
+    victim = servers[-1]
+    h.remove_server(victim)
+    for k, owner in before.items():
+        if owner != victim:
+            assert h.lookup(k) == owner
+
+
+def test_ketama_balance_rough():
+    """With vnodes, 8 servers should each own a non-trivial key share."""
+    servers = [f"server/{i}" for i in range(8)]
+    ring = KetamaRing(servers)
+    counts = {s: 0 for s in servers}
+    for i in range(4000):
+        counts[ring.lookup(f"key-{i}")] += 1
+    assert min(counts.values()) > 4000 / 8 / 4     # within 4x of fair share

@@ -1,0 +1,74 @@
+"""MoE dispatch properties: capacity drops, weight normalization, MTP."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models import moe
+from repro.models.common import init_tree
+
+
+def _cfg(**kw):
+    base = reduced(get_config("deepseek-v3-671b"))
+    return dataclasses.replace(base, **kw)
+
+
+def test_moe_outputs_finite_and_shaped():
+    cfg = _cfg(num_experts=8, top_k=2, d_ff_expert=32)
+    p = init_tree(moe.moe_descs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y = moe._apply_moe_dense(cfg, p, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_capacity_drops_are_graceful():
+    """With capacity_factor near zero most assignments drop; output must
+    shrink toward the shared-expert-only result, never NaN."""
+    cfg = _cfg(num_experts=8, top_k=2, d_ff_expert=32, capacity_factor=1e-6)
+    p = init_tree(moe.moe_descs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y = moe._apply_moe_dense(cfg, p, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # routed contribution mostly dropped -> ~= shared expert only
+    cfg_big = dataclasses.replace(cfg, capacity_factor=8.0)
+    y_full = moe._apply_moe_dense(cfg_big, p, x)
+    assert float(jnp.mean(jnp.abs(y))) <= float(jnp.mean(jnp.abs(y_full)))
+
+
+def test_moe_router_weights_normalized():
+    cfg = _cfg(num_experts=4, top_k=4, d_ff_expert=16, num_shared_experts=0,
+               capacity_factor=8.0)
+    p = init_tree(moe.moe_descs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    # identical experts -> output independent of routing (weights sum to 1)
+    w1 = jnp.broadcast_to(p["w_gate"][0], p["w_gate"].shape)
+    p2 = {**p, "w_gate": w1,
+          "w_up": jnp.broadcast_to(p["w_up"][0], p["w_up"].shape),
+          "w_down": jnp.broadcast_to(p["w_down"][0], p["w_down"].shape)}
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    y = moe._apply_moe_dense(cfg, p2, x)
+    # compare against a single dense expert MLP
+    from repro.models.common import activation
+    xt = x.reshape(-1, cfg.d_model)
+    g = xt @ p["w_gate"][0]
+    u = xt @ p["w_up"][0]
+    ref = (activation(cfg, g) * u) @ p["w_down"][0]
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, cfg.d_model),
+                               np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_mtp_forward_and_loss():
+    cfg = _cfg()
+    assert cfg.mtp_depth == 1
+    from repro.models import transformer
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    assert "mtp" in params
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab_size)
+    logits, mtp_logits = transformer.forward_with_mtp(cfg, params, tokens)
+    assert logits.shape[:2] == (2, 12)
+    assert mtp_logits.shape[:2] == (2, 11)         # predicts t+2
+    assert bool(jnp.all(jnp.isfinite(mtp_logits)))

@@ -1,0 +1,129 @@
+"""End-to-end behaviour of the burst buffer system (paper §II-§V):
+ingest, replication, two-phase flush byte-exactness, lookup-table reads,
+failure detection/recovery, ring join, overload redirect."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BBConfig, BurstBufferSystem
+
+
+@pytest.fixture()
+def bb4():
+    sys_ = BurstBufferSystem(BBConfig(
+        num_servers=4, num_clients=4, placement="iso",
+        dram_capacity=8 << 20, stabilize_interval=0.15)).start()
+    yield sys_
+    sys_.stop()
+
+
+def _write_shared_file(sys_, fname, per_client=4, seg=32 << 10, seed=0):
+    rng = np.random.default_rng(seed)
+    blobs = {}
+    for ci, c in enumerate(sys_.clients):
+        for j in range(per_client):
+            off = (ci * per_client + j) * seg
+            data = rng.integers(0, 256, seg, dtype=np.uint8).tobytes()
+            blobs[off] = data
+            assert c.put(f"{fname}:{off}", data, file=fname, offset=off)
+    return blobs, seg
+
+
+def test_put_get_replicated(bb4):
+    blobs, _ = _write_shared_file(bb4, "f0")
+    assert bb4.clients[0].get("f0:0") == blobs[0]
+    c = bb4.clients[1]
+    replicas = c.replica_set("f0:0")
+    assert len(replicas) == 2
+
+
+def test_two_phase_flush_byte_exact(bb4):
+    blobs, seg = _write_shared_file(bb4, "ckpt1")
+    assert bb4.flush(epoch=1, timeout=30)
+    path = os.path.join(bb4.pfs_dir, "ckpt1")
+    expect = b"".join(blobs[o] for o in sorted(blobs))
+    assert open(path, "rb").read() == expect
+
+
+def test_lookup_table_range_read_no_pfs(bb4):
+    blobs, seg = _write_shared_file(bb4, "ckpt2")
+    assert bb4.flush(epoch=2, timeout=30)
+    expect = b"".join(blobs[o] for o in sorted(blobs))
+    got = bb4.clients[2].read_file("ckpt2", seg + 7, 3 * seg)
+    assert got == expect[seg + 7: seg + 7 + 3 * seg]
+
+
+def test_failure_detection_and_replica_read(bb4):
+    blobs, seg = _write_shared_file(bb4, "f3")
+    victim = "server/1"
+    bb4.kill_server(victim)
+    deadline = time.monotonic() + 6
+    while time.monotonic() < deadline and victim not in bb4.manager.dead:
+        time.sleep(0.05)
+    assert victim in bb4.manager.dead, "stabilization did not detect failure"
+    off = 1 * 4 * (32 << 10)      # keys pinned to server/1 (iso, client 1)
+    got = bb4.clients[1].get(f"f3:{off}")
+    assert got == blobs[off], "replica read after failure failed"
+
+
+def test_client_timeout_confirm_failover(bb4):
+    _write_shared_file(bb4, "f4")
+    victim = "server/2"
+    bb4.kill_server(victim)
+    c = bb4.clients[2]            # pinned to the dead server
+    c.put_timeout = 0.8
+    assert c.put("f4:new", b"hello-after-failure")
+    assert c.stats["failovers"] >= 1
+    assert c.get("f4:new") == b"hello-after-failure"
+
+
+def test_server_join_ring_update(bb4):
+    name = bb4.join_server(pred="server/1")
+    time.sleep(0.6)
+    assert name in bb4.manager.ring
+    assert bb4.clients[0].put("f5:0", b"post-join", file="f5", offset=0)
+
+
+def test_overload_redirect_or_spill():
+    sys_ = BurstBufferSystem(BBConfig(
+        num_servers=3, num_clients=3, placement="iso",
+        dram_capacity=256 << 10, stabilize_interval=0.1)).start()
+    try:
+        time.sleep(0.5)           # let free-memory gossip propagate
+        c = sys_.clients[0]
+        for i in range(24):       # far beyond one server's DRAM
+            assert c.put(f"big:{i}", b"z" * (64 << 10))
+        stats = sys_.server_stats()
+        redirects = sum(s["redirects"] for s in stats.values())
+        spills = sum(s["spills"] for s in stats.values())
+        assert redirects + spills > 0, \
+            "expected overload handling (redirect or spill)"
+        for i in range(24):
+            assert c.get(f"big:{i}") == b"z" * (64 << 10)
+    finally:
+        sys_.stop()
+
+
+def test_ketama_placement_end_to_end():
+    sys_ = BurstBufferSystem(BBConfig(
+        num_servers=4, num_clients=2, placement="ketama",
+        dram_capacity=8 << 20)).start()
+    try:
+        rng = np.random.default_rng(1)
+        blobs = {}
+        for i in range(32):
+            data = rng.integers(0, 256, 8 << 10, dtype=np.uint8).tobytes()
+            blobs[i] = data
+            assert sys_.clients[i % 2].put(f"kk:{i * 8192}", data,
+                                           file="kk", offset=i * 8192)
+        assert sys_.flush(epoch=9, timeout=30)
+        expect = b"".join(blobs[i] for i in range(32))
+        path = os.path.join(sys_.pfs_dir, "kk")
+        assert open(path, "rb").read() == expect
+        stats = sys_.server_stats()
+        holders = [s for s, v in stats.items() if v["keys"] > 0]
+        assert len(holders) >= 3      # ketama spreads one client's keys
+    finally:
+        sys_.stop()

@@ -1,0 +1,88 @@
+"""Property tests for two-phase I/O planning (paper §III-B)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.twophase import (Segment, domains, file_sizes, owner_of,
+                                 plan_shuffle, split_segment)
+
+
+@st.composite
+def segment_layout(draw):
+    """Random non-overlapping segment layout of one file, possibly spread
+    over several source servers."""
+    n_seg = draw(st.integers(1, 20))
+    sizes = draw(st.lists(st.integers(1, 1 << 18), min_size=n_seg,
+                          max_size=n_seg))
+    n_src = draw(st.integers(1, 6))
+    offsets = np.cumsum([0] + sizes[:-1]).tolist()
+    segs = [Segment("f", o, s) for o, s in zip(offsets, sizes)]
+    owner = [draw(st.integers(0, n_src - 1)) for _ in segs]
+    return segs, owner, n_src
+
+
+@given(segment_layout(), st.integers(1, 9))
+@settings(max_examples=60, deadline=None)
+def test_domains_partition_exactly(layout, n_servers):
+    segs, _, _ = layout
+    size = file_sizes(segs)["f"]
+    servers = [f"s{i}" for i in range(n_servers)]
+    doms = domains(size, servers)
+    assert doms[0][1] == 0 and doms[-1][2] == size
+    for (s1, a1, b1), (s2, a2, b2) in zip(doms, doms[1:]):
+        assert b1 == a2                     # contiguous, no gaps/overlap
+    for _, a, b in doms:
+        assert a <= b
+
+
+@given(segment_layout(), st.integers(1, 9))
+@settings(max_examples=40, deadline=None)
+def test_split_segment_covers_exactly(layout, n_servers):
+    segs, _, _ = layout
+    size = file_sizes(segs)["f"]
+    doms = domains(size, [f"s{i}" for i in range(n_servers)])
+    for seg in segs:
+        pieces = split_segment(seg, doms)
+        total = sum(l for _, _, _, l in pieces)
+        assert total == seg.length
+        # pieces are contiguous in file space and land in the right domain
+        pos = seg.offset
+        for owner, file_off, local_off, length in pieces:
+            assert file_off == pos
+            assert local_off == pos - seg.offset
+            assert owner_of(file_off, doms) == owner
+            pos += length
+
+
+@given(segment_layout(), st.integers(1, 6), st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_shuffle_reassembles_exact_bytes(layout, n_servers, seed):
+    """End-to-end plan: scatter random bytes over sources, shuffle to domain
+    owners, reassemble — must equal the original file content."""
+    segs, owner, n_src = layout
+    rng = np.random.default_rng(seed % 2**32)
+    servers = [f"srv{i}" for i in range(n_servers)]
+    payload = {s: rng.integers(0, 256, s.length, dtype=np.uint8).tobytes()
+               for s in segs}
+    all_meta = {f"src{i}": [s for s, o in zip(segs, owner) if o == i]
+                for i in range(n_src)}
+    size = file_sizes(segs)["f"]
+    expect = bytearray(size)
+    for s in segs:
+        expect[s.offset:s.offset + s.length] = payload[s]
+
+    got = bytearray(size)
+    for i in range(n_src):
+        mine = all_meta[f"src{i}"]
+        sizes, doms, sends = plan_shuffle(mine, all_meta, servers)
+        assert sizes["f"] == size
+        for owner_srv, seg, file_off, local_off, length in sends:
+            got[file_off:file_off + length] = \
+                payload[seg][local_off:local_off + length]
+    assert bytes(got) == bytes(expect)
+
+
+def test_domains_stripe_aligned():
+    doms = domains(10 << 20, ["a", "b", "c"])
+    for _, a, _ in doms[1:]:
+        assert a % (1 << 20) == 0           # 1 MiB (Lustre stripe) aligned
