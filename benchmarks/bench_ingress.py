@@ -26,8 +26,13 @@ def run_sim():
 
 
 def _measure(placement: str, n_servers: int, n_clients: int,
-             per_client_mb: int = 8, seg_kb: int = 256) -> float:
-    """Aggregate real ingress bandwidth (B/s) through the implementation."""
+             per_client_mb: int = 8, seg_kb: int = 256,
+             mode: str = "sync") -> float:
+    """Aggregate real ingress bandwidth (B/s) through the implementation.
+
+    mode "sync" blocks on every replicated put; "async" pipelines puts
+    through the ACK ledger (paper Fig 4) and barriers once on wait_acks;
+    "batched" additionally coalesces puts into put_batch messages."""
     sys_ = BurstBufferSystem(BBConfig(
         num_servers=n_servers, num_clients=n_clients, placement=placement,
         dram_capacity=per_client_mb * n_clients * (1 << 20) + (16 << 20),
@@ -39,7 +44,18 @@ def _measure(placement: str, n_servers: int, n_clients: int,
         t0 = time.perf_counter()
         for j in range(nseg):
             for ci, c in enumerate(sys_.clients):
-                assert c.put(f"ing:{ci}:{j}", payload)
+                key = f"ing:{ci}:{j}"
+                if mode == "sync":
+                    if not c.put(key, payload):
+                        raise RuntimeError(f"sync put failed: {key}")
+                else:
+                    c.put_async(key, payload, coalesce=(mode == "batched"))
+        if mode != "sync":
+            for c in sys_.clients:
+                c.flush_batches()
+            for c in sys_.clients:
+                if not c.wait_acks(60.0):
+                    raise RuntimeError(f"{mode} ingest incomplete: {c.tname}")
         dt = time.perf_counter() - t0
         total = n_clients * nseg * seg
         return total / dt
@@ -54,6 +70,12 @@ def run_real(ns=(1, 2, 4, 8)):
         ket = _measure("ketama", n, n)
         rows.append({"servers": n, "bb_iso": iso, "bb_ketama": ket})
     return rows
+
+
+def run_modes(n: int = 4):
+    """Sync vs async vs batched ingest on the same topology (paper Fig 4)."""
+    return {mode: _measure("iso", n, n, mode=mode)
+            for mode in ("sync", "async", "batched")}
 
 
 def main(full: bool = True):
@@ -73,4 +95,9 @@ def main(full: bool = True):
             out.append((f"fig5_real_n{r['servers']}", 0.0,
                         "iso=%.0f ket=%.0f MB/s" % (
                             r["bb_iso"] / 1e6, r["bb_ketama"] / 1e6)))
+        modes = run_modes()
+        for mode, bw in modes.items():
+            out.append((f"fig4_ingress_{mode}", 0.0,
+                        "%.0f MB/s (%.2fx sync)" % (
+                            bw / 1e6, bw / modes["sync"])))
     return out

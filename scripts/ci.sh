@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the fast suite (slow markers excluded) under a hard timeout so
+# a hung distributed test can never wedge CI. Override with CI_TIMEOUT=secs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec timeout "${CI_TIMEOUT:-1800}" python -m pytest -q -m "not slow" "$@"

@@ -2,8 +2,9 @@
 
 This is the paper's checkpointing flow mapped onto a training loop:
   1. save(step, state): serialize the sharded train state into KV segments
-     and put() them into the burst buffer — the only part on the critical
-     path, bounded by BB ingress (DRAM write + replication ACK), not PFS.
+     and stream them into the burst buffer via the pipelined put_async /
+     wait_acks path (paper Fig 4) — the only part on the critical path,
+     bounded by BB ingress (DRAM write + replication ACK), not PFS.
   2. A background flush thread triggers the servers' two-phase I/O so the
      checkpoint drains to the PFS while the next compute phase runs.
   3. Recent epochs are retained in the buffer (paper §III-C) so restore()
@@ -34,18 +35,31 @@ class BBCheckpointManager:
     def __init__(self, system: BurstBufferSystem, *,
                  quantize: bool = False,
                  retention: int = 2,
-                 chunk_bytes: int = 4 << 20):
+                 chunk_bytes: int = 4 << 20,
+                 io_mode: str = "async",
+                 ack_timeout: float = 60.0):
         self.system = system
         self.quantize = quantize
         self.retention = retention
         self.chunk_bytes = chunk_bytes
+        self.io_mode = io_mode          # "async" | "batched" | "sync"
+        self.ack_timeout = ack_timeout
         self.saved_steps: List[int] = []
         self._flush_threads: List[threading.Thread] = []
         self.metrics: Dict[int, dict] = {}
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, state, *, blocking_flush: bool = False):
-        """Ingest the state into the burst buffer; flush to PFS off-path."""
+    def save(self, step: int, state, *, blocking_flush: bool = False,
+             io_mode: Optional[str] = None):
+        """Ingest the state into the burst buffer; flush to PFS off-path.
+
+        io_mode "async" (default) streams every chunk through put_async
+        across all clients and barriers on wait_acks — the paper Fig 4
+        pipeline, so ingest is bounded by BB ingress rather than the sum of
+        per-chunk replication round-trips. "batched" additionally coalesces
+        small chunks into put_batch messages. "sync" is the blocking
+        one-round-trip-per-chunk baseline."""
+        mode = io_mode or self.io_mode
         t0 = time.perf_counter()
         policy = ser.default_quant_policy if self.quantize else None
         payloads, manifest = ser.serialize_tree(state, policy)
@@ -61,16 +75,38 @@ class BBCheckpointManager:
             for off in range(0, max(len(data), 1), self.chunk_bytes):
                 piece = data[off:off + self.chunk_bytes]
                 c = clients[i % len(clients)]
-                ok = c.put(f"{fname}:{base + off}", piece,
-                           file=fname, offset=base + off)
-                if not ok:
-                    raise RuntimeError(f"burst buffer put failed: {name}")
+                key = f"{fname}:{base + off}"
+                if mode == "sync":
+                    if not c.put(key, piece, file=fname, offset=base + off):
+                        raise RuntimeError(
+                            f"burst buffer put failed: {name}")
+                else:
+                    # "batched": small pieces coalesce per the client's
+                    # auto threshold; large chunks stay individual puts so
+                    # they keep §III-A redirect-based load balancing.
+                    # "async": never coalesce.
+                    c.put_async(key, piece, file=fname, offset=base + off,
+                                coalesce=None if mode == "batched" else False)
                 i += 1
         mb = ser.manifest_bytes(manifest)
-        ok = clients[0].put(f"{fname}.manifest:0", mb,
-                            file=f"{fname}.manifest", offset=0)
-        if not ok:
-            raise RuntimeError("manifest put failed")
+        if mode == "sync":
+            if not clients[0].put(f"{fname}.manifest:0", mb,
+                                  file=f"{fname}.manifest", offset=0):
+                raise RuntimeError("manifest put failed")
+        else:
+            clients[0].put_async(f"{fname}.manifest:0", mb,
+                                 file=f"{fname}.manifest", offset=0,
+                                 coalesce=None if mode == "batched" else False)
+            # barrier: every client's ACK ledger must drain before the
+            # checkpoint counts as ingested (paper Fig 4 thread-2)
+            for c in clients:
+                c.flush_batches()
+            for c in clients:
+                if not c.wait_acks(self.ack_timeout):
+                    raise RuntimeError(
+                        f"async ingest incomplete: {c.tname} "
+                        f"outstanding={c.outstanding()} "
+                        f"failed={c.failed_keys()}")
         ingest_s = time.perf_counter() - t0
 
         self.saved_steps.append(step)

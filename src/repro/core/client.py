@@ -1,8 +1,14 @@
 """Burst buffer client (paper §II, §III, §IV-B): the compute-node-side API.
 
-put() is asynchronous and pipelined (paper Fig 4 thread-2 ACK management):
-values are sent immediately, outstanding keys sit in an ACK ledger, and
-``wait_acks`` drains it. The client handles:
+Three write paths:
+  - put():        blocking — one replicated round-trip per key
+  - put_async():  pipelined (paper Fig 4 thread-2 ACK management) — values
+                  are sent immediately, outstanding msg-ids sit in an ACK
+                  ledger, and ``wait_acks`` drains it out-of-band
+  - coalesced:    put_async with small values buffers them per destination
+                  and ships one ``put_batch`` message per server
+
+The client handles:
   - placement (Ketama / ISO / rendezvous)
   - overload redirects from servers (paper §III-A)
   - timeout -> predecessor failure confirmation -> manager report (§IV-B2)
@@ -11,6 +17,7 @@ values are sent immediately, outstanding keys sit in an ACK ledger, and
 """
 from __future__ import annotations
 
+import queue
 import threading
 import time
 from typing import Dict, List, Optional
@@ -20,11 +27,15 @@ from repro.core.transport import Message, Transport
 
 
 class BBClient:
+    MAX_ATTEMPTS = 6
+
     def __init__(self, name: str, transport: Transport, *,
                  client_index: int = 0,
                  placement: str = "iso",
                  replication: int = 2,
-                 put_timeout: float = 3.0):
+                 put_timeout: float = 3.0,
+                 batch_bytes: int = 1 << 20,
+                 coalesce_threshold: int = 64 << 10):
         self.tname = name
         self.transport = transport
         self.ep = transport.register(name)
@@ -32,13 +43,26 @@ class BBClient:
         self.placement_kind = placement
         self.replication = replication
         self.put_timeout = put_timeout
+        self.batch_bytes = batch_bytes
+        self.coalesce_threshold = coalesce_threshold
         self.ring: List[str] = []
         self.dead: set = set()
         self._placement = None
         self._overrides: Dict[str, str] = {}     # key -> redirected server
         self._lock = threading.Lock()
+        # --- ACK ledger (paper Fig 4 thread-2): outstanding async puts.
+        # msg_id -> entry; replies funnel into one completion queue.
+        self._ledger: Dict[int, dict] = {}
+        self._acks: "queue.Queue[Message]" = queue.Queue()
+        self._failed: List[str] = []             # keys that exhausted retries
+        self.last_failed: List[str] = []         # snapshot of the last cycle
+        self._last_reply: Dict[str, float] = {}  # server -> last-ack time
+        # --- write coalescing: target -> list of pending small put items
+        self._batch: Dict[str, List[dict]] = {}
+        self._batch_nbytes: Dict[str, int] = {}
         self.stats = {"puts": 0, "put_bytes": 0, "redirects": 0,
-                      "failovers": 0, "gets": 0, "bb_hits": 0}
+                      "failovers": 0, "gets": 0, "bb_hits": 0,
+                      "async_puts": 0, "batched_puts": 0, "batches": 0}
 
     # ------------------------------------------------------------ membership
     def connect(self, timeout: float = 10.0):
@@ -90,6 +114,8 @@ class BBClient:
         with self._lock:
             if key in self._overrides:
                 return self._overrides[key]
+            if not any(s not in self.dead for s in self.ring):
+                raise RuntimeError("no alive burst-buffer servers")
             if self.placement_kind == "iso":
                 return self._placement.lookup_for_client(self.client_index)
             return self._placement.lookup(key)
@@ -113,9 +139,12 @@ class BBClient:
         replicated ACK. (The async pipeline variant is put_async/wait_acks.)"""
         self.stats["puts"] += 1
         self.stats["put_bytes"] += len(value)
-        target = self.owner(key)
+        try:
+            target = self.owner(key)
+        except RuntimeError:
+            return False
         redirects = 0
-        for attempt in range(6):
+        for attempt in range(self.MAX_ATTEMPTS):
             r = self.transport.request(
                 self.ep, target, "put",
                 {"key": key, "value": value, "file": file, "offset": offset,
@@ -125,6 +154,8 @@ class BBClient:
                 timeout=self.put_timeout)
             if r is None:
                 target = self._handle_timeout(key, target)
+                if target is None:          # no alive servers left
+                    return False
                 continue
             if r.kind == "redirect":
                 self.stats["redirects"] += 1
@@ -137,9 +168,10 @@ class BBClient:
                 return True
         return False
 
-    def _handle_timeout(self, key: str, target: str) -> str:
+    def _handle_timeout(self, key: str, target: str) -> Optional[str]:
         """Paper §IV-B2: confirm failure via the suspect's predecessor, then
-        let the manager broadcast; fail over to the replica successor."""
+        let the manager broadcast; fail over to the replica successor.
+        Returns the failover target, or None when no alive server remains."""
         self.stats["failovers"] += 1
         with self._lock:
             alive = [s for s in self.ring if s not in self.dead]
@@ -155,13 +187,190 @@ class BBClient:
             self._rebuild_placement()
             self._overrides = {k: v for k, v in self._overrides.items()
                                if v != target}
+            if not any(s not in self.dead for s in self.ring):
+                return None
         return self.owner(key)
+
+    # ------------------------------------------------------- async put (Fig 4)
+    def put_async(self, key: str, value: bytes, *, file: Optional[str] = None,
+                  offset: int = 0, coalesce: Optional[bool] = None):
+        """Pipelined put (paper Fig 4): fire the value at its owner and
+        return immediately; the outstanding msg-id sits in the ACK ledger
+        until ``wait_acks`` drains it. Small values (below
+        ``coalesce_threshold``, or when ``coalesce=True``) are buffered and
+        shipped as one ``put_batch`` per destination server, bounding
+        per-message overhead for many-small-tensors checkpoint shapes."""
+        self.stats["puts"] += 1
+        self.stats["async_puts"] += 1
+        self.stats["put_bytes"] += len(value)
+        if coalesce is None:
+            coalesce = len(value) < self.coalesce_threshold
+        try:
+            target = self.owner(key)
+        except RuntimeError:
+            self._failed.append(key)        # surfaced by wait_acks
+            return
+        if coalesce:
+            self._enqueue_batch(target, {"key": key, "value": value,
+                                         "file": file, "offset": offset})
+        else:
+            self._issue(key, value, file, offset, target,
+                        redirects=0, attempts=0)
+
+    def _issue(self, key: str, value: bytes, file: Optional[str],
+               offset: int, target: str, redirects: int, attempts: int):
+        msg_id = self.transport.request_async(
+            self.ep, target, "put",
+            {"key": key, "value": value, "file": file, "offset": offset,
+             "redirectable": redirects < 2},
+            sink=self._acks)
+        self._ledger[msg_id] = {
+            "key": key, "value": value, "file": file, "offset": offset,
+            "target": target, "redirects": redirects, "attempts": attempts,
+            "deadline": time.monotonic() + self.put_timeout, "batch": None}
+
+    def _enqueue_batch(self, target: str, item: dict):
+        self._batch.setdefault(target, []).append(item)
+        nb = self._batch_nbytes.get(target, 0) + len(item["value"])
+        self._batch_nbytes[target] = nb
+        if nb >= self.batch_bytes:
+            self._flush_one_batch(target)
+
+    def flush_batches(self):
+        """Ship every pending coalesced batch (one put_batch per server)."""
+        for target in list(self._batch):
+            self._flush_one_batch(target)
+
+    def _flush_one_batch(self, target: str):
+        items = self._batch.pop(target, [])
+        self._batch_nbytes.pop(target, None)
+        if items:
+            self._issue_batch(items, target, attempts=0)
+
+    def _issue_batch(self, items: List[dict], target: str, attempts: int):
+        self.stats["batches"] += 1
+        self.stats["batched_puts"] += len(items)
+        msg_id = self.transport.request_async(
+            self.ep, target, "put_batch", {"items": items}, sink=self._acks)
+        self._ledger[msg_id] = {
+            "batch": items, "target": target, "attempts": attempts,
+            "deadline": time.monotonic() + self.put_timeout}
+
+    def wait_acks(self, timeout: float = 30.0) -> bool:
+        """Drain the ACK ledger (paper Fig 4 thread-2): process redirects by
+        re-issuing to the announced server, and expired entries by confirming
+        the suspect's failure through its predecessor and re-issuing to the
+        failover target. Returns True once every outstanding put (including
+        coalesced batches) is acknowledged; False on overall timeout or when
+        a put exhausts its retries."""
+        self.flush_batches()
+        deadline = time.monotonic() + timeout
+        next_scan = 0.0          # throttle O(ledger) deadline scans
+        while self._ledger:
+            now = time.monotonic()
+            if now > deadline:
+                return self._finish_wait(False)
+            try:
+                msg = self._acks.get(timeout=0.02)
+            except queue.Empty:
+                msg = None
+            while msg is not None:
+                self._on_ack(msg)
+                try:
+                    msg = self._acks.get_nowait()
+                except queue.Empty:
+                    msg = None
+            now = time.monotonic()
+            if now >= next_scan:
+                self._check_put_deadlines(now)
+                next_scan = now + 0.05
+        return self._finish_wait(True)
+
+    def _finish_wait(self, drained: bool) -> bool:
+        """Close out a drain cycle. On overall timeout the still-outstanding
+        entries are abandoned (cancelled and recorded as failed) so a failed
+        cycle can't poison the next checkpoint's barrier; the snapshot keeps
+        the failed keys inspectable via failed_keys()."""
+        if not drained:
+            for mid, e in list(self._ledger.items()):
+                self.transport.cancel_async(self.ep, mid)
+                items = e.get("batch")
+                if items:
+                    self._failed.extend(i["key"] for i in items)
+                else:
+                    self._failed.append(e["key"])
+            self._ledger.clear()
+        self.last_failed, self._failed = self._failed, []
+        return drained and not self.last_failed
+
+    def outstanding(self) -> int:
+        return len(self._ledger) + sum(len(v) for v in self._batch.values())
+
+    def failed_keys(self) -> List[str]:
+        """Keys that exhausted retries in the last wait_acks cycle."""
+        return list(self.last_failed)
+
+    def _on_ack(self, msg: Message):
+        entry = self._ledger.pop(msg.reply_to, None)
+        if entry is None:
+            return                          # late reply for a re-issued put
+        self._last_reply[entry["target"]] = time.monotonic()
+        if msg.kind in ("put_ack", "put_batch_ack"):
+            return
+        if msg.kind == "redirect":
+            self.stats["redirects"] += 1
+            target = msg.payload["target"]
+            with self._lock:
+                self._overrides[entry["key"]] = target
+            self._issue(entry["key"], entry["value"], entry["file"],
+                        entry["offset"], target,
+                        entry["redirects"] + 1, entry["attempts"] + 1)
+
+    def _check_put_deadlines(self, now: float):
+        # a deadline alone does not condemn a server: under pipelined load a
+        # healthy target may simply have a deep inbox. Expire an entry only
+        # when its server has ALSO acked nothing for a full put_timeout —
+        # i.e. the timeout judges per-server liveness, not per-message queue
+        # position. A dead server acks nothing, so real failures still fire.
+        expired = [mid for mid, e in self._ledger.items()
+                   if e["deadline"] < now
+                   and self._last_reply.get(e["target"], -1e9)
+                   + self.put_timeout < now]
+        for mid in expired:
+            e = self._ledger.pop(mid)
+            self.transport.cancel_async(self.ep, mid)
+            items = e.get("batch")
+            first_key = items[0]["key"] if items else e["key"]
+            failover = None
+            if e["attempts"] + 1 < self.MAX_ATTEMPTS:
+                failover = self._handle_timeout(first_key, e["target"])
+            if failover is None:        # retries exhausted or no servers left
+                if items:
+                    self._failed.extend(i["key"] for i in items)
+                else:
+                    self._failed.append(e["key"])
+                continue
+            if items:
+                # regroup by post-failover owners (ketama may split the batch)
+                groups: Dict[str, List[dict]] = {}
+                for it in items:
+                    groups.setdefault(self.owner(it["key"]), []).append(it)
+                for tgt, its in groups.items():
+                    self._issue_batch(its, tgt, e["attempts"] + 1)
+            else:
+                self._issue(e["key"], e["value"], e["file"], e["offset"],
+                            self.owner(e["key"]), e["redirects"],
+                            e["attempts"] + 1)
 
     # ------------------------------------------------------------------- get
     def get(self, key: str) -> Optional[bytes]:
         """Read back a buffered value, trying primary then replicas."""
         self.stats["gets"] += 1
-        for target in self.replica_set(key):
+        try:
+            replicas = self.replica_set(key)
+        except RuntimeError:
+            return None
+        for target in replicas:
             r = self.transport.request(self.ep, target, "get", {"key": key},
                                        timeout=1.0)
             if r is not None and r.payload.get("hit"):
@@ -170,7 +379,11 @@ class BBClient:
         return None
 
     def file_info(self, file: str):
-        for target in self.replica_set(file):
+        try:
+            replicas = self.replica_set(file)
+        except RuntimeError:
+            return None
+        for target in replicas:
             r = self.transport.request(self.ep, target, "file_info",
                                        {"file": file}, timeout=1.0)
             if r is not None and r.payload.get("size") is not None:

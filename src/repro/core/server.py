@@ -26,6 +26,31 @@ from repro.core.tiering import LogStore
 from repro.core.transport import Message, Transport
 
 
+def _merge_intervals(iv: List[List[int]]) -> List[List[int]]:
+    out: List[List[int]] = []
+    for lo, hi in sorted(iv):
+        if out and lo <= out[-1][1]:
+            out[-1][1] = max(out[-1][1], hi)
+        else:
+            out.append([lo, hi])
+    return out
+
+
+def _gaps(covered: List[List[int]], lo: int, hi: int) -> List[List[int]]:
+    """Sub-intervals of [lo, hi) not covered by the (merged) interval list."""
+    gaps = []
+    pos = lo
+    for a, b in covered:
+        if a > pos:
+            gaps.append([pos, min(a, hi)])
+        pos = max(pos, b)
+        if pos >= hi:
+            break
+    if pos < hi:
+        gaps.append([pos, hi])
+    return [g for g in gaps if g[0] < g[1]]
+
+
 class BBServer(threading.Thread):
     def __init__(self, name: str, transport: Transport, *,
                  dram_capacity: int = 64 << 20,
@@ -48,8 +73,10 @@ class BBServer(threading.Thread):
         self._stop = threading.Event()
         self._last_stab = 0.0
 
-        # replication bookkeeping: msg_id -> (client, acks_needed)
-        self._pending_primary: Dict[int, List] = {}
+        # replication bookkeeping, keyed by (client, msg_id) so a stray or
+        # colliding replica_ack can never satisfy an unrelated client's put:
+        # (client, msg_id) -> [client, acks_needed, original_msg]
+        self._pending_primary: Dict[tuple, List] = {}
         # segments buffered for flush: key -> Segment
         self._segments: Dict[str, twophase.Segment] = {}
         # flush state per epoch
@@ -58,8 +85,8 @@ class BBServer(threading.Thread):
         self.lookup_table: Dict[str, int] = {}
         # domain data received from shuffle: (file, offset) -> bytes
         self._domain_data: Dict[str, Dict[int, bytes]] = {}
-        self.stats = {"puts": 0, "redirects": 0, "spills": 0, "flushes": 0,
-                      "stabilize_repairs": 0}
+        self.stats = {"puts": 0, "batch_puts": 0, "redirects": 0, "spills": 0,
+                      "flushes": 0, "stabilize_repairs": 0}
         # async stabilization state
         self._inflight_pings: Dict[int, tuple] = {}   # nonce -> (peer, deadline)
         self._ping_misses: Dict[str, int] = {}
@@ -175,13 +202,42 @@ class BBServer(threading.Thread):
             chain = self.successors(self.replication - 1)
         if chain:
             nxt, rest = chain[0], chain[1:]
-            self._pending_primary[msg.msg_id] = [msg.src, len(chain), msg]
+            self._pending_primary[(msg.src, msg.msg_id)] = \
+                [msg.src, len(chain), msg]
             self.transport.send(self.tname, nxt, "replica_put", {
                 "key": key, "value": value, "chain": rest,
                 "primary": self.tname, "primary_msg": msg.msg_id,
+                "client": msg.src,
                 "file": p.get("file"), "offset": p.get("offset", 0)})
         else:
             self.transport.reply(self.tname, msg, "put_ack", {"key": key})
+
+    def _on_put_batch(self, msg: Message):
+        """Coalesced put (client write coalescing): store every segment in
+        one message, replicate the whole batch down the chain, ACK once.
+        Batches are never redirected — the store spills to SSD instead, so
+        the per-batch cost stays a single round-trip."""
+        items = msg.payload["items"]
+        self.stats["puts"] += len(items)
+        self.stats["batch_puts"] += 1
+        for it in items:
+            tier = self.store.put(it["key"], it["value"])
+            if tier == "ssd":
+                self.stats["spills"] += 1
+            if it.get("file") is not None:
+                self._segments[it["key"]] = twophase.Segment(
+                    it["file"], it["offset"], len(it["value"]))
+        chain = self.successors(self.replication - 1)
+        if chain:
+            nxt, rest = chain[0], chain[1:]
+            self._pending_primary[(msg.src, msg.msg_id)] = \
+                [msg.src, len(chain), msg]
+            self.transport.send(self.tname, nxt, "replica_put_batch", {
+                "items": items, "chain": rest, "primary": self.tname,
+                "primary_msg": msg.msg_id, "client": msg.src})
+        else:
+            self.transport.reply(self.tname, msg, "put_batch_ack",
+                                 {"count": len(items)})
 
     def _on_replica_put(self, msg: Message):
         p = msg.payload
@@ -193,19 +249,45 @@ class BBServer(threading.Thread):
             nxt, rest = p["chain"][0], p["chain"][1:]
             self.transport.send(self.tname, nxt, "replica_put",
                                 {**p, "chain": rest})
+        if p.get("primary_msg") is None:
+            return              # re-replication copy: nobody is waiting
         self.transport.send(self.tname, p["primary"], "replica_ack",
-                            {"primary_msg": p["primary_msg"], "key": p["key"]})
+                            {"primary_msg": p["primary_msg"],
+                             "client": p.get("client"), "key": p["key"]})
+
+    def _on_replica_put_batch(self, msg: Message):
+        p = msg.payload
+        for it in p["items"]:
+            self.store.put(it["key"], it["value"])
+            if it.get("file") is not None:
+                self._segments[it["key"]] = twophase.Segment(
+                    it["file"], it["offset"], len(it["value"]))
+        if p["chain"]:
+            nxt, rest = p["chain"][0], p["chain"][1:]
+            self.transport.send(self.tname, nxt, "replica_put_batch",
+                                {**p, "chain": rest})
+        self.transport.send(self.tname, p["primary"], "replica_ack",
+                            {"primary_msg": p["primary_msg"],
+                             "client": p.get("client"),
+                             "key": p["items"][0]["key"]})
 
     def _on_replica_ack(self, msg: Message):
-        entry = self._pending_primary.get(msg.payload["primary_msg"])
+        pm = msg.payload.get("primary_msg")
+        if pm is None:
+            return              # re-replication sentinel: not a client put
+        entry = self._pending_primary.get((msg.payload.get("client"), pm))
         if entry is None:
             return
         entry[1] -= 1
         if entry[1] <= 0:
             client, _, orig = self._pending_primary.pop(
-                msg.payload["primary_msg"])
-            self.transport.reply(self.tname, orig, "put_ack",
-                                 {"key": msg.payload["key"]})
+                (msg.payload.get("client"), pm))
+            if orig.kind == "put_batch":
+                self.transport.reply(self.tname, orig, "put_batch_ack",
+                                     {"count": len(orig.payload["items"])})
+            else:
+                self.transport.reply(self.tname, orig, "put_ack",
+                                     {"key": msg.payload["key"]})
 
     def _least_loaded_neighbor(self, need: int) -> Optional[str]:
         """Pick the neighbour with the most free DRAM (paper §III-A). Free-
@@ -239,21 +321,28 @@ class BBServer(threading.Thread):
         f, off, length = p["file"], p["offset"], p["length"]
         chunks = self._domain_data.get(f, {})
         buf = bytearray(length)
-        filled = 0
+        covered = []                        # [lo, hi) intervals, file space
         for base, data in chunks.items():
             lo = max(off, base)
             hi = min(off + length, base + len(data))
             if lo < hi:
                 buf[lo - off:hi - off] = data[lo - base:hi - base]
-                filled += hi - lo
+                covered.append([lo, hi])
+        covered = _merge_intervals(covered)
+        filled = sum(hi - lo for lo, hi in covered)
         if filled < length:
-            # fall back to PFS for anything not in the buffer
+            # fill only the gaps from the PFS — buffered chunks are at least
+            # as fresh as the durable copy and must not be clobbered
             path = os.path.join(self.pfs_dir, f)
             if os.path.exists(path):
                 with open(path, "rb") as fh:
                     fh.seek(off)
-                    buf = bytearray(fh.read(length))
-                    filled = len(buf)
+                    pfs = fh.read(length)
+                for lo, hi in _gaps(covered, off, off + len(pfs)):
+                    buf[lo - off:hi - off] = pfs[lo - off:hi - off]
+                    covered.append([lo, hi])
+                covered = _merge_intervals(covered)
+                filled = sum(hi - lo for lo, hi in covered)
         self.transport.reply(self.tname, msg, "range_ack",
                              {"data": bytes(buf), "complete": filled >= length})
 
@@ -360,41 +449,54 @@ class BBServer(threading.Thread):
         for key in self.store.keys():
             seg = self._segments.get(key)
             for peer in chain:
+                # primary_msg None is the "no client is waiting" sentinel:
+                # replicas store the copy but send no replica_ack, so these
+                # copies can never satisfy a pending client put
                 self.transport.send(self.tname, peer, "replica_put", {
                     "key": key, "value": self.store.get(key), "chain": [],
-                    "primary": self.tname, "primary_msg": -1,
+                    "primary": self.tname, "primary_msg": None,
+                    "client": None,
                     "file": seg.file if seg else None,
                     "offset": seg.offset if seg else 0})
 
     # two-phase flush --------------------------------------------------------
+    def _flush_state(self, epoch: int) -> dict:
+        """Per-epoch flush state. The ring is snapshotted ONCE, when the
+        epoch is first seen: shuffle planning and the PFS write must use the
+        same membership view, otherwise servers that observe a death or join
+        mid-flush compute different domain ownership and bytes get dropped
+        or double-written."""
+        return self._flush.setdefault(epoch, {
+            "meta": {}, "done": set(),
+            "ring": self.alive_ring(),
+            "expected": set(self.alive_ring())})
+
     def _on_flush_begin(self, msg: Message):
         """Phase 1: broadcast my segment metadata to every live server."""
         epoch = msg.payload["epoch"]
         metas = [(s.file, s.offset, s.length, k)
                  for k, s in self._segments.items()]
-        st = self._flush.setdefault(epoch, {
-            "meta": {}, "done": set(), "expected": set(self.alive_ring())})
-        for peer in self.alive_ring():
+        st = self._flush_state(epoch)
+        for peer in st["ring"]:
             self.transport.send(self.tname, peer, "flush_meta",
                                 {"epoch": epoch, "from": self.tname,
                                  "metas": metas})
 
     def _on_flush_meta(self, msg: Message):
         epoch = msg.payload["epoch"]
-        st = self._flush.setdefault(epoch, {
-            "meta": {}, "done": set(), "expected": set(self.alive_ring())})
+        st = self._flush_state(epoch)
         st["meta"][msg.payload["from"]] = msg.payload["metas"]
         if set(st["meta"]) >= st["expected"]:
             self._shuffle(epoch, st)
 
     def _shuffle(self, epoch: int, st: dict):
-        """Phase 2: ship segments to domain owners."""
+        """Phase 2: ship segments to domain owners (epoch ring snapshot)."""
         all_meta = {
             src: [twophase.Segment(f, o, l) for f, o, l, _ in metas]
             for src, metas in st["meta"].items()}
         mine = list(self._segments.values())
         sizes, doms, sends = twophase.plan_shuffle(
-            mine, all_meta, self.alive_ring())
+            mine, all_meta, st["ring"])
         self.lookup_table.update(sizes)
         key_of = {(s.file, s.offset): k for k, s in self._segments.items()}
         for owner, seg, file_off, local_off, length in sends:
@@ -403,7 +505,7 @@ class BBServer(threading.Thread):
             self.transport.send(self.tname, owner, "shuffle_data",
                                 {"epoch": epoch, "file": seg.file,
                                  "offset": file_off, "data": piece})
-        for peer in self.alive_ring():
+        for peer in st["ring"]:
             self.transport.send(self.tname, peer, "shuffle_done",
                                 {"epoch": epoch, "from": self.tname,
                                  "sizes": sizes})
@@ -414,21 +516,19 @@ class BBServer(threading.Thread):
 
     def _on_shuffle_done(self, msg: Message):
         epoch = msg.payload["epoch"]
-        st = self._flush.setdefault(epoch, {
-            "meta": {}, "done": set(), "expected": set(self.alive_ring())})
+        st = self._flush_state(epoch)
         st["done"].add(msg.payload["from"])
         self.lookup_table.update(msg.payload["sizes"])
         if st["done"] >= st["expected"]:
             self._write_pfs(epoch, st)
 
     def _write_pfs(self, epoch: int, st: dict):
-        """Phase 2b: one sequential write per owned file domain."""
+        """Phase 2b: one sequential write per owned file domain, with domain
+        ownership computed from the epoch's ring snapshot (see _flush_state)."""
         os.makedirs(self.pfs_dir, exist_ok=True)
-        ring = sorted(st["expected"] & set(self.alive_ring())) or \
-            self.alive_ring()
         written = 0
         for f, size in sorted(self.lookup_table.items()):
-            doms = twophase.domains(size, self.alive_ring())
+            doms = twophase.domains(size, st["ring"])
             my = [(a, b) for s, a, b in doms if s == self.tname]
             if not my:
                 continue

@@ -30,6 +30,9 @@ class BBConfig:
     ssd_dir: Optional[str] = None       # None -> tmpdir
     pfs_dir: Optional[str] = None       # None -> tmpdir
     stabilize_interval: float = 0.25
+    # async put pipeline (paper Fig 4) / client-side write coalescing
+    batch_bytes: int = 1 << 20          # flush a coalesced batch at this size
+    coalesce_threshold: int = 64 << 10  # put_async values below this batch
 
 
 class BurstBufferSystem:
@@ -54,7 +57,9 @@ class BurstBufferSystem:
                 stabilize_interval=cfg.stabilize_interval)
         self.clients: List[BBClient] = [
             BBClient(f"client/{i}", self.transport, client_index=i,
-                     placement=cfg.placement, replication=cfg.replication)
+                     placement=cfg.placement, replication=cfg.replication,
+                     batch_bytes=cfg.batch_bytes,
+                     coalesce_threshold=cfg.coalesce_threshold)
             for i in range(cfg.num_clients)]
 
     # ---------------------------------------------------------------- launch

@@ -41,8 +41,11 @@ class Endpoint:
 
     def deliver(self, msg: Message):
         if msg.reply_to is not None:
+            # pop, not get: one reply per request, and async requests have
+            # no other cleanup point — leaving entries behind would leak one
+            # per acked put on the hot ingest path
             with self._lock:
-                waiter = self._pending.get(msg.reply_to)
+                waiter = self._pending.pop(msg.reply_to, None)
             if waiter is not None:
                 waiter.put(msg)
                 return
@@ -108,6 +111,34 @@ class Transport:
             return msg_id                          # black hole
         ep.deliver(Message(kind, src, dst, payload, msg_id, reply_to))
         return msg_id
+
+    def request_async(self, src_ep: Endpoint, dst: str, kind: str,
+                      payload: Any = None,
+                      sink: Optional["queue.Queue[Message]"] = None) -> int:
+        """Non-blocking RPC (paper Fig 4 pipelining): fire the request and
+        return its msg_id immediately. The reply, when it arrives, is put on
+        ``sink`` — one queue may serve many outstanding requests, which is
+        exactly the client's ACK ledger. The caller owns deadline tracking;
+        abandon an id with ``cancel_async`` so a late reply falls through to
+        the regular inbox instead of a stale waiter."""
+        if sink is None:
+            sink = queue.Queue()
+        msg_id = next(self._ids)
+        with src_ep._lock:
+            src_ep._pending[msg_id] = sink
+        with self._lock:
+            ep = self._endpoints.get(dst)
+            dead = dst in self._dropped or src_ep.name in self._dropped
+            self.bytes_sent[src_ep.name] = \
+                self.bytes_sent.get(src_ep.name, 0) + self._size_of(payload)
+        if ep is not None and not dead:
+            ep.deliver(Message(kind, src_ep.name, dst, payload, msg_id))
+        return msg_id
+
+    def cancel_async(self, src_ep: Endpoint, msg_id: int):
+        """Stop routing the reply for an abandoned async request."""
+        with src_ep._lock:
+            src_ep._pending.pop(msg_id, None)
 
     def request(self, src_ep: Endpoint, dst: str, kind: str,
                 payload: Any = None, timeout: float = 2.0) -> Optional[Message]:

@@ -1,0 +1,49 @@
+"""Optional-hypothesis shim: property tests skip when hypothesis is absent.
+
+Test modules import ``given``, ``settings`` and ``st`` from here instead of
+hard-importing hypothesis (which is not part of the baked container image).
+With hypothesis installed this re-exports the real API unchanged. Without
+it, module-level strategy construction still works (``st.<anything>``
+returns an inert stand-in) and ``@given`` replaces the test with a skip —
+so every non-property test in the same file keeps running and the module
+always collects cleanly.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert stand-in accepted anywhere a strategy (or @st.composite
+        function) appears; any call or attribute access returns itself."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategies()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            _skipped.__module__ = fn.__module__
+            return _skipped
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

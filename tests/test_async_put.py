@@ -1,0 +1,301 @@
+"""Async pipelined put path (paper Fig 4): ACK-ledger drain under redirect,
+failover re-issue on a dropped primary, write coalescing; plus regression
+tests for the read_range gap merge, replication-ledger keying, the
+re-replication sentinel, and the flush ring snapshot."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BBConfig, BurstBufferSystem
+from repro.core.server import BBServer, _gaps, _merge_intervals
+from repro.core.transport import Message, Transport
+
+
+@pytest.fixture()
+def bb4():
+    sys_ = BurstBufferSystem(BBConfig(
+        num_servers=4, num_clients=4, placement="iso",
+        dram_capacity=8 << 20, stabilize_interval=0.15)).start()
+    yield sys_
+    sys_.stop()
+
+
+def _blob(rng, n=32 << 10):
+    return rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+
+
+# ------------------------------------------------------------ ledger basics
+
+def test_put_async_wait_acks_roundtrip(bb4):
+    rng = np.random.default_rng(0)
+    c = bb4.clients[0]
+    blobs = {f"a:{i}": _blob(rng) for i in range(12)}
+    for i, (k, v) in enumerate(blobs.items()):
+        c.put_async(k, v, file="fa", offset=i * (32 << 10), coalesce=False)
+    assert c.outstanding() == 12
+    assert c.wait_acks(15.0)
+    assert c.outstanding() == 0
+    for k, v in blobs.items():
+        assert c.get(k) == v
+
+
+def test_ledger_drain_under_redirect(bb4):
+    """A primary with no free DRAM redirects async puts; the ledger must
+    re-issue to the announced target and still drain completely."""
+    # client/0 is iso-pinned to server/0; make it always redirect
+    bb4.servers["server/0"].store.dram_capacity = 0
+    time.sleep(0.6)                        # let free-DRAM gossip propagate
+    rng = np.random.default_rng(1)
+    c = bb4.clients[0]
+    blobs = {f"r:{i}": _blob(rng, 64 << 10) for i in range(8)}
+    for k, v in blobs.items():
+        c.put_async(k, v, coalesce=False)
+    assert c.wait_acks(15.0)
+    assert c.stats["redirects"] >= 1
+    for k, v in blobs.items():
+        assert c.get(k) == v
+
+
+def test_failover_reissue_on_dropped_primary(bb4):
+    """Puts outstanding against a dead server must confirm the failure via
+    the predecessor and re-issue to the failover target (paper §IV-B2)."""
+    bb4.kill_server("server/2")
+    c = bb4.clients[2]                     # iso-pinned to the dead server
+    c.put_timeout = 0.8
+    c.put_async("fo:k", b"survives-failover", coalesce=False)
+    assert c.wait_acks(20.0)
+    assert c.stats["failovers"] >= 1
+    assert c.get("fo:k") == b"survives-failover"
+
+
+# -------------------------------------------------------------- coalescing
+
+def test_batched_puts_individually_gettable(bb4):
+    rng = np.random.default_rng(2)
+    c = bb4.clients[1]
+    blobs = {f"b:{i}": _blob(rng, 4 << 10) for i in range(40)}
+    for i, (k, v) in enumerate(blobs.items()):
+        c.put_async(k, v, file="fb", offset=i * (4 << 10))  # auto-coalesce
+    assert c.wait_acks(15.0)
+    assert c.stats["batches"] >= 1
+    assert c.stats["batched_puts"] == 40
+    for k, v in blobs.items():
+        assert c.get(k) == v
+    stats = bb4.server_stats()
+    assert sum(s["batch_puts"] for s in stats.values()) >= 1
+
+
+def test_batched_puts_flush_byte_exact(bb4):
+    """Segments recorded through put_batch must two-phase-flush exactly."""
+    rng = np.random.default_rng(3)
+    seg = 8 << 10
+    blobs = {}
+    for ci, c in enumerate(bb4.clients):
+        for j in range(4):
+            off = (ci * 4 + j) * seg
+            blobs[off] = _blob(rng, seg)
+            c.put_async(f"fc:{off}", blobs[off], file="fc", offset=off)
+    for c in bb4.clients:
+        c.flush_batches()
+    for c in bb4.clients:
+        assert c.wait_acks(15.0)
+    assert bb4.flush(epoch=21, timeout=30)
+    expect = b"".join(blobs[o] for o in sorted(blobs))
+    got = open(os.path.join(bb4.pfs_dir, "fc"), "rb").read()
+    assert got == expect
+
+
+def test_batch_replication_survives_primary_death(bb4):
+    """Batched values are chain-replicated: after the storing primary dies,
+    replicas must still serve every key."""
+    rng = np.random.default_rng(4)
+    c = bb4.clients[1]                     # iso-pinned to server/1
+    blobs = {f"br:{i}": _blob(rng, 4 << 10) for i in range(10)}
+    for k, v in blobs.items():
+        c.put_async(k, v)
+    c.flush_batches()
+    assert c.wait_acks(15.0)
+    bb4.kill_server("server/1")
+    time.sleep(1.0)                        # stabilization + ring updates
+    c.put_timeout = 0.8
+    for k, v in blobs.items():
+        assert c.get(k) == v
+
+
+# --------------------------------------------------- regression: read_range
+
+def test_interval_helpers():
+    assert _merge_intervals([[5, 9], [0, 3], [2, 6]]) == [[0, 9]]
+    assert _gaps([[2, 4], [6, 8]], 0, 10) == [[0, 2], [4, 6], [8, 10]]
+    assert _gaps([], 3, 7) == [[3, 7]]
+    assert _gaps([[0, 10]], 0, 10) == []
+
+
+def test_read_range_merges_pfs_into_gaps(tmp_path):
+    """Buffered chunks that only partially cover a range must be merged with
+    the PFS bytes, not clobbered by them (the buffer is fresher)."""
+    tr = Transport()
+    srv = BBServer("s0", tr, pfs_dir=str(tmp_path))
+    probe = tr.register("probe")
+    # PFS has stale 'B's; the buffer holds fresh 'A's for the first 100
+    with open(tmp_path / "f", "wb") as fh:
+        fh.write(b"B" * 300)
+    srv._domain_data["f"] = {0: b"A" * 100}
+    srv._on_read_range(Message("read_range", "probe", "s0",
+                               {"file": "f", "offset": 0, "length": 300},
+                               msg_id=1))
+    r = probe.recv(timeout=1.0)
+    assert r is not None and r.kind == "range_ack"
+    assert r.payload["complete"]
+    assert r.payload["data"] == b"A" * 100 + b"B" * 200
+    # a gap on both sides of a buffered chunk
+    srv._domain_data["f"] = {100: b"C" * 50}
+    srv._on_read_range(Message("read_range", "probe", "s0",
+                               {"file": "f", "offset": 50, "length": 200},
+                               msg_id=2))
+    r = probe.recv(timeout=1.0)
+    assert r.payload["data"] == b"B" * 50 + b"C" * 50 + b"B" * 100
+    assert r.payload["complete"]
+
+
+# ------------------------------------- regression: replication bookkeeping
+
+def _bare_server(tr, name="s0", ring=("s0", "s1")):
+    srv = BBServer(name, tr)
+    srv.ring = list(ring)
+    srv.alive = {s: True for s in ring}
+    return srv
+
+
+def test_replica_ack_requires_matching_client():
+    """A replica_ack for a colliding msg_id but a different client must not
+    prematurely ACK an unrelated put."""
+    tr = Transport()
+    srv = _bare_server(tr)
+    client_a = tr.register("client/a")
+    orig = Message("put", "client/a", "s0", {"key": "k", "value": b"v"},
+                   msg_id=7)
+    srv._pending_primary[("client/a", 7)] = ["client/a", 1, orig]
+    # stray ack: same msg_id, wrong client
+    srv._on_replica_ack(Message("replica_ack", "s1", "s0",
+                                {"primary_msg": 7, "client": "client/b",
+                                 "key": "k"}, msg_id=8))
+    assert ("client/a", 7) in srv._pending_primary
+    assert client_a.recv(timeout=0.05) is None
+    # matching ack completes the put
+    srv._on_replica_ack(Message("replica_ack", "s1", "s0",
+                                {"primary_msg": 7, "client": "client/a",
+                                 "key": "k"}, msg_id=9))
+    assert ("client/a", 7) not in srv._pending_primary
+    r = client_a.recv(timeout=1.0)
+    assert r is not None and r.kind == "put_ack"
+
+
+def test_re_replicate_sentinel_not_acked():
+    """Re-replication copies carry the primary_msg=None sentinel: the
+    receiving replica stores them but must not emit a replica_ack, and a
+    stray sentinel ack must be ignored by the primary."""
+    tr = Transport()
+    srv = _bare_server(tr, name="s1", ring=("s0", "s1"))
+    primary_inbox = tr.register("s0")
+    srv._on_replica_put(Message("replica_put", "s0", "s1", {
+        "key": "k", "value": b"v", "chain": [], "primary": "s0",
+        "primary_msg": None, "client": None, "file": None, "offset": 0},
+        msg_id=5))
+    assert srv.store.get("k") == b"v"
+    assert primary_inbox.recv(timeout=0.05) is None   # no ack sent
+    # and the primary side ignores sentinel acks outright
+    srv._pending_primary[("c", 1)] = ["c", 1, None]
+    srv._on_replica_ack(Message("replica_ack", "s0", "s1",
+                                {"primary_msg": None, "client": "c",
+                                 "key": "k"}, msg_id=6))
+    assert srv._pending_primary[("c", 1)][1] == 1     # untouched
+
+
+def test_re_replicate_restores_copies():
+    tr = Transport()
+    srv_a = _bare_server(tr, name="a", ring=("a", "b"))
+    srv_b = _bare_server(tr, name="b", ring=("a", "b"))
+    srv_a.store.put("k", b"v")
+    srv_a._re_replicate()
+    msg = srv_b.ep.recv(timeout=1.0)
+    assert msg is not None and msg.kind == "replica_put"
+    srv_b._dispatch(msg)
+    assert srv_b.store.get("k") == b"v"
+
+
+# ------------------------------------------ regression: flush ring snapshot
+
+def test_write_pfs_uses_flush_ring_snapshot(tmp_path):
+    """Domain ownership during the PFS write must come from the ring
+    snapshot taken at flush start, not the live membership view — otherwise
+    a death observed mid-flush silently re-partitions the file."""
+    tr = Transport()
+    manager = tr.register("manager")
+    srv = BBServer("a", tr, pfs_dir=str(tmp_path))
+    srv.ring = ["a", "b"]
+    srv.alive = {"a": True, "b": True}
+    size = 2 << 20
+    st = srv._flush_state(0)
+    assert st["ring"] == ["a", "b"]
+    srv.lookup_table["f"] = size
+    srv._domain_data["f"] = {0: b"x" * (1 << 20)}     # a's snapshot domain
+    # membership changes mid-flush: b is declared dead
+    srv.alive["b"] = False
+    srv._write_pfs(0, st)
+    done = manager.recv(timeout=1.0)
+    assert done is not None and done.kind == "flush_done"
+    # a wrote ONLY its snapshot domain [0, 1MiB), not the whole file as the
+    # live alive_ring() view would dictate
+    assert done.payload["bytes"] == 1 << 20
+    assert os.path.getsize(tmp_path / "f") == 1 << 20
+
+
+def test_all_servers_dead_degrades_cleanly():
+    """Total server loss: wait_acks reports failure instead of crashing in
+    placement lookup, and sync put/get degrade to False/None."""
+    sys_ = BurstBufferSystem(BBConfig(num_servers=2, num_clients=1,
+                                      dram_capacity=8 << 20)).start()
+    try:
+        c = sys_.clients[0]
+        sys_.kill_server("server/0")
+        sys_.kill_server("server/1")
+        c.put_timeout = 0.5
+        c.put_async("dead", b"y" * 1000, coalesce=False)
+        assert c.wait_acks(10.0) is False
+        assert c.failed_keys() == ["dead"]
+        assert c.put("dead2", b"z") is False
+        assert c.get("dead") is None
+    finally:
+        sys_.stop()
+
+
+# --------------------------------------------------- async checkpoint save
+
+def test_async_and_batched_checkpoint_roundtrip():
+    """restore() must be bit-identical through async- and batched-saved
+    checkpoints (the paper Fig 4 path under the checkpoint manager)."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.checkpoint.bbckpt import BBCheckpointManager
+
+    def tree(seed):
+        k = jax.random.PRNGKey(seed)
+        ks = jax.random.split(k, 2)
+        return {"w": jax.random.normal(ks[0], (128, 64), jnp.float32),
+                "b": jax.random.normal(ks[1], (64,), jnp.float32),
+                "step": jnp.asarray(seed, jnp.int32)}
+
+    with BurstBufferSystem(BBConfig(num_servers=4, num_clients=4,
+                                    dram_capacity=64 << 20)) as bb:
+        for step, mode in ((1, "async"), (2, "batched")):
+            mgr = BBCheckpointManager(bb, io_mode=mode,
+                                      chunk_bytes=16 << 10)
+            t = tree(step)
+            mgr.save(step, t, blocking_flush=True)
+            restored, got_step = mgr.restore(tree(99), step=step)
+            assert got_step == step
+            for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(t)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

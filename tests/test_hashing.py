@@ -2,7 +2,7 @@
 import string
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.hashing import IsoPlacement, KetamaRing, RendezvousHash
 

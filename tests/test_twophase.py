@@ -1,7 +1,7 @@
 """Property tests for two-phase I/O planning (paper §III-B)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.twophase import (Segment, domains, file_sizes, owner_of,
                                  plan_shuffle, split_segment)
