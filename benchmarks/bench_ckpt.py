@@ -7,9 +7,10 @@ applied to training): per-checkpoint stall on the training critical path.
   bb_int8     — ingest with device-side int8 quantization of optimizer
                 moments (kernels/quantize): ~half the ingested bytes
 
-Plus an ingest-mode comparison on the same state (paper Fig 4):
-  sync        — blocking put(): one replicated round-trip per chunk
-  async       — put_async/wait_acks: puts pipelined, ACK ledger drained once
+Plus an ingest-mode comparison on the same state (paper Fig 4), expressed
+as BBFile write policies on one fs handle:
+  sync        — one replicated round-trip per chunk (blocking)
+  async       — chunks pipelined through the ACK ledger, one sync() barrier
   batched     — async + client-side write coalescing into put_batch
 
 Derived columns: stall relative to direct PFS; ingest bandwidth per mode.
@@ -79,11 +80,12 @@ def run():
         bytes_q = mgr_q.metrics[3]["bytes"]
 
         # ingest-mode comparison (paper Fig 4): the SAME serialized chunks
-        # through the three put paths. Serialization happens once, outside
-        # the timed region — this measures pure BB absorption. 64 KB chunks
-        # model the many-small-tensors checkpoint shape the write-coalescing
-        # path targets (per-message overhead dominates). Best of 3 reps per
-        # mode to damp scheduler noise.
+        # through the three write policies of one BBFile handle.
+        # Serialization happens once, outside the timed region — this
+        # measures pure BB absorption. 64 KB chunks model the
+        # many-small-tensors checkpoint shape the write-coalescing policy
+        # targets (per-message overhead dominates). Best of 3 reps per mode
+        # to damp scheduler noise.
         payloads, manifest = ser.serialize_tree(state)
         offset_of = {m["name"]: m["offset"] for m in manifest["leaves"]}
         chunk = 64 << 10
@@ -93,29 +95,17 @@ def run():
             for off in range(0, max(len(data), 1), chunk):
                 chunks.append((base + off, data[off:off + chunk]))
         total = sum(len(p) for _, p in chunks)
-        clients = bb.clients
+        fs = bb.fs()
         modes = {}
         for mode in ("sync", "async", "batched"):
             best = 0.0
             for rep in range(3):
                 fname = f"ing_{mode}_{rep}"
                 t0 = time.perf_counter()
-                for i, (off, piece) in enumerate(chunks):
-                    c = clients[i % len(clients)]
-                    key = f"{fname}:{off}"
-                    if mode == "sync":
-                        if not c.put(key, piece, file=fname, offset=off):
-                            raise RuntimeError(f"sync put failed: {key}")
-                    else:
-                        c.put_async(key, piece, file=fname, offset=off,
-                                    coalesce=(mode == "batched"))
-                if mode != "sync":
-                    for c in clients:
-                        c.flush_batches()
-                    for c in clients:
-                        if not c.wait_acks(60.0):
-                            raise RuntimeError(
-                                f"{mode} ingest incomplete: {c.tname}")
+                f = fs.open(fname, "w", policy=mode, chunk_bytes=chunk)
+                for off, piece in chunks:
+                    f.pwrite(piece, off)
+                f.close(60.0)       # sync barrier; raises on failed chunks
                 dt = time.perf_counter() - t0
                 best = max(best, total / dt)
                 bb.evict(fname)

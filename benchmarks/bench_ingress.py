@@ -7,9 +7,20 @@ Two parts:
   run_real(): the actual threaded implementation at container scale
               (1..8 servers, real bytes through transport + LogStore),
               checking the ORDERING (iso >= ketama) on real code.
+
+Ingest goes through the BBFileSystem file-session API (one handle, chunks
+striped over clients; mode selects the sync/async/batched write policy).
+``--legacy-kv`` keeps the raw put/put_async KV path alive for A/B
+comparison against the handle-based path.
+
+CLI:
+  python -m benchmarks.bench_ingress               # full table (fs API)
+  python -m benchmarks.bench_ingress --legacy-kv   # A/B: raw KV shims
+  python -m benchmarks.bench_ingress --smoke       # tiny CI smoke run
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -27,12 +38,14 @@ def run_sim():
 
 def _measure(placement: str, n_servers: int, n_clients: int,
              per_client_mb: int = 8, seg_kb: int = 256,
-             mode: str = "sync") -> float:
+             mode: str = "sync", legacy_kv: bool = False) -> float:
     """Aggregate real ingress bandwidth (B/s) through the implementation.
 
-    mode "sync" blocks on every replicated put; "async" pipelines puts
-    through the ACK ledger (paper Fig 4) and barriers once on wait_acks;
-    "batched" additionally coalesces puts into put_batch messages."""
+    mode is the BBFile write policy: "sync" blocks on every replicated
+    chunk; "async" pipelines chunks through the ACK ledger and barriers
+    once at sync(); "batched" additionally coalesces chunks into put_batch
+    messages. With legacy_kv=True the same bytes go through the raw
+    put/put_async compat shims instead of a file handle."""
     sys_ = BurstBufferSystem(BBConfig(
         num_servers=n_servers, num_clients=n_clients, placement=placement,
         dram_capacity=per_client_mb * n_clients * (1 << 20) + (16 << 20),
@@ -41,44 +54,59 @@ def _measure(placement: str, n_servers: int, n_clients: int,
         seg = seg_kb << 10
         nseg = (per_client_mb << 20) // seg
         payload = b"\xab" * seg
-        t0 = time.perf_counter()
-        for j in range(nseg):
-            for ci, c in enumerate(sys_.clients):
-                key = f"ing:{ci}:{j}"
-                if mode == "sync":
-                    if not c.put(key, payload):
-                        raise RuntimeError(f"sync put failed: {key}")
-                else:
-                    c.put_async(key, payload, coalesce=(mode == "batched"))
-        if mode != "sync":
-            for c in sys_.clients:
-                c.flush_batches()
-            for c in sys_.clients:
-                if not c.wait_acks(60.0):
-                    raise RuntimeError(f"{mode} ingest incomplete: {c.tname}")
-        dt = time.perf_counter() - t0
         total = n_clients * nseg * seg
-        return total / dt
+        if legacy_kv:
+            t0 = time.perf_counter()
+            for j in range(nseg):
+                for ci, c in enumerate(sys_.clients):
+                    key = f"ing:{ci}:{j}"
+                    if mode == "sync":
+                        if not c.put(key, payload):
+                            raise RuntimeError(f"sync put failed: {key}")
+                    else:
+                        c.put_async(key, payload,
+                                    coalesce=(mode == "batched"))
+            if mode != "sync":
+                for c in sys_.clients:
+                    c.flush_batches()
+                for c in sys_.clients:
+                    if not c.wait_acks(60.0):
+                        raise RuntimeError(
+                            f"{mode} ingest incomplete: {c.tname}")
+            return total / (time.perf_counter() - t0)
+        fs = sys_.fs()
+        t0 = time.perf_counter()
+        f = fs.open("ing", "w", policy=mode, chunk_bytes=seg)
+        for j in range(nseg * n_clients):
+            f.pwrite(payload, j * seg)
+        f.close(60.0)           # sync barrier; raises on failed chunks
+        return total / (time.perf_counter() - t0)
     finally:
         sys_.stop()
 
 
-def run_real(ns=(1, 2, 4, 8)):
+def run_real(ns=(1, 2, 4, 8), legacy_kv: bool = False):
     rows = []
     for n in ns:
-        iso = _measure("iso", n, n)
-        ket = _measure("ketama", n, n)
+        iso = _measure("iso", n, n, legacy_kv=legacy_kv)
+        ket = _measure("ketama", n, n, legacy_kv=legacy_kv)
         rows.append({"servers": n, "bb_iso": iso, "bb_ketama": ket})
     return rows
 
 
-def run_modes(n: int = 4):
+def run_modes(n: int = 4, legacy_kv: bool = False):
     """Sync vs async vs batched ingest on the same topology (paper Fig 4)."""
-    return {mode: _measure("iso", n, n, mode=mode)
+    return {mode: _measure("iso", n, n, mode=mode, legacy_kv=legacy_kv)
             for mode in ("sync", "async", "batched")}
 
 
-def main(full: bool = True):
+def run_smoke() -> float:
+    """CI smoke: tiny batched ingest through the fs API; returns B/s and
+    raises if the pipeline reports failures (f.close() is the barrier)."""
+    return _measure("iso", 2, 2, per_client_mb=1, seg_kb=64, mode="batched")
+
+
+def main(full: bool = True, legacy_kv: bool = False):
     out = []
     rows, iso_sf, iso_sfp = run_sim()
     for r in rows:
@@ -91,13 +119,32 @@ def main(full: bool = True):
     out.append(("fig5_mean_iso_over_sfp", 0.0,
                 f"{iso_sfp:.3f}x (paper 1.75x)"))
     if full:
-        for r in run_real():
+        api = "kv" if legacy_kv else "fs"
+        for r in run_real(legacy_kv=legacy_kv):
             out.append((f"fig5_real_n{r['servers']}", 0.0,
-                        "iso=%.0f ket=%.0f MB/s" % (
-                            r["bb_iso"] / 1e6, r["bb_ketama"] / 1e6)))
-        modes = run_modes()
+                        "iso=%.0f ket=%.0f MB/s (%s)" % (
+                            r["bb_iso"] / 1e6, r["bb_ketama"] / 1e6, api)))
+        modes = run_modes(legacy_kv=legacy_kv)
         for mode, bw in modes.items():
             out.append((f"fig4_ingress_{mode}", 0.0,
-                        "%.0f MB/s (%.2fx sync)" % (
-                            bw / 1e6, bw / modes["sync"])))
+                        "%.0f MB/s (%.2fx sync, %s)" % (
+                            bw / 1e6, bw / modes["sync"], api)))
     return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--legacy-kv", action="store_true",
+                    help="drive ingest through the raw put/put_async shims "
+                         "instead of BBFileSystem handles (A/B comparison)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI smoke run: assert non-zero bandwidth")
+    args = ap.parse_args()
+    if args.smoke:
+        bw = run_smoke()
+        assert bw > 0, "smoke ingest produced zero bandwidth"
+        print(f"bench_smoke_ingress,0.0,{bw / 1e6:.1f} MB/s OK")
+    else:
+        print("name,us_per_call,derived")
+        for name, us, derived in main(legacy_kv=args.legacy_kv):
+            print(f"{name},{us:.1f},{derived}")

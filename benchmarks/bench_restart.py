@@ -1,7 +1,8 @@
 """§III-C reproduction: restart latency — burst buffer vs PFS.
 
-Writes a checkpoint through the system, flushes, then measures
-  bb_dram    — client.get() of buffered KV pairs (server DRAM)
+Writes a checkpoint through a BBFileSystem handle, flushes, then measures
+  bb_dram    — BBFile.pread of buffered chunks (server DRAM, manifest-
+               directed fetches)
   bb_range   — lookup-table range reads (post-shuffle domains, no PFS)
   pfs        — cold-ish file read from the PFS directory
 The paper's claim: recent checkpoints are retrievable without touching the
@@ -24,16 +25,17 @@ def run(total_mb=32, seg_kb=256):
         seg = seg_kb << 10
         n = (total_mb << 20) // seg
         rng = np.random.default_rng(0)
-        for i in range(n):
-            data = rng.integers(0, 256, seg, dtype=np.uint8).tobytes()
-            c = sys_.clients[i % 4]
-            assert c.put(f"rst:{i * seg}", data, file="rst", offset=i * seg)
+        fs = sys_.fs()
+        with fs.open("rst", "w", policy="sync", chunk_bytes=seg) as f:
+            for i in range(n):
+                f.write(rng.integers(0, 256, seg, dtype=np.uint8).tobytes())
         assert sys_.flush(epoch=0, timeout=60)
 
         c = sys_.clients[0]
+        r = fs.open("rst", "r")
         t0 = time.perf_counter()
         for i in range(n):
-            assert sys_.clients[i % 4].get(f"rst:{i * seg}") is not None
+            assert len(r.pread(i * seg, seg)) == seg
         t_dram = time.perf_counter() - t0
 
         t0 = time.perf_counter()

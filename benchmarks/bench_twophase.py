@@ -24,11 +24,10 @@ from repro.core.twophase import Segment, domains, file_sizes
 def _fill(sys_, fname, n_seg_per_client=16, seg=64 << 10):
     rng = np.random.default_rng(3)
     n = len(sys_.clients)
-    for j in range(n_seg_per_client):
-        for ci, c in enumerate(sys_.clients):
-            off = (j * n + ci) * seg          # interleaved ownership
-            data = rng.integers(0, 256, seg, dtype=np.uint8).tobytes()
-            assert c.put(f"{fname}:{off}", data, file=fname, offset=off)
+    with sys_.fs().open(fname, "w", policy="sync", chunk_bytes=seg) as f:
+        for j in range(n_seg_per_client * n):
+            # the handle round-robins clients, so ownership interleaves
+            f.write(rng.integers(0, 256, seg, dtype=np.uint8).tobytes())
     return n_seg_per_client * n * seg
 
 

@@ -1,7 +1,17 @@
 #!/usr/bin/env bash
 # Tier-1 CI: the fast suite (slow markers excluded) under a hard timeout so
 # a hung distributed test can never wedge CI. Override with CI_TIMEOUT=secs.
+#
+#   scripts/ci.sh                # tier-1 test suite
+#   scripts/ci.sh --bench-smoke  # tiny ingest benchmark through the
+#                                # BBFileSystem API; fails on zero bandwidth
 set -euo pipefail
 cd "$(dirname "$0")/.."
-export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    shift
+    exec timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_ingress --smoke "$@"
+fi
+
 exec timeout "${CI_TIMEOUT:-1800}" python -m pytest -q -m "not slow" "$@"

@@ -1,31 +1,35 @@
 """BBCheckpointManager: async burst-buffer checkpointing for JAX training.
 
-This is the paper's checkpointing flow mapped onto a training loop:
-  1. save(step, state): serialize the sharded train state into KV segments
-     and stream them into the burst buffer via the pipelined put_async /
-     wait_acks path (paper Fig 4) — the only part on the critical path,
-     bounded by BB ingress (DRAM write + replication ACK), not PFS.
+This is the paper's checkpointing flow mapped onto a training loop, written
+entirely against the BBFileSystem file-session API:
+  1. save(step, state): serialize the sharded train state and pwrite it
+     through a BBFile handle. The handle stripes chunks across clients and
+     the client write pipeline (paper Fig 4) carries them; close() is the
+     sync barrier and raises BBWriteError if any chunk failed — ingest is
+     the only part on the training critical path, bounded by BB ingress
+     (DRAM write + replication ACK), not the PFS.
   2. A background flush thread triggers the servers' two-phase I/O so the
      checkpoint drains to the PFS while the next compute phase runs.
   3. Recent epochs are retained in the buffer (paper §III-C) so restore()
      is served from server DRAM/SSD without touching the PFS; older epochs
      are evicted once durably flushed.
-  4. restore() falls back: BB get -> BB lookup-table range read -> PFS file.
+  4. restore() reads through BBFile.pread, which itself falls back:
+     buffered chunks -> BB lookup-table range read -> PFS file.
+
+io_mode maps directly onto BBFile write policies: "sync" (one replicated
+round-trip per chunk), "async" (pipelined, barrier at close), "batched"
+(async + write coalescing into put_batch messages).
 
 On a multi-host pod each host runs one client pinned (ISO placement) to the
 co-located server, and puts only its addressable shards; here one process
-plays all clients round-robin.
+plays all clients round-robin (the BBFile handle does this internally).
 """
 from __future__ import annotations
 
-import json
 import os
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
-
-import jax
-import numpy as np
+from typing import Dict, List, Optional
 
 from repro.checkpoint import serializer as ser
 from repro.core.system import BurstBufferSystem
@@ -53,60 +57,31 @@ class BBCheckpointManager:
              io_mode: Optional[str] = None):
         """Ingest the state into the burst buffer; flush to PFS off-path.
 
-        io_mode "async" (default) streams every chunk through put_async
-        across all clients and barriers on wait_acks — the paper Fig 4
-        pipeline, so ingest is bounded by BB ingress rather than the sum of
-        per-chunk replication round-trips. "batched" additionally coalesces
-        small chunks into put_batch messages. "sync" is the blocking
-        one-round-trip-per-chunk baseline."""
+        Serialized leaves are pwritten at their manifest offsets through one
+        BBFile handle per artifact (data + manifest); close() is the ingest
+        barrier and raises if any chunk failed to achieve a replicated ACK.
+        """
         mode = io_mode or self.io_mode
         t0 = time.perf_counter()
         policy = ser.default_quant_policy if self.quantize else None
         payloads, manifest = ser.serialize_tree(state, policy)
         fname = f"ckpt_{step:08d}"
-        clients = self.system.clients
         offset_of = {m["name"]: m["offset"] for m in manifest["leaves"]}
 
-        i = 0
+        fs = self.system.fs()
+        f = fs.open(fname, "w", policy=mode, chunk_bytes=self.chunk_bytes)
         for name, data in payloads.items():
-            base = offset_of[name]
-            # chunk large leaves so segments stay transport-friendly and
-            # spread over servers (ketama) / pipeline nicely (iso)
-            for off in range(0, max(len(data), 1), self.chunk_bytes):
-                piece = data[off:off + self.chunk_bytes]
-                c = clients[i % len(clients)]
-                key = f"{fname}:{base + off}"
-                if mode == "sync":
-                    if not c.put(key, piece, file=fname, offset=base + off):
-                        raise RuntimeError(
-                            f"burst buffer put failed: {name}")
-                else:
-                    # "batched": small pieces coalesce per the client's
-                    # auto threshold; large chunks stay individual puts so
-                    # they keep §III-A redirect-based load balancing.
-                    # "async": never coalesce.
-                    c.put_async(key, piece, file=fname, offset=base + off,
-                                coalesce=None if mode == "batched" else False)
-                i += 1
-        mb = ser.manifest_bytes(manifest)
-        if mode == "sync":
-            if not clients[0].put(f"{fname}.manifest:0", mb,
-                                  file=f"{fname}.manifest", offset=0):
-                raise RuntimeError("manifest put failed")
-        else:
-            clients[0].put_async(f"{fname}.manifest:0", mb,
-                                 file=f"{fname}.manifest", offset=0,
-                                 coalesce=None if mode == "batched" else False)
-            # barrier: every client's ACK ledger must drain before the
-            # checkpoint counts as ingested (paper Fig 4 thread-2)
-            for c in clients:
-                c.flush_batches()
-            for c in clients:
-                if not c.wait_acks(self.ack_timeout):
-                    raise RuntimeError(
-                        f"async ingest incomplete: {c.tname} "
-                        f"outstanding={c.outstanding()} "
-                        f"failed={c.failed_keys()}")
+            f.pwrite(data, offset_of[name])
+        mf = fs.open(f"{fname}.manifest", "w", policy=mode)
+        mf.write(ser.manifest_bytes(manifest))
+        # barrier: both handles' write pipelines must drain before the
+        # checkpoint counts as ingested (paper Fig 4 thread-2); the manifest
+        # barrier must run even when the data barrier raises, or its failed
+        # ops would leak into the next save's drain cycle
+        try:
+            f.close(self.ack_timeout)
+        finally:
+            mf.close(self.ack_timeout)
         ingest_s = time.perf_counter() - t0
 
         self.saved_steps.append(step)
@@ -156,48 +131,20 @@ class BBCheckpointManager:
 
     def restore(self, target_state, step: Optional[int] = None):
         """Rebuild a train state. target_state provides structure/shapes
-        (e.g. a freshly-initialized state)."""
+        (e.g. a freshly-initialized state). All reads go through BBFile
+        handles, whose pread already prefers buffered chunks, then the
+        lookup table, then the PFS."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError("no checkpoint found")
         fname = f"ckpt_{step:08d}"
-        client = self.system.clients[0]
+        fs = self.system.fs()
 
-        mb = client.get(f"{fname}.manifest:0")
-        if mb is None:
-            mb = self._read_fallback(client, f"{fname}.manifest", 0, None)
-        manifest = ser.manifest_from_bytes(bytes(mb))
-
+        with fs.open(f"{fname}.manifest", "r") as mf:
+            manifest = ser.manifest_from_bytes(mf.read())
         payloads: Dict[str, bytes] = {}
-        for meta in manifest["leaves"]:
-            data = self._read_segment(client, fname, meta["offset"],
-                                      meta["nbytes"])
-            payloads[meta["name"]] = data
+        with fs.open(fname, "r") as f:
+            for meta in manifest["leaves"]:
+                payloads[meta["name"]] = f.pread(meta["offset"],
+                                                 meta["nbytes"])
         return ser.deserialize_tree(target_state, payloads, manifest), step
-
-    def _read_segment(self, client, fname: str, offset: int, nbytes: int
-                      ) -> bytes:
-        # fast path: buffered KV pieces (chunked on save)
-        out = bytearray()
-        got_all = True
-        for off in range(offset, offset + max(nbytes, 1), self.chunk_bytes):
-            piece = client.get(f"{fname}:{off}")
-            if piece is None:
-                got_all = False
-                break
-            out += piece
-        if got_all and len(out) >= nbytes:
-            return bytes(out[:nbytes])
-        # lookup-table range read (post-shuffle, still no PFS)
-        data = client.read_file(fname, offset, nbytes)
-        if data is not None:
-            return data
-        # durable PFS fallback
-        return self._read_fallback(client, fname, offset, nbytes)
-
-    def _read_fallback(self, client, fname: str, offset: int,
-                       nbytes: Optional[int]) -> bytes:
-        path = os.path.join(self.system.pfs_dir, fname)
-        with open(path, "rb") as f:
-            f.seek(offset)
-            return f.read(nbytes if nbytes is not None else -1)

@@ -5,6 +5,8 @@
 # restart-from-buffer support. See DESIGN.md for the TPU/JAX adaptation.
 from repro.core.system import BBConfig, BurstBufferSystem  # noqa: F401
 from repro.core.client import BBClient                     # noqa: F401
+from repro.core.filesystem import (BBError, BBFile,        # noqa: F401
+                                   BBFileSystem, BBFuture, BBWriteError)
 from repro.core.server import BBServer                     # noqa: F401
 from repro.core.manager import BBManager                   # noqa: F401
 from repro.core.transport import Transport                 # noqa: F401

@@ -1,29 +1,74 @@
 """Burst buffer client (paper §II, §III, §IV-B): the compute-node-side API.
 
-Three write paths:
-  - put():        blocking — one replicated round-trip per key
-  - put_async():  pipelined (paper Fig 4 thread-2 ACK management) — values
-                  are sent immediately, outstanding msg-ids sit in an ACK
-                  ledger, and ``wait_acks`` drains it out-of-band
-  - coalesced:    put_async with small values buffers them per destination
-                  and ships one ``put_batch`` message per server
+ONE write path. Every write — whether it arrives through a ``BBFile``
+handle, the legacy ``put``/``put_async`` shims, or a coalesced batch — is a
+``WriteOp`` submitted to the same pipeline:
 
-The client handles:
+  submit(key, value) -> BBFuture
+      The op is either fired at its owner immediately (pipelined, paper
+      Fig 4) or parked in a per-destination coalesce buffer and shipped as
+      one ``put_batch`` message; a background ACK pump (the paper's Fig 4
+      "thread 2") drains replies, handles redirects and failover re-issues,
+      and completes the op's BBFuture. Failures surface as exceptions on
+      the future / the ``BBFile.sync()`` barrier — never on a shared
+      mutable error list.
+
+Pipelining vs coalescing are *policies* on this path, not separate APIs:
+  coalesce=False  ship now, ACK out-of-band          (old put_async)
+  coalesce=True   buffer, ship as a batch            (old coalesced path)
+  fut.result()    block the caller on the ACK        (old blocking put)
+
+The client also handles:
   - placement (Ketama / ISO / rendezvous)
   - overload redirects from servers (paper §III-A)
   - timeout -> predecessor failure confirmation -> manager report (§IV-B2)
   - reads preferring the burst buffer, replicas on primary failure, and
     post-shuffle range reads via the servers' lookup tables (§III-C)
+
+Compatibility shims (one release): ``put``, ``put_async``, ``wait_acks``,
+``flush_batches``, ``failed_keys`` delegate to the pipeline and keep the
+old bool/list semantics for callers that have not migrated to
+``BBFileSystem`` handles.
 """
 from __future__ import annotations
 
-import queue
+import collections
 import threading
 import time
 from typing import Dict, List, Optional
 
+from repro.core.filesystem import BBFuture, BBWriteError, WriteOp
 from repro.core.hashing import IsoPlacement, KetamaRing, RendezvousHash
 from repro.core.transport import Message, Transport
+
+
+class _AckSink:
+    """Reply sink for the ACK pump. Unlike a queue.Queue, a put() on an
+    already-signalled sink is a cheap no-op wake-wise: the pump is woken
+    once per BURST of ACKs, not once per ACK — under pipelined small-chunk
+    load a per-ACK wake preempts the submitting thread thousands of times
+    a second and throttles ingest."""
+    __slots__ = ("items", "event")
+
+    def __init__(self):
+        self.items: collections.deque = collections.deque()
+        self.event = threading.Event()
+
+    def put(self, msg):                    # transport sink protocol
+        self.items.append(msg)
+        self.event.set()
+
+
+class _Inflight:
+    """One in-flight message: a single WriteOp or a coalesced batch of them."""
+    __slots__ = ("ops", "target", "deadline", "batch")
+
+    def __init__(self, ops: List[WriteOp], target: str, deadline: float,
+                 batch: bool):
+        self.ops = ops
+        self.target = target
+        self.deadline = deadline
+        self.batch = batch
 
 
 class BBClient:
@@ -49,17 +94,22 @@ class BBClient:
         self.dead: set = set()
         self._placement = None
         self._overrides: Dict[str, str] = {}     # key -> redirected server
-        self._lock = threading.Lock()
-        # --- ACK ledger (paper Fig 4 thread-2): outstanding async puts.
-        # msg_id -> entry; replies funnel into one completion queue.
-        self._ledger: Dict[int, dict] = {}
-        self._acks: "queue.Queue[Message]" = queue.Queue()
-        self._failed: List[str] = []             # keys that exhausted retries
-        self.last_failed: List[str] = []         # snapshot of the last cycle
-        self._last_reply: Dict[str, float] = {}  # server -> last-ack time
-        # --- write coalescing: target -> list of pending small put items
-        self._batch: Dict[str, List[dict]] = {}
-        self._batch_nbytes: Dict[str, int] = {}
+        self._lock = threading.Lock()            # membership/placement state
+        # --- write pipeline (paper Fig 4): in-flight ops + coalesce buffers.
+        # All pipeline state is guarded by _op_lock; replies funnel into one
+        # completion queue drained by the ACK pump thread.
+        self._op_lock = threading.Lock()
+        self._pending: Dict[int, _Inflight] = {}   # msg_id -> in-flight entry
+        self._inflight: set = set()                # WriteOps not yet done
+        self._coalesce: Dict[str, List[WriteOp]] = {}
+        self._coalesce_nbytes: Dict[str, int] = {}
+        self._acks = _AckSink()
+        self._last_reply: Dict[str, float] = {}    # server -> last-ack time
+        self._pump: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        # legacy-shim error snapshot (wait_acks/failed_keys compat)
+        self._failed: List[str] = []
+        self.last_failed: List[str] = []
         self.stats = {"puts": 0, "put_bytes": 0, "redirects": 0,
                       "failovers": 0, "gets": 0, "bb_hits": 0,
                       "async_puts": 0, "batched_puts": 0, "batches": 0}
@@ -76,6 +126,23 @@ class BBClient:
                 return
             time.sleep(0.05)
         raise TimeoutError("manager did not provide a ring")
+
+    def close(self):
+        """Stop the ACK pump and fail any still-in-flight ops so no thread
+        is left blocked on a future that can never complete (system
+        teardown path)."""
+        self._stop.set()
+        if self._pump is not None:
+            self._pump.join(timeout=1.0)
+            self._pump = None
+        with self._op_lock:
+            pending = list(self._inflight)
+            self._inflight.clear()
+            self._pending.clear()
+            self._coalesce.clear()
+            self._coalesce_nbytes.clear()
+        for op in pending:
+            op.future._set_exception(BBWriteError(op.key, "client closed"))
 
     def _set_ring(self, ring: List[str], dead: Optional[set] = None):
         with self._lock:
@@ -132,41 +199,259 @@ class BBClient:
             return [alive[(i + j) % len(alive)]
                     for j in range(min(self.replication, len(alive)))]
 
-    # ------------------------------------------------------------------- put
-    def put(self, key: str, value: bytes, *, file: Optional[str] = None,
-            offset: int = 0) -> bool:
-        """Synchronous put with redirect + failure handling. Returns True on
-        replicated ACK. (The async pipeline variant is put_async/wait_acks.)"""
+    # ------------------------------------------------------- write pipeline
+    def submit(self, key: str, value: bytes, *, file: Optional[str] = None,
+               offset: int = 0, coalesce: Optional[bool] = None) -> BBFuture:
+        """THE write path. Returns a BBFuture that completes with True on a
+        replicated ACK or with a BBWriteError once retries are exhausted.
+        ``coalesce`` None applies the size threshold; True/False force the
+        coalesced/pipelined route."""
         self.stats["puts"] += 1
         self.stats["put_bytes"] += len(value)
+        fut = BBFuture(key)
+        op = WriteOp(key, value, file, offset, fut)
+        if coalesce is None:
+            coalesce = len(value) < self.coalesce_threshold
+        self._ensure_pump()
         try:
             target = self.owner(key)
-        except RuntimeError:
-            return False
-        redirects = 0
-        for attempt in range(self.MAX_ATTEMPTS):
-            r = self.transport.request(
+        except RuntimeError as e:
+            self._fail_op(op, BBWriteError(key, str(e)))
+            return fut
+        with self._op_lock:
+            self._inflight.add(op)
+            if coalesce:
+                self._coalesce.setdefault(target, []).append(op)
+                nb = self._coalesce_nbytes.get(target, 0) + len(value)
+                self._coalesce_nbytes[target] = nb
+                if nb >= self.batch_bytes:
+                    self._flush_target_locked(target)
+            else:
+                self._issue_locked([op], target, batch=False)
+        return fut
+
+    def flush_coalesced(self):
+        """Ship every pending coalesce buffer (one put_batch per server)."""
+        with self._op_lock:
+            for target in list(self._coalesce):
+                self._flush_target_locked(target)
+
+    def outstanding(self) -> int:
+        """Write ops submitted but not yet completed — includes ops still
+        sitting in coalesce buffers, so a drain that returns with
+        outstanding() > 0 can never be mistaken for success."""
+        with self._op_lock:
+            return len(self._inflight)
+
+    def drain(self, timeout: float = 30.0) -> List[str]:
+        """Flush coalesce buffers and wait until every in-flight op
+        completes. On overall timeout the stragglers are abandoned (their
+        futures fail). Returns the keys of ops that FAILED since the last
+        drain; [] means full success."""
+        self.flush_coalesced()
+        deadline = time.monotonic() + timeout
+        failed: List[WriteOp] = []
+        while True:
+            with self._op_lock:
+                pending = list(self._inflight)
+            if not pending:
+                break
+            if time.monotonic() > deadline:
+                for op in pending:
+                    self._abandon(op, "drain timeout")
+                break
+            time.sleep(0.003)
+        # every completed-with-error op since the last drain
+        with self._op_lock:
+            keys, self._failed = self._failed, []
+        self.last_failed = keys
+        return keys
+
+    def sync_put_timeout(self) -> float:
+        """Worst-case time for one op to succeed or fail through the
+        pipeline: per-attempt liveness timeout plus failure-confirmation
+        round-trips, across MAX_ATTEMPTS."""
+        return (self.put_timeout + 1.5) * self.MAX_ATTEMPTS + 2.0
+
+    # --- internals -------------------------------------------------------
+    def _ensure_pump(self):
+        if self._pump is not None and self._pump.is_alive():
+            return
+        with self._op_lock:
+            if self._pump is not None and self._pump.is_alive():
+                return
+            self._stop.clear()
+            self._pump = threading.Thread(
+                target=self._ack_loop, daemon=True,
+                name=f"{self.tname}-ackpump")
+            self._pump.start()
+
+    def _ack_loop(self):
+        """Paper Fig 4 "thread 2": drain ACKs, re-issue on redirect, expire
+        entries whose server has gone quiet and fail over (§IV-B2)."""
+        next_scan = 0.0
+        sink = self._acks
+        while not self._stop.is_set():
+            if not sink.items:
+                sink.event.wait(0.02)
+            sink.event.clear()             # clear-then-drain: a concurrent
+            while sink.items:              # append re-signals for next pass
+                self._on_ack(sink.items.popleft())
+            now = time.monotonic()
+            if now >= next_scan:
+                self._check_deadlines(now)
+                next_scan = now + 0.05
+
+    def _issue_locked(self, ops: List[WriteOp], target: str, batch: bool):
+        """Fire ops at ``target`` as one message. Caller holds _op_lock."""
+        if batch:
+            self.stats["batches"] += 1
+            self.stats["batched_puts"] += len(ops)
+            payload = {"items": [{"key": o.key, "value": o.value,
+                                  "file": o.file, "offset": o.offset}
+                                 for o in ops]}
+            msg_id = self.transport.request_async(
+                self.ep, target, "put_batch", payload, sink=self._acks)
+        else:
+            op = ops[0]
+            msg_id = self.transport.request_async(
                 self.ep, target, "put",
-                {"key": key, "value": value, "file": file, "offset": offset,
+                {"key": op.key, "value": op.value, "file": op.file,
+                 "offset": op.offset,
                  # after 2 redirects force acceptance (server spills to SSD)
                  # to avoid ping-pong on stale free-memory gossip
-                 "redirectable": redirects < 2},
-                timeout=self.put_timeout)
-            if r is None:
-                target = self._handle_timeout(key, target)
-                if target is None:          # no alive servers left
-                    return False
-                continue
-            if r.kind == "redirect":
-                self.stats["redirects"] += 1
-                redirects += 1
-                target = r.payload["target"]
-                with self._lock:
-                    self._overrides[key] = target
-                continue
-            if r.kind == "put_ack":
-                return True
-        return False
+                 "redirectable": op.redirects < 2},
+                sink=self._acks)
+        for op in ops:
+            op.msg_id = msg_id
+        self._pending[msg_id] = _Inflight(
+            ops, target, time.monotonic() + self.put_timeout, batch)
+
+    def _flush_target_locked(self, target: str):
+        ops = self._coalesce.pop(target, [])
+        self._coalesce_nbytes.pop(target, None)
+        if ops:
+            self._issue_locked(ops, target, batch=True)
+
+    def _fail_op(self, op: WriteOp, exc: Exception):
+        # record BEFORE completing the future: a blocking put() woken by the
+        # exception consumes its key from _failed, so the key must already
+        # be there or it would leak into the next drain cycle
+        with self._op_lock:
+            self._inflight.discard(op)
+            self._failed.append(op.key)
+        if not op.future._set_exception(exc):
+            self._consume_failed(op.key)    # op had already succeeded
+
+    def _complete_op(self, op: WriteOp):
+        with self._op_lock:
+            self._inflight.discard(op)
+        op.future._set_result(True)
+
+    def _abandon(self, op: WriteOp, reason: str):
+        """Cancel an op wherever it currently is (coalesce buffer or wire)
+        and fail its future. Late ACKs for it are ignored (first-win)."""
+        with self._op_lock:
+            for target, ops in list(self._coalesce.items()):
+                if op in ops:
+                    ops.remove(op)
+                    self._coalesce_nbytes[target] = \
+                        self._coalesce_nbytes.get(target, 0) - len(op.value)
+                    if not ops:
+                        del self._coalesce[target]
+                        self._coalesce_nbytes.pop(target, None)
+            if op.msg_id is not None:
+                ent = self._pending.get(op.msg_id)
+                if ent is not None and op in ent.ops:
+                    ent.ops.remove(op)
+                    if not ent.ops:
+                        del self._pending[op.msg_id]
+                        self.transport.cancel_async(self.ep, op.msg_id)
+        self._fail_op(op, BBWriteError(op.key, reason))
+
+    def _on_ack(self, msg: Message):
+        with self._op_lock:
+            ent = self._pending.pop(msg.reply_to, None)
+        if ent is None:
+            return                          # late reply for a re-issued op
+        self._last_reply[ent.target] = time.monotonic()
+        if msg.kind in ("put_ack", "put_batch_ack"):
+            # one lock round for the whole entry (batches carry many ops)
+            with self._op_lock:
+                self._inflight.difference_update(ent.ops)
+            for op in ent.ops:
+                op.future._set_result(True)
+            return
+        if msg.kind == "redirect":
+            self.stats["redirects"] += 1
+            target = msg.payload["target"]
+            with self._lock:
+                for op in ent.ops:
+                    self._overrides[op.key] = target
+            for op in ent.ops:
+                op.redirects += 1
+                op.attempts += 1
+            with self._op_lock:
+                # servers never redirect batches today, but route them
+                # correctly if that changes
+                self._issue_locked(ent.ops, target, batch=ent.batch)
+
+    def _check_deadlines(self, now: float):
+        # a deadline alone does not condemn a server: under pipelined load a
+        # healthy target may simply have a deep inbox. Expire an entry only
+        # when its server has ALSO acked nothing for a full put_timeout —
+        # i.e. the timeout judges per-server liveness, not per-message queue
+        # position. A dead server acks nothing, so real failures still fire.
+        with self._op_lock:
+            expired = [mid for mid, e in self._pending.items()
+                       if e.deadline < now
+                       and self._last_reply.get(e.target, -1e9)
+                       + self.put_timeout < now]
+            entries = []
+            for mid in expired:
+                entries.append(self._pending.pop(mid))
+                self.transport.cancel_async(self.ep, mid)
+        if entries:
+            # failure confirmation blocks on RPCs for seconds — run it off
+            # the pump thread so ACKs for healthy servers keep draining
+            # (entries are already popped, so no double-processing)
+            threading.Thread(
+                target=lambda: [self._expire(e) for e in entries],
+                daemon=True, name=f"{self.tname}-expire").start()
+
+    def _expire(self, ent: _Inflight):
+        """An in-flight message timed out: confirm the suspect's failure via
+        its predecessor, then re-issue survivors to their failover owners
+        (regrouping batches, since placement may split them)."""
+        retryable = [op for op in ent.ops
+                     if op.attempts + 1 < self.MAX_ATTEMPTS]
+        exhausted = [op for op in ent.ops if op not in retryable]
+        failover = None
+        if retryable:
+            failover = self._handle_timeout(retryable[0].key, ent.target)
+        if failover is None:
+            exhausted = ent.ops
+            retryable = []
+        for op in exhausted:
+            self._fail_op(op, BBWriteError(
+                op.key, f"no replicated ACK after {op.attempts + 1} attempts"
+                        f" (last target {ent.target})"))
+        if not retryable:
+            return
+        groups: Dict[str, List[WriteOp]] = {}
+        for op in retryable:
+            op.attempts += 1
+            try:
+                groups.setdefault(self.owner(op.key), []).append(op)
+            except RuntimeError as e:
+                self._fail_op(op, BBWriteError(op.key, str(e)))
+        with self._op_lock:
+            for target, ops in groups.items():
+                if ent.batch and len(ops) > 1:
+                    self._issue_locked(ops, target, batch=True)
+                else:
+                    for op in ops:
+                        self._issue_locked([op], target, batch=False)
 
     def _handle_timeout(self, key: str, target: str) -> Optional[str]:
         """Paper §IV-B2: confirm failure via the suspect's predecessor, then
@@ -189,178 +474,79 @@ class BBClient:
                                if v != target}
             if not any(s not in self.dead for s in self.ring):
                 return None
-        return self.owner(key)
-
-    # ------------------------------------------------------- async put (Fig 4)
-    def put_async(self, key: str, value: bytes, *, file: Optional[str] = None,
-                  offset: int = 0, coalesce: Optional[bool] = None):
-        """Pipelined put (paper Fig 4): fire the value at its owner and
-        return immediately; the outstanding msg-id sits in the ACK ledger
-        until ``wait_acks`` drains it. Small values (below
-        ``coalesce_threshold``, or when ``coalesce=True``) are buffered and
-        shipped as one ``put_batch`` per destination server, bounding
-        per-message overhead for many-small-tensors checkpoint shapes."""
-        self.stats["puts"] += 1
-        self.stats["async_puts"] += 1
-        self.stats["put_bytes"] += len(value)
-        if coalesce is None:
-            coalesce = len(value) < self.coalesce_threshold
         try:
-            target = self.owner(key)
+            return self.owner(key)
         except RuntimeError:
-            self._failed.append(key)        # surfaced by wait_acks
-            return
-        if coalesce:
-            self._enqueue_batch(target, {"key": key, "value": value,
-                                         "file": file, "offset": offset})
-        else:
-            self._issue(key, value, file, offset, target,
-                        redirects=0, attempts=0)
+            return None
 
-    def _issue(self, key: str, value: bytes, file: Optional[str],
-               offset: int, target: str, redirects: int, attempts: int):
-        msg_id = self.transport.request_async(
-            self.ep, target, "put",
-            {"key": key, "value": value, "file": file, "offset": offset,
-             "redirectable": redirects < 2},
-            sink=self._acks)
-        self._ledger[msg_id] = {
-            "key": key, "value": value, "file": file, "offset": offset,
-            "target": target, "redirects": redirects, "attempts": attempts,
-            "deadline": time.monotonic() + self.put_timeout, "batch": None}
+    # ------------------------------------------------- legacy compat shims
+    # One release of grace for pre-BBFileSystem callers. Everything below
+    # delegates to submit()/drain(); nothing else in the client distinguishes
+    # "sync" from "async" from "batched" writes.
+    def put(self, key: str, value: bytes, *, file: Optional[str] = None,
+            offset: int = 0) -> bool:
+        """[compat] Blocking put: submit + wait on the future. True on a
+        replicated ACK, False on failure. The caller observes the failure
+        here, so it is consumed — it must not ALSO fail a later
+        wait_acks()/drain() cycle of unrelated async ops."""
+        fut = self.submit(key, value, file=file, offset=offset,
+                          coalesce=False)
+        try:
+            fut.result(self.sync_put_timeout())
+            return True
+        except TimeoutError:
+            # abandon so a wedged op cannot poison a later drain barrier
+            self.abandon_by_future(fut)
+            self._consume_failed(key)
+            return False
+        except BBWriteError:
+            self._consume_failed(key)
+            return False
 
-    def _enqueue_batch(self, target: str, item: dict):
-        self._batch.setdefault(target, []).append(item)
-        nb = self._batch_nbytes.get(target, 0) + len(item["value"])
-        self._batch_nbytes[target] = nb
-        if nb >= self.batch_bytes:
-            self._flush_one_batch(target)
+    def _consume_failed(self, key: str):
+        with self._op_lock:
+            try:
+                self._failed.remove(key)
+            except ValueError:
+                pass
+
+    def abandon_by_future(self, fut) -> bool:
+        """Cancel the in-flight op behind ``fut`` and consume its failure
+        record (the caller observed the outcome through the future, so it
+        must not leak into a later legacy drain cycle). Returns False if no
+        such op is in flight."""
+        with self._op_lock:
+            op = next((o for o in self._inflight if o.future is fut), None)
+        if op is None:
+            return False
+        self._abandon(op, "barrier timeout")
+        self._consume_failed(op.key)
+        return True
+
+    def put_async(self, key: str, value: bytes, *, file: Optional[str] = None,
+                  offset: int = 0, coalesce: Optional[bool] = None
+                  ) -> BBFuture:
+        """[compat] Pipelined put; completion is observed via wait_acks()
+        (legacy) or the returned future (preferred)."""
+        self.stats["async_puts"] += 1
+        return self.submit(key, value, file=file, offset=offset,
+                           coalesce=coalesce)
 
     def flush_batches(self):
-        """Ship every pending coalesced batch (one put_batch per server)."""
-        for target in list(self._batch):
-            self._flush_one_batch(target)
-
-    def _flush_one_batch(self, target: str):
-        items = self._batch.pop(target, [])
-        self._batch_nbytes.pop(target, None)
-        if items:
-            self._issue_batch(items, target, attempts=0)
-
-    def _issue_batch(self, items: List[dict], target: str, attempts: int):
-        self.stats["batches"] += 1
-        self.stats["batched_puts"] += len(items)
-        msg_id = self.transport.request_async(
-            self.ep, target, "put_batch", {"items": items}, sink=self._acks)
-        self._ledger[msg_id] = {
-            "batch": items, "target": target, "attempts": attempts,
-            "deadline": time.monotonic() + self.put_timeout}
+        """[compat] Old name for flush_coalesced()."""
+        self.flush_coalesced()
 
     def wait_acks(self, timeout: float = 30.0) -> bool:
-        """Drain the ACK ledger (paper Fig 4 thread-2): process redirects by
-        re-issuing to the announced server, and expired entries by confirming
-        the suspect's failure through its predecessor and re-issuing to the
-        failover target. Returns True once every outstanding put (including
-        coalesced batches) is acknowledged; False on overall timeout or when
-        a put exhausts its retries."""
-        self.flush_batches()
-        deadline = time.monotonic() + timeout
-        next_scan = 0.0          # throttle O(ledger) deadline scans
-        while self._ledger:
-            now = time.monotonic()
-            if now > deadline:
-                return self._finish_wait(False)
-            try:
-                msg = self._acks.get(timeout=0.02)
-            except queue.Empty:
-                msg = None
-            while msg is not None:
-                self._on_ack(msg)
-                try:
-                    msg = self._acks.get_nowait()
-                except queue.Empty:
-                    msg = None
-            now = time.monotonic()
-            if now >= next_scan:
-                self._check_put_deadlines(now)
-                next_scan = now + 0.05
-        return self._finish_wait(True)
-
-    def _finish_wait(self, drained: bool) -> bool:
-        """Close out a drain cycle. On overall timeout the still-outstanding
-        entries are abandoned (cancelled and recorded as failed) so a failed
-        cycle can't poison the next checkpoint's barrier; the snapshot keeps
-        the failed keys inspectable via failed_keys()."""
-        if not drained:
-            for mid, e in list(self._ledger.items()):
-                self.transport.cancel_async(self.ep, mid)
-                items = e.get("batch")
-                if items:
-                    self._failed.extend(i["key"] for i in items)
-                else:
-                    self._failed.append(e["key"])
-            self._ledger.clear()
-        self.last_failed, self._failed = self._failed, []
-        return drained and not self.last_failed
-
-    def outstanding(self) -> int:
-        return len(self._ledger) + sum(len(v) for v in self._batch.values())
+        """[compat] Drain the pipeline; True only when every op submitted
+        since the last drain achieved a replicated ACK. Unlike the pre-
+        BBFuture version, a timeout can never report True while ops are
+        still buffered or in flight: outstanding() is authoritative."""
+        failed = self.drain(timeout)
+        return not failed and self.outstanding() == 0
 
     def failed_keys(self) -> List[str]:
-        """Keys that exhausted retries in the last wait_acks cycle."""
+        """[compat] Keys that failed in the last drain/wait_acks cycle."""
         return list(self.last_failed)
-
-    def _on_ack(self, msg: Message):
-        entry = self._ledger.pop(msg.reply_to, None)
-        if entry is None:
-            return                          # late reply for a re-issued put
-        self._last_reply[entry["target"]] = time.monotonic()
-        if msg.kind in ("put_ack", "put_batch_ack"):
-            return
-        if msg.kind == "redirect":
-            self.stats["redirects"] += 1
-            target = msg.payload["target"]
-            with self._lock:
-                self._overrides[entry["key"]] = target
-            self._issue(entry["key"], entry["value"], entry["file"],
-                        entry["offset"], target,
-                        entry["redirects"] + 1, entry["attempts"] + 1)
-
-    def _check_put_deadlines(self, now: float):
-        # a deadline alone does not condemn a server: under pipelined load a
-        # healthy target may simply have a deep inbox. Expire an entry only
-        # when its server has ALSO acked nothing for a full put_timeout —
-        # i.e. the timeout judges per-server liveness, not per-message queue
-        # position. A dead server acks nothing, so real failures still fire.
-        expired = [mid for mid, e in self._ledger.items()
-                   if e["deadline"] < now
-                   and self._last_reply.get(e["target"], -1e9)
-                   + self.put_timeout < now]
-        for mid in expired:
-            e = self._ledger.pop(mid)
-            self.transport.cancel_async(self.ep, mid)
-            items = e.get("batch")
-            first_key = items[0]["key"] if items else e["key"]
-            failover = None
-            if e["attempts"] + 1 < self.MAX_ATTEMPTS:
-                failover = self._handle_timeout(first_key, e["target"])
-            if failover is None:        # retries exhausted or no servers left
-                if items:
-                    self._failed.extend(i["key"] for i in items)
-                else:
-                    self._failed.append(e["key"])
-                continue
-            if items:
-                # regroup by post-failover owners (ketama may split the batch)
-                groups: Dict[str, List[dict]] = {}
-                for it in items:
-                    groups.setdefault(self.owner(it["key"]), []).append(it)
-                for tgt, its in groups.items():
-                    self._issue_batch(its, tgt, e["attempts"] + 1)
-            else:
-                self._issue(e["key"], e["value"], e["file"], e["offset"],
-                            self.owner(e["key"]), e["redirects"],
-                            e["attempts"] + 1)
 
     # ------------------------------------------------------------------- get
     def get(self, key: str) -> Optional[bytes]:
@@ -390,6 +576,54 @@ class BBClient:
                 return r.payload
         return None
 
+    def _alive_servers(self) -> List[str]:
+        self._drain_membership()
+        with self._lock:
+            return [s for s in self.ring if s not in self.dead]
+
+    def file_chunks(self, file: str) -> Dict[int, tuple]:
+        """Merged per-file chunk manifest across all alive servers:
+        {offset: (key, length, holders)}. Primaries and replicas both
+        report a chunk, so ``holders`` doubles as the replica set for
+        direct fetches — placement-independent reads survive failover."""
+        merged: Dict[int, tuple] = {}
+        for s in self._alive_servers():
+            r = self.transport.request(self.ep, s, "file_chunks",
+                                       {"file": file}, timeout=1.0)
+            if r is None:
+                continue
+            for off, key, length in r.payload["chunks"]:
+                ent = merged.setdefault(off, (key, length, []))
+                ent[2].append(s)
+        return merged
+
+    def get_at(self, server: str, key: str) -> Optional[bytes]:
+        """Fetch a value from one specific server (manifest-directed read —
+        bypasses placement, which only knows where THIS client writes)."""
+        r = self.transport.request(self.ep, server, "get", {"key": key},
+                                   timeout=1.0)
+        if r is not None and r.payload.get("hit"):
+            return r.payload["value"]
+        return None
+
+    def file_stat(self, file: str) -> dict:
+        """Merged file metadata across alive servers: buffered extent,
+        chunk count, post-flush size (lookup table)."""
+        buffered, chunks, flushed, known = 0, 0, None, False
+        for s in self._alive_servers():
+            r = self.transport.request(self.ep, s, "file_stat",
+                                       {"file": file}, timeout=1.0)
+            if r is None:
+                continue
+            p = r.payload
+            buffered = max(buffered, p["buffered"])
+            chunks += p["chunks"]
+            if p["flushed_size"] is not None:
+                flushed = max(flushed or 0, p["flushed_size"])
+            known = known or p["known"]
+        return {"buffered": buffered, "chunks": chunks,
+                "flushed_size": flushed, "known": known}
+
     def read_file(self, file: str, offset: int, length: int
                   ) -> Optional[bytes]:
         """Post-flush read through the lookup table (paper §III-C): locate
@@ -398,6 +632,7 @@ class BBClient:
         if info is None:
             return None
         out = bytearray(length)
+        filled = 0
         for server, a, b in info["domains"]:
             lo, hi = max(offset, a), min(offset + length, b)
             if lo >= hi:
@@ -405,7 +640,10 @@ class BBClient:
             r = self.transport.request(
                 self.ep, server, "read_range",
                 {"file": file, "offset": lo, "length": hi - lo}, timeout=2.0)
-            if r is None:
-                return None
+            if r is None or not r.payload.get("complete"):
+                return None     # never fabricate bytes: let callers fall back
             out[lo - offset:hi - offset] = r.payload["data"]
+            filled += hi - lo
+        if filled < length:     # range extends beyond every domain
+            return None
         return bytes(out)

@@ -1,0 +1,549 @@
+"""File-session API over the burst buffer: BBFileSystem / BBFile / BBFuture.
+
+The paper presents the burst buffer as a *file* abstraction — checkpoints
+are striped across SSD servers and gradually flushed to Lustre — and
+BurstFS/UnifyFS converge on the same shape: a mount-like interface with
+explicit sync barriers. This module is that client-facing surface:
+
+  fs = system.fs()
+  f = fs.open("ckpt_00000001", "w", policy="batched")
+  fut = f.pwrite(data, offset)      # returns a BBFuture
+  f.sync()                          # barrier: raises on any failed write
+  f.close()
+
+A ``BBFile`` handle stripes data into fixed-size chunks, round-robins them
+over the system's clients, and routes every chunk through the client's
+single internal ``WriteOp`` pipeline (client.py). Each write returns a
+``BBFuture``; per-op failures surface as exceptions on the future or on the
+``sync()``/``close()`` barrier — there is no shared last-failed list to
+race on.
+
+Write policies (how chunks travel, not where they land):
+  "sync"     one replicated round-trip per chunk (blocking)
+  "async"    pipelined through the ACK ledger, one barrier at sync()
+  "batched"  async + small chunks coalesced into put_batch messages
+
+Reads assemble a byte range from three sources, freshest first: buffered
+chunks via the servers' per-file manifests, post-flush lookup-table range
+reads, and finally the durable PFS copy.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+POLICIES = ("sync", "async", "batched")
+
+
+class BBError(RuntimeError):
+    """Base class for burst-buffer file/write errors."""
+
+
+class BBWriteError(BBError):
+    """A write op exhausted its retries or had no live server to go to."""
+
+    def __init__(self, keys, reason: str = "write failed"):
+        self.keys = [keys] if isinstance(keys, str) else list(keys)
+        super().__init__(f"{reason}: {self.keys}")
+
+
+class BBFuture:
+    """Completion handle for one write op (or a gather of several).
+
+    done()/result()/exception() follow concurrent.futures semantics:
+    ``result`` re-raises the op's failure, ``exception`` returns it.
+    Completion is first-win — a late ACK for an op that already failed
+    (abandoned, timed out) is ignored.
+    """
+
+    __slots__ = ("key", "_done", "_result", "_exc", "_cbs", "_event",
+                 "_lock")
+
+    def __init__(self, key: Optional[str] = None):
+        self.key = key
+        self._done = False
+        self._result = None
+        self._exc: Optional[BaseException] = None
+        self._cbs: Optional[List] = None
+        # the Event is allocated lazily, only when a thread actually has to
+        # block: on the hot ingest path most futures resolve before anyone
+        # waits, and per-op Event allocation + set() is measurable overhead
+        self._event: Optional[threading.Event] = None
+        self._lock = threading.Lock()
+
+    # -------------------------------------------------------------- completion
+    def _finish(self, result, exc) -> bool:
+        """First-win completion. Returns False when the future was already
+        done (the late result is discarded) so callers can tell whether
+        their outcome actually took effect."""
+        with self._lock:
+            if self._done:
+                return False
+            self._result, self._exc = result, exc
+            self._done = True
+            cbs, self._cbs = self._cbs, None
+            ev = self._event
+        if ev is not None:
+            ev.set()
+        if cbs:
+            for cb in cbs:
+                cb(self)
+        return True
+
+    def _set_result(self, value) -> bool:
+        return self._finish(value, None)
+
+    def _set_exception(self, exc: BaseException) -> bool:
+        return self._finish(None, exc)
+
+    # ------------------------------------------------------------------- query
+    def done(self) -> bool:
+        return self._done
+
+    def _wait(self, timeout: Optional[float]) -> bool:
+        if self._done:
+            return True
+        with self._lock:
+            if self._done:
+                return True
+            if self._event is None:
+                self._event = threading.Event()
+            ev = self._event
+        return ev.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._wait(timeout):
+            raise TimeoutError(f"write not acknowledged: {self.key}")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None
+                  ) -> Optional[BaseException]:
+        if not self._wait(timeout):
+            raise TimeoutError(f"write not acknowledged: {self.key}")
+        return self._exc
+
+    def add_done_callback(self, cb):
+        with self._lock:
+            if not self._done:
+                if self._cbs is None:
+                    self._cbs = []
+                self._cbs.append(cb)
+                return
+        cb(self)
+
+    @classmethod
+    def gather(cls, futures: List["BBFuture"]) -> "BBFuture":
+        """A future that resolves once every input does; fails on the first
+        input failure (first-win, like the per-op futures)."""
+        g = cls(key=None)
+        if not futures:
+            g._set_result(True)
+            return g
+        remaining = [len(futures)]
+        lock = threading.Lock()
+
+        def _cb(f: "BBFuture"):
+            exc = f._exc
+            if exc is not None:
+                g._set_exception(exc)
+                return
+            with lock:
+                remaining[0] -= 1
+                last = remaining[0] == 0
+            if last:
+                g._set_result(True)
+
+        for f in futures:
+            f.add_done_callback(_cb)
+        return g
+
+
+@dataclass(eq=False)      # identity semantics: ops live in sets/buffers
+class WriteOp:
+    """One chunk travelling the client write pipeline. Every put — blocking,
+    pipelined, or coalesced — is a WriteOp; the policy knobs only change how
+    it is shipped and awaited."""
+    key: str
+    value: bytes
+    file: Optional[str]
+    offset: int
+    future: BBFuture
+    redirects: int = 0
+    attempts: int = 0
+    msg_id: Optional[int] = None     # current in-flight message, if any
+
+
+class BBFile:
+    """An open burst-buffer file. Write calls stripe into chunks keyed
+    ``{path}:{offset}`` (so prefix eviction and the two-phase flush see the
+    same namespace as the legacy KV API) and return BBFutures; ``sync()``
+    flushes coalesce buffers and raises if any chunk failed.
+
+    Mode "w" truncates an existing incarnation. Rewriting the same offset
+    with the same striping is last-writer-wins (chunks share a key);
+    PARTIALLY overlapping writes at different offsets have no defined
+    recency across servers — write aligned, non-overlapping ranges."""
+
+    def __init__(self, fs: "BBFileSystem", path: str, mode: str, *,
+                 policy: str = "async", chunk_bytes: Optional[int] = None):
+        if mode not in ("r", "w", "a"):
+            raise ValueError(f"mode must be r/w/a, got {mode!r}")
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}")
+        self.fs = fs
+        self.path = path
+        self.mode = mode
+        self.policy = policy
+        self.chunk_bytes = chunk_bytes or fs.chunk_bytes
+        self._pos = 0
+        self._size = 0
+        self._rr = 0                       # round-robin cursor over clients
+        self._futures: List[BBFuture] = []
+        # offset -> (key, length, holder servers), merged across servers
+        self._chunks: Optional[Dict[int, Tuple]] = None
+        self._closed = False
+        if mode == "r":
+            st = fs.stat(path)
+            self._size = st["size"]
+        elif mode == "a":
+            try:
+                self._size = fs.stat(path)["size"]
+            except FileNotFoundError:
+                self._size = 0
+            self._pos = self._size
+
+    # ----------------------------------------------------------------- helpers
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _check_open(self, writing: bool):
+        if self._closed:
+            raise ValueError(f"I/O on closed file {self.path!r}")
+        if writing and self.mode == "r":
+            raise ValueError(f"file {self.path!r} opened read-only")
+
+    def seek(self, pos: int) -> int:
+        self._pos = max(0, pos)
+        return self._pos
+
+    def tell(self) -> int:
+        return self._pos
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    # ------------------------------------------------------------------ writes
+    def write(self, data: bytes) -> BBFuture:
+        """Append at the cursor; returns a future for the whole write."""
+        fut = self.pwrite(data, self._pos)
+        self._pos += len(data)
+        return fut
+
+    def pwrite(self, data: bytes, offset: int) -> BBFuture:
+        """Positional write: stripe ``data`` into chunks and submit each to
+        the next client's write pipeline. Under policy "sync" each chunk
+        blocks on its replicated ACK (raising on failure); otherwise the
+        returned future completes when every chunk of this call does."""
+        self._check_open(writing=True)
+        clients = self.fs.clients
+        # "batched" forces coalescing (a chunk at/above batch_bytes still
+        # ships immediately as its own batch); other policies pipeline
+        # each chunk individually so §III-A redirects stay available
+        coalesce = True if self.policy == "batched" else False
+        futs: List[BBFuture] = []
+        for off in range(0, max(len(data), 1), self.chunk_bytes):
+            piece = bytes(data[off:off + self.chunk_bytes])
+            c = clients[self._rr % len(clients)]
+            self._rr += 1
+            key = f"{self.path}:{offset + off}"
+            fut = c.submit(key, piece, file=self.path, offset=offset + off,
+                           coalesce=coalesce)
+            if self.policy == "sync":
+                try:
+                    fut.result(c.sync_put_timeout())
+                except TimeoutError:
+                    c.abandon_by_future(fut)   # wedged op must not linger
+                    c._consume_failed(key)
+                    raise
+                except BBWriteError:
+                    c._consume_failed(key)     # observed here, not at drain
+                    raise
+            futs.append(fut)
+        self._size = max(self._size, offset + len(data))
+        self._futures.extend(futs)
+        self._chunks = None    # read-after-write must see the new chunks
+        return futs[0] if len(futs) == 1 else BBFuture.gather(futs)
+
+    def sync(self, timeout: float = 60.0) -> "BBFile":
+        """Barrier (paper Fig 4 thread-2 drain, per handle): flush every
+        client's coalesce buffer, wait for all of this handle's outstanding
+        futures, and raise BBWriteError listing the failed chunk keys if any
+        write did not achieve a replicated ACK."""
+        for c in self.fs.clients:
+            c.flush_coalesced()
+        deadline = time.monotonic() + timeout
+        failed: List[str] = []
+        try:
+            for f in self._futures:
+                remaining = max(0.0, deadline - time.monotonic())
+                exc = f.exception(remaining)   # raises TimeoutError on expiry
+                if exc is not None:
+                    failed.append(f.key if f.key is not None else "<gather>")
+        except TimeoutError:
+            # abandon the stragglers and consume everything this barrier
+            # observed, mirroring BBClient.drain()'s timeout behaviour —
+            # an errored handle must not poison a later drain cycle
+            for g in self._futures:
+                if not g.done():
+                    for c in self.fs.clients:
+                        if c.abandon_by_future(g):
+                            break
+            for key in failed:
+                for c in self.fs.clients:
+                    c._consume_failed(key)
+            self._futures = []
+            raise
+        self._futures = []
+        if failed:
+            # the failure is observed HERE, on this barrier — consume it so
+            # it cannot also fail a later legacy wait_acks()/drain() cycle
+            for key in failed:
+                for c in self.fs.clients:
+                    c._consume_failed(key)
+            raise BBWriteError(failed, "sync barrier found failed writes")
+        self.fs._register_sync(self.path, self._size)
+        return self
+
+    def close(self, timeout: float = 60.0):
+        """Sync (for writable handles) and invalidate the handle."""
+        if self._closed:
+            return
+        try:
+            if self.mode != "r":
+                self.sync(timeout)
+        finally:
+            self._closed = True
+
+    # ------------------------------------------------------------------- reads
+    def read(self, n: int = -1) -> bytes:
+        if n < 0:
+            n = max(0, self._size - self._pos)
+        data = self.pread(self._pos, n)
+        self._pos += len(data)
+        return data
+
+    def pread(self, offset: int, length: int) -> bytes:
+        """Positional read, freshest source first:
+          1. buffered chunks located via the servers' per-file manifests
+             (individual gets are replica-aware, so this survives failover),
+          2. post-flush lookup-table range read (paper §III-C),
+          3. the durable PFS copy.
+        """
+        self._check_open(writing=False)
+        # POSIX short-read semantics at EOF: never fabricate zero bytes
+        # beyond the known size
+        length = min(length, max(0, self._size - offset))
+        if length <= 0:
+            return b""
+        client = self.fs.clients[0]
+        out = bytearray(length)
+        covered: List[List[int]] = []
+        chunks = self._chunk_map()
+        # ascending-offset order: overlap resolution is deterministic
+        # (chunks at the SAME offset are last-writer-wins via their shared
+        # key; partially-overlapping writes at different offsets have no
+        # cross-server recency order — avoid them)
+        for base in sorted(chunks):
+            key, ln, holders = chunks[base]
+            lo, hi = max(offset, base), min(offset + length, base + ln)
+            if lo >= hi:
+                continue
+            piece = None
+            for server in holders:           # primary + replicas
+                piece = client.get_at(server, key)
+                if piece is not None and len(piece) == ln:
+                    break
+                # wrong length = stale replica of a same-offset rewrite;
+                # a raw slice-assign would silently RESIZE the bytearray
+                piece = None
+            if piece is None:
+                continue                     # evicted or unreachable: fall back
+            out[lo - offset:hi - offset] = piece[lo - base:hi - base]
+            covered.append([lo, hi])
+        missing = _gaps(_merge(covered), offset, offset + length)
+        if not missing:
+            return bytes(out)
+        for lo, hi in list(missing):
+            data = client.read_file(self.path, lo, hi - lo)
+            if data is None:
+                data = self._pread_pfs(lo, hi - lo)
+            if data is None or len(data) < hi - lo:
+                # a short fallback read would silently zero-fill — the range
+                # is inside the known size, so this is real data loss
+                raise BBError(
+                    f"unreadable range [{lo}, {hi}) of {self.path!r}")
+            out[lo - offset:lo - offset + len(data)] = data
+        return bytes(out)
+
+    def _chunk_map(self) -> Dict[int, Tuple]:
+        if self._chunks is None:
+            self._chunks = self.fs.clients[0].file_chunks(self.path)
+        return self._chunks
+
+    def _pread_pfs(self, offset: int, length: int) -> Optional[bytes]:
+        path = os.path.join(self.fs.pfs_dir, self.path) \
+            if self.fs.pfs_dir else None
+        if path is None or not os.path.exists(path):
+            return None
+        with open(path, "rb") as f:
+            f.seek(offset)
+            return f.read(length)
+
+
+class BBFileSystem:
+    """Mount-like facade over a set of burst-buffer clients.
+
+    One BBFileSystem per application (``system.fs()``); handles from
+    ``open()`` share the clients and stripe across them. The manager keeps
+    the namespace registry (fs_open/fs_sync), so ``listdir``/``exists``
+    reflect every client's files, not just this process's."""
+
+    def __init__(self, clients, *, chunk_bytes: int = 4 << 20,
+                 pfs_dir: Optional[str] = None, manager: str = "manager"):
+        if not clients:
+            raise ValueError("BBFileSystem needs at least one client")
+        self.clients = list(clients)
+        self.chunk_bytes = chunk_bytes
+        self.pfs_dir = pfs_dir
+        self.manager = manager
+
+    # -------------------------------------------------------------- namespace
+    def _mgr_request(self, kind: str, payload: dict, timeout: float = 2.0):
+        c = self.clients[0]
+        return c.transport.request(c.ep, self.manager, kind, payload,
+                                   timeout=timeout)
+
+    def open(self, path: str, mode: str = "r", *, policy: str = "async",
+             chunk_bytes: Optional[int] = None) -> BBFile:
+        if mode in ("w", "a"):
+            r = self._mgr_request("fs_open", {"path": path, "mode": mode})
+            if mode == "w":
+                existed = r is not None and r.payload.get("existed")
+                if not existed:
+                    existed = bool(self.pfs_dir) and os.path.exists(
+                        os.path.join(self.pfs_dir, path))
+                if not existed:
+                    # chunks written through the legacy put(file=...) shims
+                    # share the key namespace but bypass the manager — the
+                    # servers' manifests are the source of truth
+                    existed = self.clients[0].file_stat(path)["known"]
+                if existed:
+                    # truncate semantics: a shorter rewrite must never read
+                    # back stale tail bytes of a longer previous incarnation
+                    self.truncate(path)
+        return BBFile(self, path, mode, policy=policy,
+                      chunk_bytes=chunk_bytes)
+
+    def truncate(self, path: str):
+        """Drop every buffered chunk of ``path`` on every server (replicas
+        included), its lookup-table entries, the durable PFS copy, and the
+        manager's recorded size. Raises BBError if any server fails to
+        acknowledge — an unacknowledged truncation could resurrect stale
+        tail bytes of a longer previous incarnation later."""
+        c = self.clients[0]
+        for s in c._alive_servers():
+            r = c.transport.request(c.ep, s, "file_truncate", {"file": path},
+                                    timeout=1.0)
+            if r is None:       # one retry: deep inboxes happen under load
+                r = c.transport.request(c.ep, s, "file_truncate",
+                                        {"file": path}, timeout=1.0)
+            if r is None:
+                raise BBError(f"truncate of {path!r} unacknowledged by {s}")
+        if self.pfs_dir:
+            p = os.path.join(self.pfs_dir, path)
+            if os.path.exists(p):
+                os.remove(p)
+        self._mgr_request("fs_truncate", {"path": path}, timeout=1.0)
+
+    def _register_sync(self, path: str, size: int):
+        self._mgr_request("fs_sync", {"path": path, "size": size},
+                          timeout=1.0)
+
+    def listdir(self, prefix: str = "") -> List[str]:
+        r = self._mgr_request("fs_list", {"prefix": prefix})
+        names = set(r.payload["paths"]) if r is not None else set()
+        if self.pfs_dir and os.path.isdir(self.pfs_dir):
+            names.update(n for n in os.listdir(self.pfs_dir)
+                         if n.startswith(prefix))
+        return sorted(names)
+
+    def exists(self, path: str) -> bool:
+        try:
+            self.stat(path)
+            return True
+        except FileNotFoundError:
+            return False
+
+    def stat(self, path: str) -> dict:
+        """Merged metadata: buffered extent across servers' chunk manifests,
+        post-flush lookup-table size, the PFS copy, and the manager's
+        namespace (which alone knows zero-byte synced files)."""
+        c = self.clients[0]
+        st = c.file_stat(path)
+        buffered = st["buffered"]
+        flushed = st["flushed_size"] or 0
+        pfs = 0
+        if self.pfs_dir:
+            p = os.path.join(self.pfs_dir, path)
+            if os.path.exists(p):
+                pfs = os.path.getsize(p)
+        r = self._mgr_request("fs_stat", {"path": path}, timeout=1.0)
+        ns_known = r is not None and r.payload["known"]
+        ns_size = r.payload["size"] if ns_known else 0
+        if not (buffered or flushed or pfs or st["known"] or ns_known):
+            raise FileNotFoundError(path)
+        return {"size": max(buffered, flushed, pfs, ns_size),
+                "buffered": buffered, "flushed_size": flushed,
+                "pfs_size": pfs, "chunks": st["chunks"]}
+
+    def unlink(self, path: str):
+        """Drop the path from the namespace and its buffered chunks on
+        every server (exact-match file_truncate — unlinking ``run`` leaves
+        ``run_info.txt`` alone). The durable PFS copy, if flushed, is left
+        in place."""
+        self._mgr_request("fs_unlink", {"path": path})
+
+
+# interval helpers shared by the read-assembly path ------------------------
+
+def _merge(iv: List[List[int]]) -> List[List[int]]:
+    out: List[List[int]] = []
+    for lo, hi in sorted(iv):
+        if out and lo <= out[-1][1]:
+            out[-1][1] = max(out[-1][1], hi)
+        else:
+            out.append([lo, hi])
+    return out
+
+
+def _gaps(covered: List[List[int]], lo: int, hi: int) -> List[List[int]]:
+    gaps = []
+    pos = lo
+    for a, b in covered:
+        if a > pos:
+            gaps.append([pos, min(a, hi)])
+        pos = max(pos, b)
+        if pos >= hi:
+            break
+    if pos < hi:
+        gaps.append([pos, hi])
+    return [g for g in gaps if g[0] < g[1]]

@@ -1,6 +1,8 @@
 """Burst buffer manager (paper §II, §IV-A): singleton that initializes the
-server ring, distributes membership to servers and clients, and brokers
-failure reports and joins. Collocated with a server on a real deployment."""
+server ring, distributes membership to servers and clients, brokers failure
+reports and joins, and keeps the file-session namespace registry (paths
+opened through BBFileSystem, with their last synced sizes). Collocated with
+a server on a real deployment."""
 from __future__ import annotations
 
 import threading
@@ -27,6 +29,8 @@ class BBManager(threading.Thread):
         self._stop = threading.Event()
         self.ring_ready = threading.Event()
         self.errors: List[dict] = []
+        # file-session namespace (BBFileSystem): path -> metadata
+        self.namespace: Dict[str, dict] = {}
 
     # ------------------------------------------------------------------ api
     def alive_ring(self) -> List[str]:
@@ -114,6 +118,71 @@ class BBManager(threading.Thread):
 
     def _on_server_error(self, msg: Message):
         self.errors.append(msg.payload)
+
+    # file-session namespace (BBFileSystem) --------------------------------
+    def _on_fs_open(self, msg: Message):
+        """Register a path on open-for-write; idempotent. "w" resets the
+        recorded size (truncate semantics); ``existed`` reports the state
+        BEFORE this open so the client knows to truncate stale chunks."""
+        path = msg.payload["path"]
+        # any prior open-for-write counts as existing — even an unsynced
+        # (crashed) incarnation may have landed chunks that must truncate
+        existed = path in self.namespace
+        ent = self.namespace.setdefault(
+            path, {"size": 0, "synced": False, "opened_by": set()})
+        ent["opened_by"].add(msg.src)
+        if msg.payload.get("mode") == "w":
+            ent["size"] = 0
+            ent["synced"] = False
+        self.transport.reply(self.tname, msg, "fs_open_ack",
+                             {"path": path, "existed": existed,
+                              "size": ent["size"]})
+
+    def _on_fs_sync(self, msg: Message):
+        """A sync barrier completed: record the session's high-water size."""
+        path = msg.payload["path"]
+        ent = self.namespace.setdefault(
+            path, {"size": 0, "synced": False, "opened_by": set()})
+        ent["size"] = max(ent["size"], msg.payload.get("size", 0))
+        ent["synced"] = True
+        self.transport.reply(self.tname, msg, "fs_sync_ack", {"path": path})
+
+    def _on_fs_stat(self, msg: Message):
+        """Namespace view of a path: the only source that knows about
+        zero-byte synced files (no chunks, no PFS copy)."""
+        ent = self.namespace.get(msg.payload["path"])
+        self.transport.reply(self.tname, msg, "fs_stat_ack",
+                             {"known": ent is not None and ent["synced"],
+                              "size": ent["size"] if ent else 0})
+
+    def _on_fs_list(self, msg: Message):
+        # synced entries only, matching _on_fs_stat's "known" rule — an
+        # opened-but-never-synced path must not appear to exist
+        prefix = msg.payload.get("prefix", "")
+        self.transport.reply(
+            self.tname, msg, "fs_list_ack",
+            {"paths": sorted(p for p, e in self.namespace.items()
+                             if p.startswith(prefix) and e["synced"])})
+
+    def _on_fs_truncate(self, msg: Message):
+        path = msg.payload["path"]
+        ent = self.namespace.get(path)
+        if ent is not None:
+            ent["size"] = 0
+            ent["synced"] = False
+        self.transport.reply(self.tname, msg, "fs_truncate_ack",
+                             {"path": path})
+
+    def _on_fs_unlink(self, msg: Message):
+        """Drop a path from the namespace and its buffered chunks on every
+        server. Uses the exact-match file_truncate message, NOT prefix
+        eviction — unlinking "run" must not destroy "run_info.txt"."""
+        path = msg.payload["path"]
+        self.namespace.pop(path, None)
+        for s in self.alive_ring():
+            self.transport.send(self.tname, s, "file_truncate",
+                                {"file": path})
+        self.transport.reply(self.tname, msg, "fs_unlink_ack", {"path": path})
 
     def begin_flush(self, epoch: int):
         for s in self.alive_ring():

@@ -79,6 +79,10 @@ class BBServer(threading.Thread):
         self._pending_primary: Dict[tuple, List] = {}
         # segments buffered for flush: key -> Segment
         self._segments: Dict[str, twophase.Segment] = {}
+        # per-file chunk manifest (BBFileSystem metadata path):
+        # file -> {offset: (key, length)} — same facts as _segments, indexed
+        # by file so open/stat/read never scan every buffered key
+        self._files: Dict[str, Dict[int, tuple]] = {}
         # flush state per epoch
         self._flush: Dict[int, dict] = {}
         # post-shuffle lookup table: file -> global size (paper §III-C)
@@ -175,6 +179,29 @@ class BBServer(threading.Thread):
             self._re_replicate()
 
     # put path -------------------------------------------------------------
+    def _record_segment(self, key: str, file: Optional[str], offset: int,
+                        length: int):
+        """Track a buffered chunk in both flush-segment and per-file views."""
+        if file is None:
+            return
+        old = self._segments.get(key)
+        if old is not None:
+            fmap = self._files.get(old.file)
+            if fmap is not None and fmap.get(old.offset, (None, 0))[0] == key:
+                del fmap[old.offset]
+        self._segments[key] = twophase.Segment(file, offset, length)
+        self._files.setdefault(file, {})[offset] = (key, length)
+
+    def _drop_segment(self, key: str):
+        seg = self._segments.pop(key, None)
+        if seg is None:
+            return
+        fmap = self._files.get(seg.file)
+        if fmap is not None and fmap.get(seg.offset, (None, 0))[0] == key:
+            del fmap[seg.offset]
+            if not fmap:
+                del self._files[seg.file]
+
     def _on_put(self, msg: Message):
         p = msg.payload
         key, value = p["key"], p["value"]
@@ -193,9 +220,8 @@ class BBServer(threading.Thread):
         tier = self.store.put(key, value)
         if tier == "ssd":
             self.stats["spills"] += 1
-        if "file" in p and p["file"] is not None:
-            self._segments[key] = twophase.Segment(
-                p["file"], p["offset"], len(value))
+        self._record_segment(key, p.get("file"), p.get("offset", 0),
+                             len(value))
 
         chain: List[str] = p.get("chain")
         if chain is None:
@@ -224,9 +250,8 @@ class BBServer(threading.Thread):
             tier = self.store.put(it["key"], it["value"])
             if tier == "ssd":
                 self.stats["spills"] += 1
-            if it.get("file") is not None:
-                self._segments[it["key"]] = twophase.Segment(
-                    it["file"], it["offset"], len(it["value"]))
+            self._record_segment(it["key"], it.get("file"),
+                                 it.get("offset", 0), len(it["value"]))
         chain = self.successors(self.replication - 1)
         if chain:
             nxt, rest = chain[0], chain[1:]
@@ -242,9 +267,8 @@ class BBServer(threading.Thread):
     def _on_replica_put(self, msg: Message):
         p = msg.payload
         self.store.put(p["key"], p["value"])
-        if p.get("file") is not None:
-            self._segments[p["key"]] = twophase.Segment(
-                p["file"], p["offset"], len(p["value"]))
+        self._record_segment(p["key"], p.get("file"), p.get("offset", 0),
+                             len(p["value"]))
         if p["chain"]:
             nxt, rest = p["chain"][0], p["chain"][1:]
             self.transport.send(self.tname, nxt, "replica_put",
@@ -259,9 +283,8 @@ class BBServer(threading.Thread):
         p = msg.payload
         for it in p["items"]:
             self.store.put(it["key"], it["value"])
-            if it.get("file") is not None:
-                self._segments[it["key"]] = twophase.Segment(
-                    it["file"], it["offset"], len(it["value"]))
+            self._record_segment(it["key"], it.get("file"),
+                                 it.get("offset", 0), len(it["value"]))
         if p["chain"]:
             nxt, rest = p["chain"][0], p["chain"][1:]
             self.transport.send(self.tname, nxt, "replica_put_batch",
@@ -354,6 +377,43 @@ class BBServer(threading.Thread):
             doms = twophase.domains(size, self.alive_ring())
         self.transport.reply(self.tname, msg, "file_info_ack",
                              {"file": f, "size": size, "domains": doms})
+
+    # file-session metadata (BBFileSystem) ---------------------------------
+    def _file_stat_payload(self, f: str) -> dict:
+        fmap = self._files.get(f, {})
+        buffered = max((off + ln for off, (_, ln) in fmap.items()), default=0)
+        return {"file": f, "buffered": buffered, "chunks": len(fmap),
+                "flushed_size": self.lookup_table.get(f),
+                "known": f in self._files or f in self.lookup_table}
+
+    def _on_file_stat(self, msg: Message):
+        """Per-file metadata: buffered extent + chunk count from the local
+        manifest, durable size from the post-shuffle lookup table."""
+        self.transport.reply(self.tname, msg, "file_stat_ack",
+                             self._file_stat_payload(msg.payload["file"]))
+
+    def _on_file_chunks(self, msg: Message):
+        """The local chunk manifest for one file: [(offset, key, length)].
+        Clients merge manifests across servers to assemble buffered reads
+        without knowing the writer's striping."""
+        fmap = self._files.get(msg.payload["file"], {})
+        chunks = [[off, key, ln] for off, (key, ln) in fmap.items()]
+        self.transport.reply(self.tname, msg, "file_chunks_ack",
+                             {"file": msg.payload["file"], "chunks": chunks})
+
+    def _on_file_truncate(self, msg: Message):
+        """Open-for-write truncation: drop every buffered chunk of the file
+        (primary and replica copies alike — the message is broadcast), its
+        shuffle data, and its lookup-table entry, so a rewrite can never
+        read back stale tail bytes from a longer previous incarnation."""
+        f = msg.payload["file"]
+        for off, (key, _ln) in self._files.pop(f, {}).items():
+            self.store.delete(key)
+            self._segments.pop(key, None)
+        self.lookup_table.pop(f, None)
+        self._domain_data.pop(f, None)
+        self.transport.reply(self.tname, msg, "file_truncate_ack",
+                             {"file": f})
 
     # stabilization --------------------------------------------------------
     # Fully asynchronous (the server loop never blocks): pings are fired and
@@ -556,11 +616,14 @@ class BBServer(threading.Thread):
         for key in list(self.store.keys()):
             if key.startswith(prefix):
                 self.store.delete(key)
-                self._segments.pop(key, None)
+                self._drop_segment(key)
         self.store.compact()
         for f in list(self._domain_data):
             if f.startswith(prefix):
                 del self._domain_data[f]
+        for f in list(self._files):
+            if f.startswith(prefix):
+                del self._files[f]
 
     def _on_stats_query(self, msg: Message):
         self.transport.reply(self.tname, msg, "stats", {

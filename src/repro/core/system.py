@@ -15,6 +15,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.client import BBClient
+from repro.core.filesystem import BBFileSystem
 from repro.core.manager import BBManager
 from repro.core.server import BBServer
 from repro.core.transport import Transport
@@ -30,9 +31,10 @@ class BBConfig:
     ssd_dir: Optional[str] = None       # None -> tmpdir
     pfs_dir: Optional[str] = None       # None -> tmpdir
     stabilize_interval: float = 0.25
-    # async put pipeline (paper Fig 4) / client-side write coalescing
+    # write pipeline (paper Fig 4) / client-side write coalescing
     batch_bytes: int = 1 << 20          # flush a coalesced batch at this size
-    coalesce_threshold: int = 64 << 10  # put_async values below this batch
+    coalesce_threshold: int = 64 << 10  # writes below this auto-coalesce
+    chunk_bytes: int = 4 << 20          # BBFile striping unit
 
 
 class BurstBufferSystem:
@@ -61,6 +63,7 @@ class BurstBufferSystem:
                      batch_bytes=cfg.batch_bytes,
                      coalesce_threshold=cfg.coalesce_threshold)
             for i in range(cfg.num_clients)]
+        self._fs: Optional[BBFileSystem] = None
 
     # ---------------------------------------------------------------- launch
     def start(self):
@@ -74,6 +77,8 @@ class BurstBufferSystem:
         return self
 
     def stop(self):
+        for c in self.clients:
+            c.close()
         for s in self.servers.values():
             s.stop()
         self.manager.stop()
@@ -86,6 +91,15 @@ class BurstBufferSystem:
         self.stop()
 
     # --------------------------------------------------------------- actions
+    def fs(self) -> BBFileSystem:
+        """The file-session facade over this system's clients (one per
+        application; handles from fs().open() stripe across all clients)."""
+        if self._fs is None:
+            self._fs = BBFileSystem(self.clients,
+                                    chunk_bytes=self.cfg.chunk_bytes,
+                                    pfs_dir=self.pfs_dir)
+        return self._fs
+
     def flush(self, epoch: int, timeout: float = 30.0) -> bool:
         self.manager.begin_flush(epoch)
         return self.manager.wait_flush(epoch, timeout)

@@ -34,7 +34,8 @@ def test_put_async_wait_acks_roundtrip(bb4):
     blobs = {f"a:{i}": _blob(rng) for i in range(12)}
     for i, (k, v) in enumerate(blobs.items()):
         c.put_async(k, v, file="fa", offset=i * (32 << 10), coalesce=False)
-    assert c.outstanding() == 12
+    # the ACK pump drains concurrently, so some ops may already be done
+    assert c.outstanding() <= 12
     assert c.wait_acks(15.0)
     assert c.outstanding() == 0
     for k, v in blobs.items():

@@ -1,0 +1,404 @@
+"""BBFileSystem / BBFile / BBFuture: the unified file-session API.
+
+Covers the ISSUE-2 acceptance surface: open/write/sync/read roundtrips,
+future error propagation (failures surface on the future / the sync()
+barrier, not on a shared error list), failover mid-file, the wait_acks
+timeout regression (a drain can never report success while ops are still
+buffered), and namespace metadata (stat/exists/listdir/unlink)."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BBConfig, BBFuture, BBWriteError, BurstBufferSystem)
+
+
+@pytest.fixture()
+def bb4():
+    sys_ = BurstBufferSystem(BBConfig(
+        num_servers=4, num_clients=4, placement="iso",
+        dram_capacity=8 << 20, stabilize_interval=0.15)).start()
+    yield sys_
+    sys_.stop()
+
+
+def _blob(rng, n):
+    return rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+
+
+# ------------------------------------------------------------ write + read
+
+def test_open_write_sync_read_roundtrip(bb4):
+    rng = np.random.default_rng(0)
+    data = _blob(rng, 700_000)
+    fs = bb4.fs()
+    with fs.open("f1", "w", policy="async", chunk_bytes=64 << 10) as f:
+        fut = f.pwrite(data, 0)
+        f.sync()
+        assert fut.done() and fut.result() is True
+    r = fs.open("f1", "r")
+    assert r.size == len(data)
+    assert r.pread(0, len(data)) == data
+    # unaligned interior range crossing chunk boundaries
+    assert r.pread(100_001, 200_000) == data[100_001:300_001]
+
+
+def test_write_advances_cursor_and_seek(bb4):
+    fs = bb4.fs()
+    with fs.open("f2", "w", policy="batched") as f:
+        f.write(b"hello ")
+        f.write(b"world")
+        assert f.tell() == 11
+    r = fs.open("f2", "r")
+    assert r.read() == b"hello world"
+    r.seek(6)
+    assert r.read(5) == b"world"
+
+
+def test_append_mode_continues_at_size(bb4):
+    fs = bb4.fs()
+    with fs.open("f3", "w") as f:
+        f.write(b"part-one|")
+    with fs.open("f3", "a") as f:
+        assert f.tell() == 9
+        f.write(b"part-two")
+    assert fs.open("f3", "r").read() == b"part-one|part-two"
+
+
+def test_flush_byte_exact_through_handles(bb4):
+    """Chunks written through handles must two-phase-flush byte-exactly,
+    and remain readable through the same handle API afterwards."""
+    rng = np.random.default_rng(1)
+    data = _blob(rng, 512 << 10)
+    fs = bb4.fs()
+    with fs.open("ckpt_fs", "w", policy="batched",
+                 chunk_bytes=32 << 10) as f:
+        f.pwrite(data, 0)
+    assert bb4.flush(epoch=31, timeout=30)
+    assert open(os.path.join(bb4.pfs_dir, "ckpt_fs"), "rb").read() == data
+    assert fs.open("ckpt_fs", "r").pread(0, len(data)) == data
+
+
+def test_read_falls_back_to_pfs_after_eviction(bb4):
+    rng = np.random.default_rng(2)
+    data = _blob(rng, 256 << 10)
+    fs = bb4.fs()
+    with fs.open("evicted_f", "w", chunk_bytes=32 << 10) as f:
+        f.pwrite(data, 0)
+    assert bb4.flush(epoch=32, timeout=30)
+    bb4.evict("evicted_f")
+    time.sleep(0.3)                      # evict_epoch is fire-and-forget
+    assert fs.open("evicted_f", "r").pread(0, len(data)) == data
+
+
+# --------------------------------------------------------- error propagation
+
+def test_future_error_propagation_all_servers_dead():
+    """Per-op failures surface as BBWriteError on the future and on the
+    sync() barrier — not on a shared last_failed snapshot."""
+    sys_ = BurstBufferSystem(BBConfig(num_servers=2, num_clients=1,
+                                      dram_capacity=8 << 20)).start()
+    try:
+        for c in sys_.clients:
+            c.put_timeout = 0.4
+        fs = sys_.fs()
+        f = fs.open("doomed", "w", policy="async")
+        sys_.kill_server("server/0")
+        sys_.kill_server("server/1")
+        fut = f.pwrite(b"x" * 1000, 0)
+        exc = fut.exception(timeout=15.0)
+        assert isinstance(exc, BBWriteError)
+        assert "doomed:0" in exc.keys
+        with pytest.raises(BBWriteError):
+            f.sync(timeout=15.0)
+        with pytest.raises(BBWriteError):
+            fut.result()
+    finally:
+        sys_.stop()
+
+
+def test_sync_collects_all_failed_chunk_keys():
+    sys_ = BurstBufferSystem(BBConfig(num_servers=2, num_clients=2,
+                                      dram_capacity=8 << 20)).start()
+    try:
+        for c in sys_.clients:
+            c.put_timeout = 0.4
+        fs = sys_.fs()
+        f = fs.open("doomed2", "w", policy="async", chunk_bytes=1 << 10)
+        sys_.kill_server("server/0")
+        sys_.kill_server("server/1")
+        f.pwrite(b"y" * 4096, 0)         # 4 chunks, all doomed
+        with pytest.raises(BBWriteError) as ei:
+            f.sync(timeout=20.0)
+        assert len(ei.value.keys) >= 1   # every failed chunk is named
+    finally:
+        sys_.stop()
+
+
+def test_failover_mid_file_write(bb4):
+    """Kill a server while a file is half-written: outstanding chunks must
+    confirm the failure, re-issue to the failover owner, and the sync
+    barrier must still succeed with all bytes readable."""
+    rng = np.random.default_rng(3)
+    data = _blob(rng, 256 << 10)
+    for c in bb4.clients:
+        c.put_timeout = 0.8
+    fs = bb4.fs()
+    f = fs.open("failover_f", "w", policy="async", chunk_bytes=16 << 10)
+    f.pwrite(data[:128 << 10], 0)
+    bb4.kill_server("server/2")
+    f.pwrite(data[128 << 10:], 128 << 10)
+    f.sync(timeout=30.0)
+    assert sum(c.stats["failovers"] for c in bb4.clients) >= 1
+    got = fs.open("failover_f", "r").pread(0, len(data))
+    assert got == data
+
+
+# ------------------------------------------------------- wait_acks regression
+
+def test_wait_acks_timeout_cannot_report_true_with_unflushed_items(bb4):
+    """Regression (ISSUE 2): if coalesced items cannot be shipped, a drain
+    timeout must report failure — outstanding() is authoritative, so items
+    parked in the coalesce buffer can never be mistaken for acked."""
+    c = bb4.clients[0]
+    c.put_async("stuck:0", b"z" * 100, coalesce=True)
+    assert c.outstanding() == 1
+    c.flush_coalesced = lambda: None          # flush path wedged
+    assert c.wait_acks(0.3) is False
+    assert "stuck:0" in c.failed_keys()
+    assert c.outstanding() == 0               # abandoned, not leaked
+
+
+def test_wait_acks_failure_also_on_future(bb4):
+    c = bb4.clients[0]
+    fut = c.put_async("stuck:1", b"z" * 100, coalesce=True)
+    c.flush_coalesced = lambda: None
+    assert c.wait_acks(0.3) is False
+    assert isinstance(fut.exception(1.0), BBWriteError)
+
+
+# ------------------------------------------------------------------ BBFuture
+
+def test_future_gather_success_and_failure():
+    f1, f2 = BBFuture("a"), BBFuture("b")
+    g = BBFuture.gather([f1, f2])
+    assert not g.done()
+    f1._set_result(True)
+    assert not g.done()
+    f2._set_result(True)
+    assert g.result(1.0) is True
+
+    f3, f4 = BBFuture("c"), BBFuture("d")
+    g2 = BBFuture.gather([f3, f4])
+    f3._set_exception(BBWriteError("c", "boom"))
+    assert isinstance(g2.exception(1.0), BBWriteError)
+
+    assert BBFuture.gather([]).done()
+
+
+def test_future_first_win_completion():
+    f = BBFuture("k")
+    f._set_exception(BBWriteError("k", "timeout"))
+    f._set_result(True)                       # late ACK must be ignored
+    assert isinstance(f.exception(1.0), BBWriteError)
+
+
+def test_future_result_timeout():
+    with pytest.raises(TimeoutError):
+        BBFuture("k").result(0.05)
+
+
+# ----------------------------------------------------------------- namespace
+
+def test_stat_exists_listdir_unlink(bb4):
+    fs = bb4.fs()
+    assert not fs.exists("nsfile")
+    with pytest.raises(FileNotFoundError):
+        fs.open("nsfile", "r")
+    with fs.open("nsfile", "w") as f:
+        f.pwrite(b"q" * 5000, 0)
+    st = fs.stat("nsfile")
+    assert st["size"] == 5000 and st["buffered"] == 5000
+    assert fs.exists("nsfile")
+    assert "nsfile" in fs.listdir()
+    assert fs.listdir("ns") == ["nsfile"]
+    fs.unlink("nsfile")
+    time.sleep(0.3)                      # eviction is fire-and-forget
+    assert not fs.exists("nsfile")
+
+
+def test_empty_file_visible_via_namespace(bb4):
+    """A zero-byte synced file has no chunks and no PFS copy — only the
+    manager namespace knows it. stat/exists/open('r') must still see it."""
+    fs = bb4.fs()
+    with fs.open("empty_f", "w"):
+        pass
+    assert fs.exists("empty_f")
+    assert fs.stat("empty_f")["size"] == 0
+    assert fs.open("empty_f", "r").read() == b""
+    assert "empty_f" in fs.listdir()
+
+
+def test_sync_failure_consumed_from_legacy_drain():
+    """A failure observed on the sync() barrier must not ALSO fail a later
+    legacy wait_acks() cycle of unrelated successful ops."""
+    sys_ = BurstBufferSystem(BBConfig(num_servers=2, num_clients=1,
+                                      dram_capacity=8 << 20)).start()
+    try:
+        c = sys_.clients[0]
+        c.put_timeout = 0.4
+        fs = sys_.fs()
+        f = fs.open("observed", "w", policy="async")
+        sys_.kill_server("server/0")
+        sys_.kill_server("server/1")
+        f.pwrite(b"x" * 1000, 0)
+        with pytest.raises(BBWriteError):
+            f.sync(timeout=15.0)
+        assert c.wait_acks(1.0) is True          # nothing outstanding
+        assert c.failed_keys() == []
+    finally:
+        sys_.stop()
+
+
+def test_closed_handle_rejects_io(bb4):
+    fs = bb4.fs()
+    f = fs.open("closed_f", "w")
+    f.write(b"x")
+    f.close()
+    with pytest.raises(ValueError):
+        f.write(b"y")
+    r = fs.open("closed_f", "r")
+    with pytest.raises(ValueError):
+        r.pwrite(b"y", 0)
+
+
+def test_reopen_w_truncates_previous_incarnation(bb4):
+    """A shorter rewrite must never read back stale tail bytes — buffered
+    chunks, lookup-table entries, and the PFS copy are all dropped."""
+    rng = np.random.default_rng(9)
+    long_data = _blob(rng, 200 << 10)
+    short_data = _blob(rng, 50 << 10)
+    fs = bb4.fs()
+    with fs.open("trunc_f", "w", chunk_bytes=16 << 10) as f:
+        f.pwrite(long_data, 0)
+    assert bb4.flush(epoch=41, timeout=30)       # durable long incarnation
+    with fs.open("trunc_f", "w", chunk_bytes=16 << 10) as f:
+        f.pwrite(short_data, 0)
+    assert fs.stat("trunc_f")["size"] == len(short_data)
+    r = fs.open("trunc_f", "r")
+    assert r.read() == short_data
+    # reading past the new EOF short-reads instead of resurrecting old bytes
+    assert r.pread(len(short_data), 1000) == b""
+
+
+def test_reopen_w_truncates_unsynced_incarnation(bb4):
+    """A crashed writer that never reached sync() still landed chunks;
+    the next open-for-write must truncate them too."""
+    fs = bb4.fs()
+    f = fs.open("crash_f", "w", policy="sync", chunk_bytes=4 << 10)
+    f.pwrite(b"OLD!" * 4096, 0)              # 16 KB landed, no sync/close
+    with fs.open("crash_f", "w") as g:
+        g.pwrite(b"new" * 100, 0)
+    assert fs.stat("crash_f")["size"] == 300
+    assert fs.open("crash_f", "r").read() == b"new" * 100
+
+
+def test_unlink_is_exact_not_prefix(bb4):
+    """unlink("run") must not destroy "run_info.txt" (chunk eviction goes
+    through exact-match file_truncate, not prefix eviction)."""
+    fs = bb4.fs()
+    with fs.open("run", "w") as f:
+        f.write(b"R" * 2000)
+    with fs.open("run_info.txt", "w") as f:
+        f.write(b"I" * 2000)
+    fs.unlink("run")
+    time.sleep(0.3)
+    assert not fs.exists("run")
+    assert fs.open("run_info.txt", "r").read() == b"I" * 2000
+
+
+def test_read_after_write_same_handle(bb4):
+    """pwrite must invalidate the cached chunk manifest so later reads on
+    the same handle see the new chunks."""
+    fs = bb4.fs()
+    f = fs.open("raw_f", "w", chunk_bytes=4 << 10)
+    f.pwrite(b"A" * 4096, 0)
+    f.sync()
+    assert f.pread(0, 10) == b"A" * 10           # caches the manifest
+    f.pwrite(b"B" * 4096, 4096)
+    f.sync()
+    assert f.pread(4096, 10) == b"B" * 10
+
+
+def test_open_w_truncates_legacy_shim_incarnation(bb4):
+    """Chunks written through the legacy put(file=...) shims share the key
+    namespace; open('w') must find and truncate them via the servers'
+    manifests even though the manager never saw the file."""
+    c = bb4.clients[0]
+    assert c.put("legacy_f:0", b"Y" * 1000, file="legacy_f", offset=0)
+    assert c.put("legacy_f:1000", b"Y" * 1000, file="legacy_f", offset=1000)
+    fs = bb4.fs()
+    with fs.open("legacy_f", "w") as f:
+        f.pwrite(b"z" * 500, 0)
+    assert fs.stat("legacy_f")["size"] == 500
+    assert fs.open("legacy_f", "r").read() == b"z" * 500
+
+
+def test_pread_short_reads_at_eof_instead_of_zero_fill(bb4):
+    fs = bb4.fs()
+    with fs.open("short_f", "w") as f:
+        f.pwrite(b"Q" * 100, 0)
+    r = fs.open("short_f", "r")
+    assert r.pread(50, 500) == b"Q" * 50         # clamped, not zero-padded
+    assert r.pread(100, 10) == b""
+
+
+def test_blocking_put_failure_does_not_poison_wait_acks():
+    """Regression: a put() the caller already saw fail must not make a
+    later wait_acks() of unrelated, successful async ops report False."""
+    from repro.core import BBClient, BBServer, Transport
+    tr = Transport()
+    srv = BBServer("s0", tr, replication=1)
+    srv.ring, srv.alive = ["s0"], {"s0": True}
+    srv.start()
+    c = BBClient("c0", tr, replication=1, put_timeout=0.3)
+    try:
+        assert c.put("doomed", b"v") is False    # no ring yet -> fails
+        c._set_ring(["s0"])
+        fut = c.put_async("fine", b"x" * 100, coalesce=False)
+        assert c.wait_acks(5.0) is True
+        assert c.failed_keys() == []
+        assert fut.result(1.0) is True
+    finally:
+        c.close()
+        srv.stop()
+
+
+def test_client_close_fails_inflight_futures():
+    """Teardown must complete every outstanding future so no thread can
+    block forever on a write the pump will never finish."""
+    sys_ = BurstBufferSystem(BBConfig(num_servers=2, num_clients=1,
+                                      dram_capacity=8 << 20)).start()
+    try:
+        c = sys_.clients[0]
+        sys_.kill_server("server/0")
+        sys_.kill_server("server/1")
+        fut = c.put_async("never", b"n" * 100, coalesce=False)
+        c.close()
+        assert isinstance(fut.exception(2.0), BBWriteError)
+    finally:
+        sys_.stop()
+
+
+def test_compat_shims_share_the_pipeline(bb4):
+    """put/put_async are shims over submit(): bytes written through them are
+    visible to file handles and vice versa (same key namespace)."""
+    c = bb4.clients[0]
+    assert c.put("shim_f:0", b"A" * 100, file="shim_f", offset=0)
+    fut = c.put_async("shim_f:100", b"B" * 100, file="shim_f", offset=100,
+                      coalesce=False)
+    assert c.wait_acks(10.0)
+    assert fut.result(1.0) is True
+    fs = bb4.fs()
+    assert fs.open("shim_f", "r").pread(0, 200) == b"A" * 100 + b"B" * 100

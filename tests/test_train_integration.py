@@ -35,6 +35,7 @@ def _params_equal(a, b) -> bool:
                zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
+@pytest.mark.slow
 def test_failure_restore_bit_exact_continuation():
     cfg, model, opt, state, step_fn, pipe = _setup()
 
@@ -80,6 +81,7 @@ def test_failure_restore_bit_exact_continuation():
         "restored continuation diverged from the uninterrupted run"
 
 
+@pytest.mark.slow
 def test_checkpoint_overlap_does_not_block_training():
     """Ingest time (critical path) must be far below the full flush time of
     the same bytes — the paper's core value proposition."""
