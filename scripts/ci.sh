@@ -4,14 +4,20 @@
 #
 #   scripts/ci.sh                # tier-1 test suite
 #   scripts/ci.sh --bench-smoke  # tiny ingest benchmark through the
-#                                # BBFileSystem API; fails on zero bandwidth
+#                                # BBFileSystem API (fails on zero
+#                                # bandwidth), then a capped over-capacity
+#                                # drain run that fails if sustained ingest
+#                                # under the autonomous drainer drops below
+#                                # the async put baseline floor or any
+#                                # read-back byte differs
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     shift
-    exec timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_ingress --smoke "$@"
+    timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_ingress --smoke "$@"
+    exec timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_drain --smoke
 fi
 
 exec timeout "${CI_TIMEOUT:-1800}" python -m pytest -q -m "not slow" "$@"

@@ -12,9 +12,17 @@ entirely against the BBFileSystem file-session API:
      checkpoint drains to the PFS while the next compute phase runs.
   3. Recent epochs are retained in the buffer (paper §III-C) so restore()
      is served from server DRAM/SSD without touching the PFS; older epochs
-     are evicted once durably flushed.
+     are evicted once durably flushed (retention eviction leaves tombstones,
+     so even a direct get of a retired chunk falls through to the PFS).
   4. restore() reads through BBFile.pread, which itself falls back:
-     buffered chunks -> BB lookup-table range read -> PFS file.
+     buffered chunks -> BB lookup-table range read -> PFS file. The same
+     chain covers chunks the autonomous drain engine evicted under memory
+     pressure mid-training — a restore spanning drained data is byte-exact
+     without the checkpoint manager knowing anything moved.
+
+When the servers run with the drain engine enabled (the default), save()
+records the cluster pressure snapshot alongside ingest timings, so training
+logs show how close the buffer ran to its watermarks at each step.
 
 io_mode maps directly onto BBFile write policies: "sync" (one replicated
 round-trip per chunk), "async" (pipelined, barrier at close), "batched"
@@ -86,7 +94,8 @@ class BBCheckpointManager:
 
         self.saved_steps.append(step)
         self.metrics[step] = {"ingest_s": ingest_s,
-                              "bytes": manifest["total_bytes"]}
+                              "bytes": manifest["total_bytes"],
+                              "pressure": self.system.pressure()}
 
         epoch = step
         if blocking_flush:

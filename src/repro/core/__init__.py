@@ -5,6 +5,7 @@
 # restart-from-buffer support. See DESIGN.md for the TPU/JAX adaptation.
 from repro.core.system import BBConfig, BurstBufferSystem  # noqa: F401
 from repro.core.client import BBClient                     # noqa: F401
+from repro.core.drain import DrainConfig, DrainEngine      # noqa: F401
 from repro.core.filesystem import (BBError, BBFile,        # noqa: F401
                                    BBFileSystem, BBFuture, BBWriteError)
 from repro.core.server import BBServer                     # noqa: F401

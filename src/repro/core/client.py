@@ -112,7 +112,8 @@ class BBClient:
         self.last_failed: List[str] = []
         self.stats = {"puts": 0, "put_bytes": 0, "redirects": 0,
                       "failovers": 0, "gets": 0, "bb_hits": 0,
-                      "async_puts": 0, "batched_puts": 0, "batches": 0}
+                      "async_puts": 0, "batched_puts": 0, "batches": 0,
+                      "evicted_reads": 0}
 
     # ------------------------------------------------------------ membership
     def connect(self, timeout: float = 10.0):
@@ -550,18 +551,31 @@ class BBClient:
 
     # ------------------------------------------------------------------- get
     def get(self, key: str) -> Optional[bytes]:
-        """Read back a buffered value, trying primary then replicas."""
+        """Read back a buffered value, trying primary then replicas. If every
+        copy was drained-and-evicted, fall through transparently: the miss
+        reply carries the chunk's (file, offset, length) residency record,
+        and the bytes come back via the post-shuffle lookup table / PFS —
+        callers never observe eviction."""
         self.stats["gets"] += 1
         try:
             replicas = self.replica_set(key)
         except RuntimeError:
             return None
+        evicted = None
         for target in replicas:
             r = self.transport.request(self.ep, target, "get", {"key": key},
                                        timeout=1.0)
             if r is not None and r.payload.get("hit"):
                 self.stats["bb_hits"] += 1
                 return r.payload["value"]
+            if r is not None and evicted is None:
+                evicted = r.payload.get("evicted")
+        if evicted is not None:
+            file, offset, length = evicted
+            data = self.read_file(file, offset, length)
+            if data is not None:
+                self.stats["evicted_reads"] += 1
+                return data
         return None
 
     def file_info(self, file: str):
@@ -608,8 +622,12 @@ class BBClient:
 
     def file_stat(self, file: str) -> dict:
         """Merged file metadata across alive servers: buffered extent,
-        chunk count, post-flush size (lookup table)."""
+        chunk count, post-flush size (lookup table), and physical residency
+        (bytes per tier, replica copies included — it reports where bytes
+        actually sit, so replication factors in)."""
         buffered, chunks, flushed, known = 0, 0, None, False
+        residency = {"dram": 0, "ssd": 0, "pfs": 0}
+        evicted_chunks = 0
         for s in self._alive_servers():
             r = self.transport.request(self.ep, s, "file_stat",
                                        {"file": file}, timeout=1.0)
@@ -621,8 +639,12 @@ class BBClient:
             if p["flushed_size"] is not None:
                 flushed = max(flushed or 0, p["flushed_size"])
             known = known or p["known"]
+            for tier, n in p.get("residency", {}).items():
+                residency[tier] = residency.get(tier, 0) + n
+            evicted_chunks += p.get("evicted_chunks", 0)
         return {"buffered": buffered, "chunks": chunks,
-                "flushed_size": flushed, "known": known}
+                "flushed_size": flushed, "known": known,
+                "residency": residency, "evicted_chunks": evicted_chunks}
 
     def read_file(self, file: str, offset: int, length: int
                   ) -> Optional[bytes]:

@@ -321,6 +321,9 @@ class BBFile:
                     c._consume_failed(key)
             raise BBWriteError(failed, "sync barrier found failed writes")
         self.fs._register_sync(self.path, self._size)
+        # an autonomous drain may have evicted or re-tiered chunks while the
+        # barrier waited; re-merge the manifests on the next read
+        self._chunks = None
         return self
 
     def close(self, timeout: float = 60.0):
@@ -496,7 +499,11 @@ class BBFileSystem:
     def stat(self, path: str) -> dict:
         """Merged metadata: buffered extent across servers' chunk manifests,
         post-flush lookup-table size, the PFS copy, and the manager's
-        namespace (which alone knows zero-byte synced files)."""
+        namespace (which alone knows zero-byte synced files). ``residency``
+        reports where the file's bytes physically sit (DRAM / SSD / PFS,
+        replica copies included) — the observable trace of the autonomous
+        drain engine, which moves bytes down the tiers without ever changing
+        what reads return."""
         c = self.clients[0]
         st = c.file_stat(path)
         buffered = st["buffered"]
@@ -513,7 +520,10 @@ class BBFileSystem:
             raise FileNotFoundError(path)
         return {"size": max(buffered, flushed, pfs, ns_size),
                 "buffered": buffered, "flushed_size": flushed,
-                "pfs_size": pfs, "chunks": st["chunks"]}
+                "pfs_size": pfs, "chunks": st["chunks"],
+                "residency": st.get("residency",
+                                    {"dram": 0, "ssd": 0, "pfs": 0}),
+                "evicted_chunks": st.get("evicted_chunks", 0)}
 
     def unlink(self, path: str):
         """Drop the path from the namespace and its buffered chunks on

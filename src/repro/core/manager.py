@@ -1,8 +1,13 @@
 """Burst buffer manager (paper §II, §IV-A): singleton that initializes the
 server ring, distributes membership to servers and clients, brokers failure
-reports and joins, and keeps the file-session namespace registry (paths
-opened through BBFileSystem, with their last synced sizes). Collocated with
-a server on a real deployment."""
+reports and joins, keeps the file-session namespace registry (paths opened
+through BBFileSystem, with their last synced sizes), and coordinates the
+autonomous drain engine's micro-epochs: servers report occupancy pressure
+and request drains; the manager serializes one drain micro-epoch at a time
+through the two-phase protocol, broadcasts the eviction once EVERY
+participant reported its PFS writes done, and aborts the epoch (nothing is
+evicted, nothing is lost) on any mid-epoch server death or timeout.
+Collocated with a server on a real deployment."""
 from __future__ import annotations
 
 import threading
@@ -11,10 +16,15 @@ from typing import Dict, List, Optional, Set
 
 from repro.core.transport import Message, Transport
 
+# drain micro-epochs live in their own id space so they can never collide
+# with application-chosen flush epochs
+DRAIN_EPOCH_BASE = 1 << 30
+
 
 class BBManager(threading.Thread):
     def __init__(self, transport: Transport, expected_servers: int,
-                 name: str = "manager"):
+                 name: str = "manager",
+                 drain_epoch_timeout: float = 12.0):
         super().__init__(daemon=True, name=name)
         self.tname = name
         self.transport = transport
@@ -31,6 +41,17 @@ class BBManager(threading.Thread):
         self.errors: List[dict] = []
         # file-session namespace (BBFileSystem): path -> metadata
         self.namespace: Dict[str, dict] = {}
+        # drain coordination: per-server pressure reports + one in-flight
+        # micro-epoch at a time (overlapping epochs share server-side
+        # shuffle buffers; serializing them keeps eviction decisions sound)
+        self.drain_epoch_timeout = drain_epoch_timeout
+        self.pressure: Dict[str, dict] = {}
+        self.drain_stats = {"epochs": 0, "aborts": 0,
+                            "evicted_keys": 0, "drained_bytes": 0}
+        self._drain: Optional[dict] = None
+        self._next_drain_epoch = DRAIN_EPOCH_BASE
+        self._flush_lock = threading.Lock()
+        self._user_flushes: Dict[int, float] = {}   # epoch -> begin time
 
     # ------------------------------------------------------------------ api
     def alive_ring(self) -> List[str]:
@@ -57,6 +78,17 @@ class BBManager(threading.Thread):
     def run(self):
         while not self._stop.is_set():
             msg = self.ep.recv(timeout=0.05)
+            now = time.monotonic()
+            if self._drain is not None \
+                    and now - self._drain["started"] > self.drain_epoch_timeout:
+                self._abort_drain("timeout")
+            with self._flush_lock:
+                # a user epoch wedged past any plausible completion must not
+                # block drain micro-epochs forever
+                stale = now - 4 * self.drain_epoch_timeout
+                for e in [e for e, t in self._user_flushes.items()
+                          if t < stale]:
+                    del self._user_flushes[e]
             if msg is None:
                 continue
             handler = getattr(self, f"_on_{msg.kind}", None)
@@ -89,6 +121,10 @@ class BBManager(threading.Thread):
         if dead in self.dead or dead not in self.ring:
             return
         self.dead.add(dead)
+        # a death mid-drain invalidates the epoch's domain plan (the dead
+        # server's owned domains may never reach the PFS) — abort before
+        # anything can be evicted; the chunks re-drain from replicas later
+        self._abort_drain(f"server failure: {dead}")
         for dst in self.alive_ring() + sorted(self.clients):
             self.transport.send(self.tname, dst, "ring_update",
                                 {"dead": [dead]})
@@ -115,9 +151,71 @@ class BBManager(threading.Thread):
         self.flush_done.setdefault(epoch, set()).add(msg.payload["server"])
         self.flush_bytes[epoch] = self.flush_bytes.get(epoch, 0) \
             + msg.payload.get("bytes", 0)
+        with self._flush_lock:
+            if epoch in self._user_flushes and self.flush_complete(epoch):
+                del self._user_flushes[epoch]
+        d = self._drain
+        if d is not None and epoch == d["epoch"]:
+            d["done"].add(msg.payload["server"])
+            d["drained"].update(msg.payload.get("drained", []))
+            d["bytes"] += msg.payload.get("bytes", 0)
+            # strict completion: EVERY snapshot participant must report its
+            # PFS writes durable before eviction may be broadcast (a death
+            # mid-epoch goes through _abort_drain instead)
+            if d["done"] >= d["expected"]:
+                self._drain = None
+                self.drain_stats["epochs"] += 1
+                self.drain_stats["evicted_keys"] += len(d["drained"])
+                self.drain_stats["drained_bytes"] += d["bytes"]
+                keys = sorted(d["drained"])
+                for s in self.alive_ring():
+                    self.transport.send(self.tname, s, "drain_evict",
+                                        {"epoch": epoch, "keys": keys})
 
     def _on_server_error(self, msg: Message):
         self.errors.append(msg.payload)
+
+    # autonomous drain coordination (ISSUE 3) ------------------------------
+    def _on_drain_pressure(self, msg: Message):
+        self.pressure[msg.payload.get("server", msg.src)] = msg.payload
+
+    def _on_drain_request(self, msg: Message):
+        """A pressured server asked for a drain micro-epoch. One at a time,
+        and never while an application flush epoch is in flight — the two-
+        phase state (shuffle buffers, lookup sizes) is shared per server."""
+        with self._flush_lock:
+            busy = bool(self._user_flushes)
+        if self._drain is not None or busy or not self.ring:
+            return
+        epoch = self._next_drain_epoch
+        self._next_drain_epoch += 1
+        self._drain = {"epoch": epoch, "started": time.monotonic(),
+                       "expected": set(self.alive_ring()), "done": set(),
+                       "drained": set(), "bytes": 0,
+                       "requested_by": msg.payload.get("server")}
+        for s in self.alive_ring():
+            self.transport.send(self.tname, s, "flush_begin",
+                                {"epoch": epoch, "drain": True})
+
+    def _abort_drain(self, reason: str):
+        d, self._drain = self._drain, None
+        if d is None:
+            return
+        self.drain_stats["aborts"] += 1
+        # notify every epoch PARTICIPANT, not just the currently-alive ring:
+        # a falsely-dead server is still running and must refund its token
+        # budget and drop its epoch snapshot (really-dead ones black-hole)
+        for s in sorted(set(self.alive_ring()) | d["expected"]):
+            self.transport.send(self.tname, s, "flush_abort",
+                                {"epoch": d["epoch"], "reason": reason})
+
+    def pressure_report(self) -> dict:
+        """Cluster pressure view: per-server occupancy reports plus drain
+        progress counters."""
+        d = self._drain
+        return {"servers": dict(self.pressure),
+                "drain": dict(self.drain_stats),
+                "inflight_epoch": d["epoch"] if d is not None else None}
 
     # file-session namespace (BBFileSystem) --------------------------------
     def _on_fs_open(self, msg: Message):
@@ -185,6 +283,15 @@ class BBManager(threading.Thread):
         self.transport.reply(self.tname, msg, "fs_unlink_ack", {"path": path})
 
     def begin_flush(self, epoch: int):
+        """Start an application flush epoch. Serialized against drain
+        micro-epochs: overlapping epochs would share server-side shuffle
+        buffers and lookup sizes, so wait (bounded) for an in-flight drain
+        to finish or abort before broadcasting."""
+        deadline = time.monotonic() + self.drain_epoch_timeout
+        while self._drain is not None and time.monotonic() < deadline:
+            time.sleep(0.005)
+        with self._flush_lock:
+            self._user_flushes[epoch] = time.monotonic()
         for s in self.alive_ring():
             self.transport.send(self.tname, s, "flush_begin", {"epoch": epoch})
 

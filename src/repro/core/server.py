@@ -13,6 +13,12 @@ One thread per server. Responsibilities:
     domains, shuffle, one sequential PFS write per domain
   - post-shuffle lookup table (paper §III-C): (file -> global size), from
     which any server can compute which peer owns any byte range
+  - autonomous drain engine (ISSUE 3): watermark policy over LogStore
+    occupancy requests manager-coordinated drain micro-epochs that push
+    whole cold segments through the two-phase planner, then evict them
+    (index tombstones) once every participant reported the epoch durable;
+    a burst detector defers draining while ingest is hot and a token
+    bucket caps drain bandwidth so flushing never competes with absorption
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core import twophase
+from repro.core.drain import DrainConfig, DrainEngine
 from repro.core.tiering import LogStore
 from repro.core.transport import Message, Transport
 
@@ -55,17 +62,26 @@ class BBServer(threading.Thread):
     def __init__(self, name: str, transport: Transport, *,
                  dram_capacity: int = 64 << 20,
                  ssd_dir: Optional[str] = None,
+                 ssd_capacity: Optional[int] = None,
+                 segment_bytes: Optional[int] = None,
                  pfs_dir: str = "/tmp/pfs",
                  replication: int = 2,
-                 stabilize_interval: float = 0.25):
+                 stabilize_interval: float = 0.25,
+                 drain: Optional[DrainConfig] = None):
         super().__init__(daemon=True, name=name)
         self.tname = name
         self.transport = transport
         self.ep = transport.register(name)
-        self.store = LogStore(dram_capacity, ssd_dir, name=name.replace("/", "_"))
+        self.store = LogStore(dram_capacity, ssd_dir,
+                              name=name.replace("/", "_"),
+                              ssd_capacity=ssd_capacity,
+                              segment_bytes=segment_bytes)
         self.pfs_dir = pfs_dir
         self.replication = replication
         self.stabilize_interval = stabilize_interval
+        self.drain_cfg = drain or DrainConfig()
+        self.drainer = DrainEngine(self.drain_cfg) \
+            if self.drain_cfg.enabled else None
 
         self.ring: List[str] = []            # manager-ordered server list
         self.alive: Dict[str, bool] = {}
@@ -89,8 +105,21 @@ class BBServer(threading.Thread):
         self.lookup_table: Dict[str, int] = {}
         # domain data received from shuffle: (file, offset) -> bytes
         self._domain_data: Dict[str, Dict[int, bytes]] = {}
+        # drain-engine bookkeeping: evicted-chunk tombstone records (the
+        # transparent read path needs (file, offset, length) to fall through
+        # to the lookup table / PFS) and per-drain-epoch snapshots
+        self._evicted: Dict[str, tuple] = {}     # key -> (file, off, len)
+        self._evicted_files: Dict[str, Dict[int, tuple]] = {}
+        self._drain_epochs: Dict[int, dict] = {}  # epoch -> keys/gens/bytes
+        # epochs already written or aborted: late flush_meta/shuffle_done
+        # stragglers must not resurrect them through _flush_state's
+        # auto-create (a zombie entry would wedge self._flush forever and
+        # block the _domain_data reclamation gated on it)
+        self._closed_epochs: set = set()
+        self._last_pressure = 0.0
         self.stats = {"puts": 0, "batch_puts": 0, "redirects": 0, "spills": 0,
-                      "flushes": 0, "stabilize_repairs": 0}
+                      "flushes": 0, "stabilize_repairs": 0,
+                      "drain_epochs": 0, "drained_bytes": 0, "evictions": 0}
         # async stabilization state
         self._inflight_pings: Dict[int, tuple] = {}   # nonce -> (peer, deadline)
         self._ping_misses: Dict[str, int] = {}
@@ -145,6 +174,7 @@ class BBServer(threading.Thread):
                 self._stabilize(now)
             self._check_ping_deadlines(now)
             self._check_confirm_deadlines(now)
+            self._drain_tick(now)
 
     def stop(self):
         self._stop.set()
@@ -177,6 +207,7 @@ class BBServer(threading.Thread):
             self.alive[s] = True
         if dead:
             self._re_replicate()
+            self._prune_flush_expected(set(dead))
 
     # put path -------------------------------------------------------------
     def _record_segment(self, key: str, file: Optional[str], offset: int,
@@ -206,6 +237,8 @@ class BBServer(threading.Thread):
         p = msg.payload
         key, value = p["key"], p["value"]
         self.stats["puts"] += 1
+        if self.drainer is not None:
+            self.drainer.note_ingest(len(value))
 
         # load-balanced buffering: redirect if DRAM exhausted (paper §III-A)
         if p.get("redirectable", True) \
@@ -246,6 +279,8 @@ class BBServer(threading.Thread):
         items = msg.payload["items"]
         self.stats["puts"] += len(items)
         self.stats["batch_puts"] += 1
+        if self.drainer is not None:
+            self.drainer.note_ingest(sum(len(it["value"]) for it in items))
         for it in items:
             tier = self.store.put(it["key"], it["value"])
             if tier == "ssd":
@@ -266,6 +301,8 @@ class BBServer(threading.Thread):
 
     def _on_replica_put(self, msg: Message):
         p = msg.payload
+        if self.drainer is not None:
+            self.drainer.note_ingest(len(p["value"]))
         self.store.put(p["key"], p["value"])
         self._record_segment(p["key"], p.get("file"), p.get("offset", 0),
                              len(p["value"]))
@@ -281,6 +318,9 @@ class BBServer(threading.Thread):
 
     def _on_replica_put_batch(self, msg: Message):
         p = msg.payload
+        if self.drainer is not None:
+            self.drainer.note_ingest(sum(len(it["value"])
+                                         for it in p["items"]))
         for it in p["items"]:
             self.store.put(it["key"], it["value"])
             self._record_segment(it["key"], it.get("file"),
@@ -335,8 +375,14 @@ class BBServer(threading.Thread):
             self.transport.reply(self.tname, msg, "get_ack",
                                  {"key": key, "value": val, "hit": True})
             return
-        self.transport.reply(self.tname, msg, "get_ack",
-                             {"key": key, "value": None, "hit": False})
+        miss = {"key": key, "value": None, "hit": False}
+        ev = self._evicted.get(key)
+        if ev is not None:
+            # drained-and-evicted chunk: tell the client where the bytes
+            # live (file, offset, length) so it can fall through to the
+            # lookup-table range read / PFS — eviction stays invisible
+            miss["evicted"] = list(ev)
+        self.transport.reply(self.tname, msg, "get_ack", miss)
 
     def _on_read_range(self, msg: Message):
         """Serve a post-shuffle byte range of a flushed file (paper §III-C)."""
@@ -381,10 +427,19 @@ class BBServer(threading.Thread):
     # file-session metadata (BBFileSystem) ---------------------------------
     def _file_stat_payload(self, f: str) -> dict:
         fmap = self._files.get(f, {})
+        emap = self._evicted_files.get(f, {})
         buffered = max((off + ln for off, (_, ln) in fmap.items()), default=0)
+        residency = {"dram": 0, "ssd": 0, "pfs": 0}
+        for _off, (key, ln) in fmap.items():
+            tier = self.store.tier_of(key)
+            if tier in residency:
+                residency[tier] += ln
+        residency["pfs"] += sum(ln for _, ln in emap.values())
         return {"file": f, "buffered": buffered, "chunks": len(fmap),
                 "flushed_size": self.lookup_table.get(f),
-                "known": f in self._files or f in self.lookup_table}
+                "residency": residency, "evicted_chunks": len(emap),
+                "known": f in self._files or f in self.lookup_table
+                or f in self._evicted_files}
 
     def _on_file_stat(self, msg: Message):
         """Per-file metadata: buffered extent + chunk count from the local
@@ -410,6 +465,9 @@ class BBServer(threading.Thread):
         for off, (key, _ln) in self._files.pop(f, {}).items():
             self.store.delete(key)
             self._segments.pop(key, None)
+        for off, (key, _ln) in self._evicted_files.pop(f, {}).items():
+            self.store.delete(key)      # clears the tombstone too
+            self._evicted.pop(key, None)
         self.lookup_table.pop(f, None)
         self._domain_data.pop(f, None)
         self.transport.reply(self.tname, msg, "file_truncate_ack",
@@ -453,6 +511,7 @@ class BBServer(threading.Thread):
         self.transport.send(self.tname, self.manager, "failure_report",
                             {"dead": peer, "reporter": self.tname})
         self._re_replicate()
+        self._prune_flush_expected({peer})
 
     def _on_ping(self, msg: Message):
         self.transport.send(self.tname, msg.src, "pong",
@@ -473,6 +532,7 @@ class BBServer(threading.Thread):
         if self.alive.get(dead, True):
             self.alive[dead] = False
             self._re_replicate()
+            self._prune_flush_expected({dead})
 
     def _on_confirm_failure(self, msg: Message):
         """Client-initiated confirmation via the predecessor (paper §IV-B2):
@@ -529,38 +589,117 @@ class BBServer(threading.Thread):
         return self._flush.setdefault(epoch, {
             "meta": {}, "done": set(),
             "ring": self.alive_ring(),
-            "expected": set(self.alive_ring())})
+            "expected": set(self.alive_ring()),
+            # drain micro-epochs carry a cold SUBSET of segments; my_metas
+            # snapshots this server's contribution at flush_begin so the
+            # shuffle ships exactly what the epoch advertised
+            "drain": False, "my_metas": None,
+            # known file sizes broadcast with the metadata: subset planning
+            # must pin domains to the files' true sizes (see plan_shuffle)
+            "sizes": {}, "epoch_sizes": None,
+            "shuffled": False, "written": False})
+
+    def _close_epoch(self, epoch: int):
+        self._flush.pop(epoch, None)
+        self._closed_epochs.add(epoch)
+        if len(self._closed_epochs) > 4096:      # bounded straggler memory
+            self._closed_epochs.clear()
+
+    def _merge_lookup(self, sizes: Dict[str, int]):
+        """Lookup-table updates are max-merge: a drain micro-epoch that made
+        only a cold prefix of a file durable must never shrink the recorded
+        global size (truncation drops the entry instead)."""
+        for f, sz in sizes.items():
+            if sz > self.lookup_table.get(f, -1):
+                self.lookup_table[f] = sz
 
     def _on_flush_begin(self, msg: Message):
-        """Phase 1: broadcast my segment metadata to every live server."""
+        """Phase 1: broadcast my segment metadata to every live server.
+        For a drain micro-epoch (payload drain=True) the contribution is the
+        cold, file-attributed subset allowed by the token bucket; everyone
+        else still participates in the exchange with empty metadata."""
         epoch = msg.payload["epoch"]
-        metas = [(s.file, s.offset, s.length, k)
-                 for k, s in self._segments.items()]
+        if epoch in self._closed_epochs:
+            return
         st = self._flush_state(epoch)
+        st["drain"] = bool(msg.payload.get("drain"))
+        if st["drain"]:
+            # drain epochs are serialized by the manager, so any leftover
+            # snapshot belongs to an epoch whose abort we never saw (e.g.
+            # we were falsely declared dead mid-epoch): refund and drop it
+            for stale in [e for e in self._drain_epochs if e != epoch]:
+                dr = self._drain_epochs.pop(stale)
+                if self.drainer is not None:
+                    self.drainer.refund(dr["bytes"])
+            keys: List[str] = []
+            nbytes = 0
+            if self.drainer is not None and self.drainer.draining:
+                budget = min(self.drain_cfg.max_epoch_bytes,
+                             self.drainer.peek())
+                if budget > 0:
+                    keys, nbytes = self._drain_select(budget)
+                    self.drainer.take(nbytes)
+            # gens snapshot covers EVERY local file-attributed key, not just
+            # the contributed ones: the evict broadcast names keys drained by
+            # any participant, and replicas of those keys live here too
+            self._drain_epochs[epoch] = {
+                "keys": keys, "bytes": nbytes,
+                "gens": {k: self.store.gen_of(k) for k in self._segments}}
+            segs = {k: self._segments[k] for k in keys
+                    if k in self._segments}
+        else:
+            segs = dict(self._segments)
+        st["my_metas"] = segs
+        metas = [(s.file, s.offset, s.length, k) for k, s in segs.items()]
+        sizes = {s.file: self.lookup_table[s.file] for s in segs.values()
+                 if s.file in self.lookup_table}
         for peer in st["ring"]:
             self.transport.send(self.tname, peer, "flush_meta",
                                 {"epoch": epoch, "from": self.tname,
-                                 "metas": metas})
+                                 "metas": metas, "sizes": sizes})
 
     def _on_flush_meta(self, msg: Message):
         epoch = msg.payload["epoch"]
+        if epoch in self._closed_epochs:
+            return                       # straggler for an aborted/done epoch
         st = self._flush_state(epoch)
         st["meta"][msg.payload["from"]] = msg.payload["metas"]
-        if set(st["meta"]) >= st["expected"]:
+        for f, sz in msg.payload.get("sizes", {}).items():
+            if sz > st["sizes"].get(f, -1):
+                st["sizes"][f] = sz
+        if set(st["meta"]) >= st["expected"] and not st["shuffled"]:
             self._shuffle(epoch, st)
+
+    def _on_flush_abort(self, msg: Message):
+        """The manager aborted an epoch (server death / timeout mid-drain):
+        drop the epoch state and refund the drain-bandwidth budget — nothing
+        was evicted, the chunks stay buffered and re-drain from replicas in
+        a later micro-epoch."""
+        epoch = msg.payload["epoch"]
+        self._close_epoch(epoch)
+        dr = self._drain_epochs.pop(epoch, None)
+        if dr is not None and self.drainer is not None:
+            self.drainer.refund(dr["bytes"])
 
     def _shuffle(self, epoch: int, st: dict):
         """Phase 2: ship segments to domain owners (epoch ring snapshot)."""
+        st["shuffled"] = True
         all_meta = {
             src: [twophase.Segment(f, o, l) for f, o, l, _ in metas]
             for src, metas in st["meta"].items()}
-        mine = list(self._segments.values())
+        segs = st["my_metas"]
+        if segs is None:            # flush_begin never seen (late join)
+            segs = {} if st["drain"] else dict(self._segments)
         sizes, doms, sends = twophase.plan_shuffle(
-            mine, all_meta, st["ring"])
-        self.lookup_table.update(sizes)
-        key_of = {(s.file, s.offset): k for k, s in self._segments.items()}
+            list(segs.values()), all_meta, st["ring"],
+            known_sizes=st["sizes"])
+        st["epoch_sizes"] = dict(sizes)
+        self._merge_lookup(sizes)
+        key_of = {(s.file, s.offset): k for k, s in segs.items()}
         for owner, seg, file_off, local_off, length in sends:
             data = self.store.get(key_of[(seg.file, seg.offset)])
+            if data is None:
+                continue       # evicted mid-epoch: already durable on PFS
             piece = data[local_off:local_off + length]
             self.transport.send(self.tname, owner, "shuffle_data",
                                 {"epoch": epoch, "file": seg.file,
@@ -576,47 +715,197 @@ class BBServer(threading.Thread):
 
     def _on_shuffle_done(self, msg: Message):
         epoch = msg.payload["epoch"]
+        if epoch in self._closed_epochs:
+            return                       # straggler for an aborted/done epoch
         st = self._flush_state(epoch)
         st["done"].add(msg.payload["from"])
-        self.lookup_table.update(msg.payload["sizes"])
-        if st["done"] >= st["expected"]:
+        self._merge_lookup(msg.payload["sizes"])
+        if st["epoch_sizes"] is None:
+            st["epoch_sizes"] = {}
+        for f, sz in msg.payload["sizes"].items():
+            if sz > st["epoch_sizes"].get(f, -1):
+                st["epoch_sizes"][f] = sz
+        if st["done"] >= st["expected"] and not st["written"]:
+            st["written"] = True
             self._write_pfs(epoch, st)
 
     def _write_pfs(self, epoch: int, st: dict):
-        """Phase 2b: one sequential write per owned file domain, with domain
-        ownership computed from the epoch's ring snapshot (see _flush_state)."""
+        """Phase 2b: sequential writes of owned, COVERED ranges only, with
+        domain ownership computed from the epoch's ring snapshot.
+
+        Only files touched by this epoch are written, and within an owned
+        domain only the byte runs actually present in the shuffle buffer.
+        An earlier version zero-filled each owned domain end-to-end across
+        every file in the lookup table — once chunks can be evicted (the
+        drain engine, checkpoint retention) that clobbers durable PFS bytes
+        with zeros on the next flush. The file is still grown to its full
+        size by the tail-domain owner so PFS reads never come up short."""
         os.makedirs(self.pfs_dir, exist_ok=True)
         written = 0
-        for f, size in sorted(self.lookup_table.items()):
+        for f in sorted(st["epoch_sizes"] or {}):
+            # epoch_sizes is identical on every participant (max-merge of
+            # the same shuffle_done broadcasts), so domain ownership agrees
+            size = st["epoch_sizes"][f]
             doms = twophase.domains(size, st["ring"])
             my = [(a, b) for s, a, b in doms if s == self.tname]
             if not my:
                 continue
+            chunks = self._domain_data.get(f, {})
             path = os.path.join(self.pfs_dir, f)
             with open(path, "r+b" if os.path.exists(path) else "w+b") as fh:
                 for a, b in my:
-                    chunks = self._domain_data.get(f, {})
-                    buf = bytearray(b - a)
-                    for base, data in sorted(chunks.items()):
+                    runs = []
+                    for base, data in chunks.items():
                         lo, hi = max(a, base), min(b, base + len(data))
                         if lo < hi:
-                            buf[lo - a:hi - a] = data[lo - base:hi - base]
-                    fh.seek(a)
-                    fh.write(bytes(buf))      # single sequential write
-                    written += b - a
+                            runs.append([lo, hi])
+                    for lo, hi in _merge_intervals(runs):
+                        buf = bytearray(hi - lo)
+                        for base, data in sorted(chunks.items()):
+                            l2 = max(lo, base)
+                            h2 = min(hi, base + len(data))
+                            if l2 < h2:
+                                buf[l2 - lo:h2 - lo] = \
+                                    data[l2 - base:h2 - base]
+                        fh.seek(lo)
+                        fh.write(bytes(buf))  # sequential covered run
+                        written += hi - lo
+                if my[-1][1] == size:
+                    fh.seek(0, os.SEEK_END)
+                    if fh.tell() < size:
+                        fh.truncate(size)     # tail owner fixes the length
         self.stats["flushes"] += 1
-        self._flush.pop(epoch, None)
+        dr = self._drain_epochs.get(epoch)
+        self._close_epoch(epoch)
         self.transport.send(self.tname, self.manager, "flush_done",
                             {"epoch": epoch, "server": self.tname,
-                             "bytes": written})
+                             "bytes": written,
+                             "drained": dr["keys"] if dr else []})
+
+    # autonomous drain engine (ISSUE 3) --------------------------------------
+    def _drain_tick(self, now: float):
+        """Watermark check, run from the server loop: report pressure to the
+        manager on a fixed cadence, and request a drain micro-epoch when the
+        engine's hysteresis + burst detector + token bucket all agree."""
+        eng = self.drainer
+        if eng is None or not self.ring or self.tname not in self.ring:
+            return
+        occ = self.store.occupancy()
+        if now - self._last_pressure >= self.drain_cfg.pressure_interval:
+            self._last_pressure = now
+            self.transport.send(self.tname, self.manager, "drain_pressure",
+                                {"server": self.tname, **occ,
+                                 "draining": eng.draining,
+                                 "ingest_bps": eng.ingest_rate(now)})
+        if not self._segments:
+            return                  # nothing file-attributed: nothing to drain
+        if not eng.update(occ["fraction"], now):
+            return
+        if eng.peek(now) <= 0:
+            return
+        keys, nbytes = self._drain_select(self.drain_cfg.max_epoch_bytes)
+        if not keys:
+            # bare-KV pressure: rate-limit the (full-scan) reprobe so a
+            # permanently-undrainable store doesn't burn the server loop
+            eng.note_scan(now)
+            return
+        eng.note_requested(now)
+        self.transport.send(self.tname, self.manager, "drain_request",
+                            {"server": self.tname,
+                             "occupancy": occ["fraction"],
+                             "drainable": nbytes})
+
+    def _drain_select(self, budget: int):
+        """Cold, sealed, FILE-ATTRIBUTED chunks in age order up to ``budget``
+        bytes (always at least one chunk). Bare KV keys cannot travel the
+        two-phase planner and are skipped."""
+        out: List[str] = []
+        total = 0
+        for key, length in self.store.cold_keys(self.drain_cfg.min_idle_s):
+            if key not in self._segments:
+                continue
+            if out and total + length > budget:
+                break
+            out.append(key)
+            total += length
+        return out, total
+
+    def _on_drain_evict(self, msg: Message):
+        """The manager confirmed a drain micro-epoch fully durable: evict the
+        named chunks (all copies — primary and replica alike). A key whose
+        write generation moved since the epoch's snapshot was rewritten
+        mid-drain and is SKIPPED: the PFS holds the old bytes, the buffer
+        holds the new ones, and evicting would lose the rewrite."""
+        epoch = msg.payload["epoch"]
+        dr = self._drain_epochs.pop(epoch, None)
+        gens = dr["gens"] if dr else {}
+        freed = 0
+        touched: set = set()
+        for key in msg.payload["keys"]:
+            gen = gens.get(key)
+            if gen is None or self.store.gen_of(key) != gen:
+                continue
+            seg = self._segments.get(key)
+            n = self.store.evict(key)
+            if n == 0:
+                continue
+            freed += n
+            self.stats["evictions"] += 1
+            if seg is not None:
+                self._evicted[key] = (seg.file, seg.offset, seg.length)
+                self._evicted_files.setdefault(
+                    seg.file, {})[seg.offset] = (key, seg.length)
+                touched.add(seg.file)
+            self._drop_segment(key)
+        if freed:
+            self.store.compact()
+            self.stats["drained_bytes"] += freed
+            self.stats["drain_epochs"] += 1
+        # the shuffle receive-buffers for drained files are durable on the
+        # PFS now — dropping them is part of the space this engine reclaims.
+        # Never while another epoch is mid-flight and may still need them.
+        if not self._flush:
+            for f in touched:
+                self._domain_data.pop(f, None)
+
+    def _prune_flush_expected(self, dead: set):
+        """A mid-epoch death must not wedge the epoch forever: drop the dead
+        from every in-flight epoch's expected set and advance epochs that
+        are now complete. (Drain micro-epochs are additionally ABORTED by
+        the manager on any death — eviction must never proceed off a plan a
+        dead owner cannot finish writing.)"""
+        for epoch in list(self._flush):
+            st = self._flush.get(epoch)
+            if st is None or not (st["expected"] & dead):
+                continue
+            st["expected"] -= dead
+            if set(st["meta"]) >= st["expected"] and not st["shuffled"]:
+                self._shuffle(epoch, st)
+            st = self._flush.get(epoch)
+            if st is not None and st["done"] >= st["expected"] \
+                    and not st["written"]:
+                st["written"] = True
+                self._write_pfs(epoch, st)
 
     # checkpoint retention ---------------------------------------------------
     def _on_evict_epoch(self, msg: Message):
+        """Durable eviction by prefix (checkpoint retention): keys with file
+        attribution become tombstones — reads fall through to the lookup
+        table / PFS — while bare KV keys are deleted outright."""
         prefix = msg.payload["prefix"]
         for key in list(self.store.keys()):
-            if key.startswith(prefix):
+            if not key.startswith(prefix):
+                continue
+            seg = self._segments.get(key)
+            if seg is not None:
+                self.store.evict(key)
+                self._evicted[key] = (seg.file, seg.offset, seg.length)
+                self._evicted_files.setdefault(
+                    seg.file, {})[seg.offset] = (key, seg.length)
+                self.stats["evictions"] += 1
+            else:
                 self.store.delete(key)
-                self._drop_segment(key)
+            self._drop_segment(key)
         self.store.compact()
         for f in list(self._domain_data):
             if f.startswith(prefix):
@@ -626,8 +915,15 @@ class BBServer(threading.Thread):
                 del self._files[f]
 
     def _on_stats_query(self, msg: Message):
-        self.transport.reply(self.tname, msg, "stats", {
+        occ = self.store.occupancy()
+        payload = {
             **self.stats, "dram_used": self.store.dram_used,
             "ssd_used": self.store.ssd_used,
             "keys": len(self.store.keys()),
-            "lookup_files": len(self.lookup_table)})
+            "lookup_files": len(self.lookup_table),
+            "occupancy": occ["fraction"],
+            "evicted_keys": len(self._evicted)}
+        if self.drainer is not None:
+            payload["drain"] = {**self.drainer.stats,
+                                "draining": self.drainer.draining}
+        self.transport.reply(self.tname, msg, "stats", payload)

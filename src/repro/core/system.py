@@ -15,6 +15,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.client import BBClient
+from repro.core.drain import DrainConfig
 from repro.core.filesystem import BBFileSystem
 from repro.core.manager import BBManager
 from repro.core.server import BBServer
@@ -29,12 +30,16 @@ class BBConfig:
     placement: str = "iso"              # iso | ketama | rendezvous
     dram_capacity: int = 64 << 20
     ssd_dir: Optional[str] = None       # None -> tmpdir
+    ssd_capacity: Optional[int] = None  # None -> 4x dram (soft, for drain)
+    segment_bytes: Optional[int] = None  # None -> LogStore.SEGMENT_BYTES
     pfs_dir: Optional[str] = None       # None -> tmpdir
     stabilize_interval: float = 0.25
     # write pipeline (paper Fig 4) / client-side write coalescing
     batch_bytes: int = 1 << 20          # flush a coalesced batch at this size
     coalesce_threshold: int = 64 << 10  # writes below this auto-coalesce
     chunk_bytes: int = 4 << 20          # BBFile striping unit
+    # autonomous drain engine (ISSUE 3): watermark-driven background flush
+    drain: DrainConfig = field(default_factory=DrainConfig)
 
 
 class BurstBufferSystem:
@@ -47,16 +52,21 @@ class BurstBufferSystem:
         os.makedirs(self.ssd_dir, exist_ok=True)
         os.makedirs(self.pfs_dir, exist_ok=True)
 
-        self.manager = BBManager(self.transport, cfg.num_servers)
+        self.manager = BBManager(self.transport, cfg.num_servers,
+                                 drain_epoch_timeout=cfg.drain.epoch_timeout_s)
         self.servers: Dict[str, BBServer] = {}
         for i in range(cfg.num_servers):
             name = f"server/{i}"
             self.servers[name] = BBServer(
                 name, self.transport,
                 dram_capacity=cfg.dram_capacity,
-                ssd_dir=self.ssd_dir, pfs_dir=self.pfs_dir,
+                ssd_dir=self.ssd_dir,
+                ssd_capacity=cfg.ssd_capacity,
+                segment_bytes=cfg.segment_bytes,
+                pfs_dir=self.pfs_dir,
                 replication=cfg.replication,
-                stabilize_interval=cfg.stabilize_interval)
+                stabilize_interval=cfg.stabilize_interval,
+                drain=cfg.drain)
         self.clients: List[BBClient] = [
             BBClient(f"client/{i}", self.transport, client_index=i,
                      placement=cfg.placement, replication=cfg.replication,
@@ -107,6 +117,11 @@ class BurstBufferSystem:
     def evict(self, prefix: str):
         self.manager.evict(prefix)
 
+    def pressure(self) -> dict:
+        """Cluster pressure view (autonomous drain engine): per-server
+        occupancy reports + drain epoch/abort/evict counters."""
+        return self.manager.pressure_report()
+
     def kill_server(self, name: str):
         """Failure injection: stop the thread and black-hole its traffic."""
         srv = self.servers[name]
@@ -118,9 +133,13 @@ class BurstBufferSystem:
         name = f"server/{i}"
         srv = BBServer(name, self.transport,
                        dram_capacity=self.cfg.dram_capacity,
-                       ssd_dir=self.ssd_dir, pfs_dir=self.pfs_dir,
+                       ssd_dir=self.ssd_dir,
+                       ssd_capacity=self.cfg.ssd_capacity,
+                       segment_bytes=self.cfg.segment_bytes,
+                       pfs_dir=self.pfs_dir,
                        replication=self.cfg.replication,
-                       stabilize_interval=self.cfg.stabilize_interval)
+                       stabilize_interval=self.cfg.stabilize_interval,
+                       drain=self.cfg.drain)
         self.servers[name] = srv
         srv.start()
         # the joining server knows the ring via the manager's ring_update;

@@ -4,32 +4,49 @@ Writes append to an in-memory segment log (DRAM tier); when DRAM capacity is
 exceeded, *whole segments* spill to an SSD-tier file with a single sequential
 append — log-structuring is exactly what made bbIORSSD (198.8 MB/s) match
 SSDSeq (206 MB/s) in the paper's Fig 6 while direct semi-random writes got
-166.7 MB/s. An index maps key -> (tier, segment/file, offset, length).
+166.7 MB/s. An index maps key -> (tier, segment/file, offset, length, gen).
+
+Drain-engine support (ISSUE 3):
+  - every put stamps a monotonically increasing write generation, so the
+    drainer can tell "same key, rewritten since the drain epoch snapshot"
+    from "same bytes the epoch made durable" and never evict fresh data;
+  - ``evict()`` tombstones a durably-flushed key (tier "pfs"): reads miss,
+    the residency is remembered, and the bytes are reclaimed by compact();
+  - ``compact()`` reclaims BOTH tiers — dead DRAM segments are dropped and
+    the SSD log is rewritten keeping only live entries;
+  - ``occupancy()``/``cold_keys()`` feed the watermark policy: occupancy is
+    used bytes over DRAM+SSD capacity, cold keys are whole sealed segments
+    in age order (SSD first — it spilled earliest — then DRAM by segment id).
 """
 from __future__ import annotations
 
 import os
 import threading
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 
 @dataclass
 class _Loc:
-    tier: str          # "dram" | "ssd"
+    tier: str          # "dram" | "ssd" | "pfs" (evicted tombstone)
     segment: int       # dram segment id or ssd file offset base id
     offset: int
     length: int
+    gen: int = 0       # write generation (monotonic per store)
 
 
 class LogStore:
     SEGMENT_BYTES = 4 << 20
 
     def __init__(self, dram_capacity: int, ssd_dir: Optional[str] = None,
-                 name: str = "srv"):
+                 name: str = "srv", *,
+                 ssd_capacity: Optional[int] = None,
+                 segment_bytes: Optional[int] = None):
         self.dram_capacity = dram_capacity
         self.ssd_dir = ssd_dir
         self.name = name
+        self.segment_bytes = segment_bytes or self.SEGMENT_BYTES
         self._segments: Dict[int, bytearray] = {}
         self._open_seg = 0
         self._segments[0] = bytearray()
@@ -37,12 +54,19 @@ class LogStore:
         self._dram_bytes = 0
         self._ssd_bytes = 0
         self._next_seg = 1
+        self._gen = 0
+        self._seg_touched: Dict[int, float] = {0: time.monotonic()}
         self._lock = threading.RLock()
         self._ssd_path = None
         if ssd_dir:
             os.makedirs(ssd_dir, exist_ok=True)
             self._ssd_path = os.path.join(ssd_dir, f"{name}.log")
             open(self._ssd_path, "wb").close()
+        if ssd_capacity is None:
+            # soft budget for the watermark policy, not a hard write limit:
+            # the log absorbs past it, the drainer is what pulls it back down
+            ssd_capacity = 4 * dram_capacity if self._ssd_path else 0
+        self.ssd_capacity = ssd_capacity
 
     # ------------------------------------------------------------------ info
     @property
@@ -59,13 +83,42 @@ class LogStore:
         with self._lock:
             return max(0, self.dram_capacity - self._dram_bytes)
 
+    def occupancy(self) -> Dict[str, float]:
+        """Watermark input: used bytes over total (DRAM + SSD) capacity.
+        The fraction can exceed 1.0 — the SSD log is soft-capped and keeps
+        absorbing; that is exactly the pressure signal the drainer acts on."""
+        with self._lock:
+            cap = self.dram_capacity + self.ssd_capacity
+            used = self._dram_bytes + self._ssd_bytes
+            return {"dram_used": self._dram_bytes,
+                    "dram_capacity": self.dram_capacity,
+                    "ssd_used": self._ssd_bytes,
+                    "ssd_capacity": self.ssd_capacity,
+                    "used": used, "capacity": cap,
+                    "fraction": used / cap if cap else 0.0}
+
     def keys(self) -> List[str]:
         with self._lock:
-            return list(self._index)
+            return [k for k, loc in self._index.items() if loc.tier != "pfs"]
 
     def __contains__(self, key: str) -> bool:
         with self._lock:
-            return key in self._index
+            loc = self._index.get(key)
+            return loc is not None and loc.tier != "pfs"
+
+    def tier_of(self, key: str) -> Optional[str]:
+        """Residency of a key: "dram" | "ssd" | "pfs" (evicted) | None."""
+        with self._lock:
+            loc = self._index.get(key)
+            return loc.tier if loc is not None else None
+
+    def gen_of(self, key: str) -> Optional[int]:
+        with self._lock:
+            loc = self._index.get(key)
+            return loc.gen if loc is not None else None
+
+    def was_evicted(self, key: str) -> bool:
+        return self.tier_of(key) == "pfs"
 
     # ----------------------------------------------------------------- write
     def put(self, key: str, value: bytes) -> str:
@@ -74,18 +127,25 @@ class LogStore:
         with self._lock:
             if key in self._index:
                 self.delete(key)
+            self._gen += 1
             seg = self._segments[self._open_seg]
-            loc = _Loc("dram", self._open_seg, len(seg), len(value))
+            loc = _Loc("dram", self._open_seg, len(seg), len(value),
+                       self._gen)
             seg += value
             self._index[key] = loc
             self._dram_bytes += len(value)
-            if len(seg) >= self.SEGMENT_BYTES:
-                self._segments[self._next_seg] = bytearray()
-                self._open_seg = self._next_seg
-                self._next_seg += 1
+            self._seg_touched[self._open_seg] = time.monotonic()
+            if len(seg) >= self.segment_bytes:
+                self._roll_segment()
             spilled = self._maybe_spill()
             return "ssd" if spilled and self._index[key].tier == "ssd" \
                 else "dram"
+
+    def _roll_segment(self):
+        self._segments[self._next_seg] = bytearray()
+        self._open_seg = self._next_seg
+        self._seg_touched[self._open_seg] = time.monotonic()
+        self._next_seg += 1
 
     def _maybe_spill(self) -> bool:
         """Spill closed segments (oldest first) while over DRAM capacity."""
@@ -94,9 +154,7 @@ class LogStore:
         # if the open segment alone holds the overflow, roll it so it can
         # spill too (log-structured: only sealed segments move)
         if len(self._segments) == 1 and self._segments[self._open_seg]:
-            self._segments[self._next_seg] = bytearray()
-            self._open_seg = self._next_seg
-            self._next_seg += 1
+            self._roll_segment()
         spilled = False
         with open(self._ssd_path, "ab") as f:
             for seg_id in sorted(self._segments):
@@ -105,12 +163,13 @@ class LogStore:
                 if seg_id == self._open_seg:
                     continue
                 data = bytes(self._segments.pop(seg_id))
+                self._seg_touched.pop(seg_id, None)
                 base = f.tell()
                 f.write(data)                    # sequential append
                 for k, loc in self._index.items():
                     if loc.tier == "dram" and loc.segment == seg_id:
                         self._index[k] = _Loc("ssd", 0, base + loc.offset,
-                                              loc.length)
+                                              loc.length, loc.gen)
                 self._dram_bytes -= len(data)
                 self._ssd_bytes += len(data)
                 spilled = True
@@ -120,7 +179,7 @@ class LogStore:
     def get(self, key: str) -> Optional[bytes]:
         with self._lock:
             loc = self._index.get(key)
-            if loc is None:
+            if loc is None or loc.tier == "pfs":
                 return None
             if loc.tier == "dram":
                 seg = self._segments[loc.segment]
@@ -130,18 +189,56 @@ class LogStore:
                 return f.read(loc.length)
 
     def delete(self, key: str):
-        """Log-structured delete: drop the index entry; dead bytes are
-        reclaimed by compact() (DRAM) / background log GC (SSD)."""
+        """Log-structured delete: drop the index entry (tombstones too);
+        dead bytes are reclaimed by compact()."""
         with self._lock:
             self._index.pop(key, None)
 
+    def evict(self, key: str) -> int:
+        """Tombstone a durably-flushed key: the index remembers it moved to
+        the "pfs" tier (reads miss, residency is reportable), and the dead
+        bytes are reclaimed by compact(). Idempotent — evicting a missing or
+        already-evicted key frees 0, so a replayed drain_evict can never
+        double-free accounting."""
+        with self._lock:
+            loc = self._index.get(key)
+            if loc is None or loc.tier == "pfs":
+                return 0
+            self._index[key] = _Loc("pfs", -1, 0, loc.length, loc.gen)
+            return loc.length
+
+    def cold_keys(self, min_idle_s: float = 0.0,
+                  now: Optional[float] = None) -> List[Tuple[str, int]]:
+        """Drain candidates in age order: SSD-resident keys first (they
+        spilled earliest, i.e. are the coldest), then keys of sealed DRAM
+        segments oldest-segment-first. The open segment never drains, and a
+        DRAM segment appended to within ``min_idle_s`` is considered warm.
+        Returns [(key, length)]."""
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            ssd = sorted((loc.offset, k, loc.length)
+                         for k, loc in self._index.items()
+                         if loc.tier == "ssd")
+            dram = sorted(
+                (loc.segment, loc.offset, k, loc.length)
+                for k, loc in self._index.items()
+                if loc.tier == "dram" and loc.segment != self._open_seg
+                and now - self._seg_touched.get(loc.segment, 0.0)
+                >= min_idle_s)
+            return [(k, ln) for _, k, ln in ssd] \
+                + [(k, ln) for _, _, k, ln in dram]
+
     def items_bytes(self) -> Dict[str, int]:
         with self._lock:
-            return {k: loc.length for k, loc in self._index.items()}
+            return {k: loc.length for k, loc in self._index.items()
+                    if loc.tier != "pfs"}
 
     def compact(self):
-        """Drop fully-dead DRAM segments (cheap; SSD log compaction would be
-        a background task on a real deployment)."""
+        """Reclaim dead bytes on BOTH tiers: drop fully-dead DRAM segments,
+        and rewrite the SSD log keeping only live entries (one sequential
+        copy, then an atomic replace) so deleted/evicted SSD bytes are
+        actually returned — without this the drain engine would tombstone
+        forever while the SSD file only ever grew."""
         with self._lock:
             live = {loc.segment for loc in self._index.values()
                     if loc.tier == "dram"}
@@ -149,3 +246,22 @@ class LogStore:
                 if seg_id != self._open_seg and seg_id not in live:
                     self._dram_bytes -= len(self._segments[seg_id])
                     del self._segments[seg_id]
+                    self._seg_touched.pop(seg_id, None)
+            if not self._ssd_path:
+                return
+            ssd = sorted((loc.offset, k) for k, loc in self._index.items()
+                         if loc.tier == "ssd")
+            live_bytes = sum(self._index[k].length for _, k in ssd)
+            if live_bytes >= self._ssd_bytes:
+                return                        # nothing dead in the SSD log
+            tmp = self._ssd_path + ".compact"
+            with open(self._ssd_path, "rb") as src, open(tmp, "wb") as dst:
+                for _, k in ssd:
+                    loc = self._index[k]
+                    src.seek(loc.offset)
+                    data = src.read(loc.length)
+                    self._index[k] = _Loc("ssd", 0, dst.tell(), loc.length,
+                                          loc.gen)
+                    dst.write(data)           # sequential rewrite
+            os.replace(tmp, self._ssd_path)
+            self._ssd_bytes = live_bytes

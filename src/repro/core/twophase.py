@@ -9,7 +9,7 @@ contention of interleaved writers (ROMIO-style collective buffering).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -69,11 +69,26 @@ def split_segment(seg: Segment, doms: List[Tuple[str, int, int]]
 
 def plan_shuffle(my_segments: Sequence[Segment],
                  all_meta: Dict[str, List[Segment]],
-                 servers: Sequence[str]):
+                 servers: Sequence[str],
+                 known_sizes: Optional[Dict[str, int]] = None):
     """Given this server's buffered segments and everyone's metadata, compute
-    (sizes, per-file domain lists, outgoing pieces)."""
+    (sizes, per-file domain lists, outgoing pieces).
+
+    ``known_sizes`` enables segment-subset planning (drain micro-epochs):
+    when an epoch carries only a cold subset of a file's chunks, the subset's
+    own extent may end short of the file's true size, and domains computed
+    from it would disagree with the layout every earlier epoch wrote to the
+    PFS. Passing the already-known global size per file (the lookup table)
+    pins the domain partition to max(subset extent, known size), so owners
+    agree across full flushes and partial drains alike. Every participant
+    must pass the same map — the protocol driver broadcasts the known sizes
+    with the epoch metadata to guarantee that."""
     merged: List[Segment] = [m for metas in all_meta.values() for m in metas]
     sizes = file_sizes(merged)
+    if known_sizes:
+        for f in sizes:
+            if f in known_sizes:
+                sizes[f] = max(sizes[f], known_sizes[f])
     doms = {f: domains(sz, servers) for f, sz in sizes.items()}
     sends = []
     for seg in my_segments:

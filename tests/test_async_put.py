@@ -242,6 +242,7 @@ def test_write_pfs_uses_flush_ring_snapshot(tmp_path):
     st = srv._flush_state(0)
     assert st["ring"] == ["a", "b"]
     srv.lookup_table["f"] = size
+    st["epoch_sizes"] = {"f": size}       # the epoch's agreed size map
     srv._domain_data["f"] = {0: b"x" * (1 << 20)}     # a's snapshot domain
     # membership changes mid-flush: b is declared dead
     srv.alive["b"] = False

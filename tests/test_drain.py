@@ -1,0 +1,458 @@
+"""Autonomous drain engine (ISSUE 3): watermark policy, burst deferral,
+token-bucket bandwidth, tombstone eviction, transparent read-after-evict,
+and the fault-injection surface — kill a server mid-drain (the epoch must
+abort, nothing evicted, re-drain from replicas), crash after the epoch
+completed (no data loss, no double-free), rewrite-during-drain (the write
+generation guard must keep the fresh bytes)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BBConfig, BurstBufferSystem, DrainConfig,
+                        DrainEngine, Transport)
+from repro.core.server import BBServer
+from repro.core.tiering import LogStore
+from repro.core.transport import Message
+
+
+# ------------------------------------------------------------ policy units
+
+def _cfg(**kw):
+    base = dict(high_watermark=0.6, low_watermark=0.3, panic_watermark=0.9,
+                request_interval=0.0, burst_window_s=1.0,
+                hot_bytes_per_s=1000, bw_bytes_per_s=1000)
+    base.update(kw)
+    return DrainConfig(**base)
+
+
+def test_engine_watermark_hysteresis():
+    eng = DrainEngine(_cfg(), now=0.0)
+    assert not eng.update(0.5, now=1.0)          # below high: idle
+    assert eng.update(0.7, now=2.0)              # crossed high: drain
+    assert eng.draining
+    assert eng.update(0.45, now=3.0)             # between watermarks: keep
+    assert not eng.update(0.2, now=4.0)          # fell to low: stop
+    assert not eng.draining
+    assert not eng.update(0.45, now=5.0)         # between, from below: idle
+
+
+def test_engine_burst_defers_until_panic():
+    eng = DrainEngine(_cfg(), now=0.0)
+    eng.note_ingest(5000, now=10.0)              # 5000 B/s >> hot threshold
+    assert eng.hot(now=10.0)
+    assert not eng.update(0.7, now=10.0)         # hot: absorption wins
+    assert eng.stats["deferred_hot"] == 1
+    assert eng.update(0.95, now=10.0)            # panic: space wins
+    assert not eng.hot(now=12.0)                 # window slid past the burst
+    assert eng.update(0.7, now=12.0)
+
+
+def test_engine_request_rate_limit():
+    eng = DrainEngine(_cfg(request_interval=0.5), now=0.0)
+    assert eng.update(0.7, now=1.0)
+    eng.note_requested(now=1.0)
+    assert not eng.update(0.7, now=1.2)          # inside the interval
+    assert eng.update(0.7, now=1.6)
+
+
+def test_engine_token_bucket_caps_and_refunds():
+    eng = DrainEngine(_cfg(bw_bytes_per_s=1000), now=0.0)
+    assert eng.peek(now=0.0) == 1000             # starts full
+    assert eng.take(700, now=0.0) == 700
+    # overdraft: the full selection is debited (one segment may exceed the
+    # remainder) and the refill must pay the debt back before peek() > 0
+    assert eng.take(700, now=0.0) == 700
+    assert eng.peek(now=0.0) == 0
+    assert eng.peek(now=0.3) == 0                # 300 refilled, still in debt
+    assert eng.peek(now=0.5) == 100              # debt (-400) + 500 refill
+    # refund is symmetric with take: an aborted epoch gives back exactly
+    # what was debited, clamped at one bucket
+    eng.refund(700)
+    assert eng.peek(now=0.5) == 800
+    eng.refund(700)
+    assert eng.peek(now=0.5) == 1000             # clamped at bucket size
+
+
+# ----------------------------------------------------------- LogStore units
+
+def test_logstore_evict_tombstone_idempotent(tmp_path):
+    store = LogStore(1 << 20, str(tmp_path), name="ev0")
+    store.put("k", b"x" * 1000)
+    assert store.evict("k") == 1000
+    assert store.get("k") is None
+    assert store.tier_of("k") == "pfs" and store.was_evicted("k")
+    assert "k" not in store and "k" not in store.keys()
+    # double eviction frees 0 — accounting can never double-free
+    assert store.evict("k") == 0
+    assert store.evict("missing") == 0
+    store.compact()
+    assert store.dram_used >= 0 and store.ssd_used >= 0
+
+
+def test_logstore_cold_keys_age_order(tmp_path):
+    store = LogStore(256 << 10, str(tmp_path), name="ev1",
+                     segment_bytes=64 << 10)
+    for i in range(12):                          # 768 KB: oldest spill to SSD
+        store.put(f"k{i}", b"a" * (64 << 10))
+    cold = store.cold_keys()
+    assert cold, "sealed segments must be drainable"
+    tiers = [store.tier_of(k) for k, _ in cold]
+    assert "ssd" in tiers
+    first_dram = tiers.index("dram") if "dram" in tiers else len(tiers)
+    assert all(t == "ssd" for t in tiers[:first_dram]), \
+        "SSD-resident (oldest) keys must come first"
+    open_seg_keys = [k for k, loc in store._index.items()
+                     if loc.tier == "dram" and loc.segment == store._open_seg]
+    assert not set(k for k, _ in cold) & set(open_seg_keys), \
+        "the open segment never drains"
+    # a tombstone is not a candidate
+    victim = cold[0][0]
+    store.evict(victim)
+    assert victim not in [k for k, _ in store.cold_keys()]
+
+
+# ---------------------------------------------- single-server protocol units
+
+def _solo_server(tmp_path, **drain_kw):
+    tr = Transport()
+    drain = DrainConfig(**drain_kw) if drain_kw else DrainConfig()
+    # tiny segments: a single put seals its segment, making it cold/drainable
+    srv = BBServer("s0", tr, dram_capacity=1 << 20, segment_bytes=256,
+                   ssd_dir=str(tmp_path), replication=1, drain=drain)
+    srv.ring, srv.alive = ["s0"], {"s0": True}
+    return tr, srv
+
+
+def _msg(kind, payload, src="t"):
+    return Message(kind, src, "s0", payload, msg_id=1)
+
+
+def test_rewrite_during_drain_is_not_evicted(tmp_path):
+    """The write-generation guard: a key rewritten between the drain epoch's
+    snapshot and the evict broadcast holds FRESHER bytes than the PFS —
+    evicting it would lose the rewrite."""
+    tr, srv = _solo_server(tmp_path)
+    srv.drainer.draining = True
+    srv._on_put(_msg("put", {"key": "f:0", "value": b"old" * 100,
+                             "file": "f", "offset": 0, "chain": []}))
+    srv._on_flush_begin(_msg("flush_begin", {"epoch": 1 << 30,
+                                             "drain": True}))
+    assert "f:0" in srv._drain_epochs[1 << 30]["keys"]
+    srv._on_put(_msg("put", {"key": "f:0", "value": b"new" * 100,
+                             "file": "f", "offset": 0, "chain": []}))
+    srv._on_drain_evict(_msg("drain_evict", {"epoch": 1 << 30,
+                                             "keys": ["f:0"]}))
+    assert srv.store.get("f:0") == b"new" * 100, \
+        "rewritten key must survive the stale evict"
+    assert srv.stats["evictions"] == 0
+
+
+def test_unchanged_key_is_evicted_with_tombstone(tmp_path):
+    tr, srv = _solo_server(tmp_path)
+    srv.drainer.draining = True
+    srv._on_put(_msg("put", {"key": "f:0", "value": b"cold" * 100,
+                             "file": "f", "offset": 0, "chain": []}))
+    srv._on_flush_begin(_msg("flush_begin", {"epoch": 1 << 30,
+                                             "drain": True}))
+    srv._on_drain_evict(_msg("drain_evict", {"epoch": 1 << 30,
+                                             "keys": ["f:0"]}))
+    assert srv.store.get("f:0") is None
+    assert srv.store.was_evicted("f:0")
+    assert srv._evicted["f:0"] == ("f", 0, 400)
+    assert srv.stats["evictions"] == 1
+    # replaying the evict is a no-op (no double-free of accounting)
+    srv._on_drain_evict(_msg("drain_evict", {"epoch": 1 << 30,
+                                             "keys": ["f:0"]}))
+    assert srv.stats["evictions"] == 1
+
+
+def test_flush_abort_refunds_budget_and_keeps_chunks(tmp_path):
+    """An aborted micro-epoch (death/timeout mid-drain) must leave every
+    chunk buffered and give the token-bucket budget back."""
+    tr, srv = _solo_server(tmp_path, bw_bytes_per_s=1 << 20)
+    srv.drainer.draining = True
+    srv._on_put(_msg("put", {"key": "f:0", "value": b"z" * 1000,
+                             "file": "f", "offset": 0, "chain": []}))
+    before = srv.drainer.peek()
+    srv._on_flush_begin(_msg("flush_begin", {"epoch": 1 << 30,
+                                             "drain": True}))
+    assert srv.drainer.peek() < before           # budget consumed
+    srv._on_flush_abort(_msg("flush_abort", {"epoch": 1 << 30,
+                                             "reason": "test"}))
+    assert not srv._drain_epochs and (1 << 30) not in srv._flush
+    assert srv.store.get("f:0") == b"z" * 1000   # nothing evicted
+    assert srv.drainer.peek() == before          # budget refunded
+    assert srv.drainer.stats["refunded_bytes"] == 1000
+    # a straggler flush_meta/shuffle_done for the aborted epoch must not
+    # resurrect the epoch state (a zombie entry would wedge self._flush)
+    srv._on_flush_meta(_msg("flush_meta", {"epoch": 1 << 30, "from": "peer",
+                                           "metas": [], "sizes": {}}))
+    srv._on_shuffle_done(_msg("shuffle_done", {"epoch": 1 << 30,
+                                               "from": "peer", "sizes": {}}))
+    assert (1 << 30) not in srv._flush
+
+
+# ------------------------------------------------------------- integration
+
+def _drain_system(num=3, dram=1 << 20, **drain_kw):
+    dk = dict(high_watermark=0.5, low_watermark=0.25,
+              request_interval=0.02, pressure_interval=0.05,
+              max_epoch_bytes=2 << 20, epoch_timeout_s=5.0)
+    dk.update(drain_kw)
+    return BurstBufferSystem(BBConfig(
+        num_servers=num, num_clients=num, placement="iso",
+        dram_capacity=dram, ssd_capacity=2 * dram,
+        segment_bytes=128 << 10, chunk_bytes=64 << 10,
+        stabilize_interval=0.15, drain=DrainConfig(**dk))).start()
+
+
+def _write(sys_, path, nbytes, seed=0):
+    data = np.random.default_rng(seed).integers(
+        0, 256, nbytes, dtype=np.uint8).tobytes()
+    f = sys_.fs().open(path, "w", policy="batched")
+    f.pwrite(data, 0)
+    f.close(60.0)
+    return data
+
+
+def _wait_drained(sys_, timeout=20.0, epochs=1):
+    high = sys_.cfg.drain.high_watermark
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        pr = sys_.pressure()
+        fracs = [s.get("fraction", 1.0) for s in pr["servers"].values()]
+        if pr["drain"]["epochs"] >= epochs and fracs and max(fracs) < high:
+            return pr
+        time.sleep(0.1)
+    return sys_.pressure()
+
+
+def test_drain_bounds_occupancy_and_reads_stay_byte_exact():
+    """The acceptance scenario: ingest past DRAM capacity, let the drainer
+    work, and verify occupancy fell below the high watermark while a pread
+    of the (mostly evicted) file returns exactly what was written."""
+    sys_ = _drain_system()
+    try:
+        data = _write(sys_, "big", 6 << 20)      # 2x aggregate DRAM
+        pr = _wait_drained(sys_)
+        assert pr["drain"]["epochs"] >= 1, f"no drain ran: {pr}"
+        assert max(s["fraction"] for s in pr["servers"].values()) \
+            < sys_.cfg.drain.high_watermark
+        got = sys_.fs().open("big", "r").pread(0, len(data))
+        assert got == data
+        assert sys_.manager.errors == []
+    finally:
+        sys_.stop()
+
+
+def test_get_of_evicted_key_falls_through_transparently():
+    """client.get of a drained-and-evicted key must return the original
+    bytes via the tombstone's residency record — clients never observe
+    eviction."""
+    sys_ = _drain_system()
+    try:
+        chunk = sys_.cfg.chunk_bytes
+        data = _write(sys_, "ev", 6 << 20, seed=1)
+        _wait_drained(sys_)
+        evicted = [(srv, k) for srv in sys_.servers.values()
+                   for k in srv._evicted if k.startswith("ev:")]
+        assert evicted, "expected at least one evicted chunk"
+        _, key = evicted[0]
+        off = int(key.split(":")[1])
+        j = off // chunk                        # BBFile round-robins chunks
+        c = sys_.clients[j % len(sys_.clients)]
+        got = c.get(key)
+        assert got == data[off:off + len(got or b"")] and got, \
+            f"evicted get for {key} returned {type(got)}"
+        assert c.stats["evicted_reads"] >= 1 or c.stats["bb_hits"] >= 1
+    finally:
+        sys_.stop()
+
+
+def test_fs_stat_residency_tracks_the_drain():
+    sys_ = _drain_system()
+    try:
+        data = _write(sys_, "res", 6 << 20, seed=2)
+        _wait_drained(sys_)
+        st = sys_.fs().stat("res")
+        assert st["size"] == len(data)
+        assert st["residency"]["pfs"] > 0, st
+        buffered = st["residency"]["dram"] + st["residency"]["ssd"]
+        assert buffered + st["residency"]["pfs"] >= len(data), \
+            "every byte must be accounted to a tier (replicas included)"
+        assert st["evicted_chunks"] > 0
+    finally:
+        sys_.stop()
+
+
+def test_kill_server_mid_drain_aborts_then_redrains_from_replicas():
+    """Fault injection: a server dies while a drain micro-epoch is in
+    flight. The manager must abort (nothing evicted off the dead plan),
+    survivors keep their replica copies, and later micro-epochs re-drain
+    them — with every byte still readable."""
+    sys_ = _drain_system(epoch_timeout_s=3.0)
+    try:
+        caught = threading.Event()
+
+        def _assassin():
+            deadline = time.monotonic() + 15.0
+            while time.monotonic() < deadline and not caught.is_set():
+                d = sys_.manager._drain
+                if d is not None:
+                    victim = sorted(d["expected"])[-1]
+                    sys_.kill_server(victim)
+                    caught.set()
+                    return
+        killer = threading.Thread(target=_assassin, daemon=True)
+        killer.start()
+        data = _write(sys_, "mid", 6 << 20, seed=3)
+        killer.join(20.0)
+        assert caught.is_set(), "no drain epoch was ever in flight"
+        # the epoch must abort (timeout or failure report), then re-drain
+        deadline = time.monotonic() + 20.0
+        while time.monotonic() < deadline:
+            st = sys_.manager.drain_stats
+            if st["aborts"] >= 1 and st["epochs"] >= 1:
+                break
+            time.sleep(0.1)
+        st = sys_.manager.drain_stats
+        assert st["aborts"] >= 1, f"mid-drain death did not abort: {st}"
+        assert st["epochs"] >= 1, f"survivors never re-drained: {st}"
+        got = sys_.fs().open("mid", "r").pread(0, len(data))
+        assert got == data, "data lost across mid-drain failover"
+    finally:
+        sys_.stop()
+
+
+def test_crash_after_drain_completes_loses_nothing():
+    """Fault injection: a server crashes AFTER a micro-epoch completed (its
+    PFS writes are durable, eviction already broadcast). Everything must
+    remain readable through replicas + the PFS, with sane accounting on the
+    survivors."""
+    sys_ = _drain_system()
+    try:
+        data = _write(sys_, "post", 6 << 20, seed=4)
+        pr = _wait_drained(sys_)
+        assert pr["drain"]["epochs"] >= 1
+        sys_.kill_server("server/1")
+        deadline = time.monotonic() + 8.0
+        while time.monotonic() < deadline \
+                and "server/1" not in sys_.manager.dead:
+            time.sleep(0.05)
+        got = sys_.fs().open("post", "r").pread(0, len(data))
+        assert got == data
+        for name, srv in sys_.servers.items():
+            if name == "server/1":
+                continue
+            occ = srv.store.occupancy()
+            assert occ["dram_used"] >= 0 and occ["ssd_used"] >= 0, \
+                f"negative accounting on {name} (double-free)"
+    finally:
+        sys_.stop()
+
+
+def test_manager_pressure_stats_populated():
+    sys_ = _drain_system()
+    try:
+        _write(sys_, "pp", 1 << 20, seed=5)
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline \
+                and len(sys_.pressure()["servers"]) < 3:
+            time.sleep(0.05)
+        pr = sys_.pressure()
+        assert len(pr["servers"]) == 3
+        for s, rep in pr["servers"].items():
+            assert {"fraction", "dram_used", "ssd_used",
+                    "draining"} <= set(rep)
+        assert {"epochs", "aborts", "evicted_keys",
+                "drained_bytes"} <= set(pr["drain"])
+    finally:
+        sys_.stop()
+
+
+def test_concurrent_writers_read_your_writes_under_drain():
+    """Stress (ISSUE 3 satellite): writers streaming through BBFile handles
+    while the drainer evicts underneath them. Every synced prefix must read
+    back byte-exact at all times — through DRAM, SSD, and PFS alike."""
+    sys_ = _drain_system()
+    try:
+        fs = sys_.fs()
+        chunk = 64 << 10
+        n_chunks = 48                            # 3 MB per writer, 2 writers
+        blobs = {}
+        for w in range(2):
+            blobs[w] = np.random.default_rng(10 + w).integers(
+                0, 256, n_chunks * chunk, dtype=np.uint8).tobytes()
+        synced = {0: 0, 1: 0}
+        errors = []
+
+        def _writer(w):
+            try:
+                f = fs.open(f"stream{w}", "w", policy="batched",
+                            chunk_bytes=chunk)
+                for j in range(n_chunks):
+                    f.pwrite(blobs[w][j * chunk:(j + 1) * chunk], j * chunk)
+                    if (j + 1) % 8 == 0:
+                        f.sync(30.0)
+                        synced[w] = (j + 1) * chunk
+                f.close(30.0)
+                synced[w] = n_chunks * chunk
+            except Exception as e:               # surface in the main thread
+                errors.append((w, repr(e)))
+
+        threads = [threading.Thread(target=_writer, args=(w,))
+                   for w in range(2)]
+        for t in threads:
+            t.start()
+        deadline = time.monotonic() + 60.0
+        while any(t.is_alive() for t in threads) \
+                and time.monotonic() < deadline:
+            for w in range(2):
+                n = synced[w]
+                if n:
+                    # a fresh handle per check: its size snapshot must see
+                    # at least the synced prefix
+                    got = fs.open(f"stream{w}", "r").pread(0, n)
+                    assert got == blobs[w][:n], \
+                        f"read-your-writes violated on stream{w} at {n}"
+            time.sleep(0.05)
+        for t in threads:
+            t.join(10.0)
+        assert not errors, errors
+        for w in range(2):
+            got = fs.open(f"stream{w}", "r").pread(0, len(blobs[w]))
+            assert got == blobs[w]
+        evictions = sum(s.stats["evictions"] for s in sys_.servers.values())
+        assert evictions > 0, "stress never exercised the evict path"
+    finally:
+        sys_.stop()
+
+
+@pytest.mark.slow
+def test_checkpoint_restore_spans_drained_data():
+    """bbckpt integration: a checkpoint bigger than DRAM is saved while the
+    drainer evicts its chunks; restore() must come back bit-exact through
+    the three-tier fallthrough."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.checkpoint.bbckpt import BBCheckpointManager
+    sys_ = _drain_system()
+    try:
+        rng = np.random.default_rng(77)
+        state = {"w": jnp.asarray(rng.normal(size=(1024, 1024)),
+                                  jnp.float32),
+                 "b": jnp.asarray(rng.normal(size=(4096,)), jnp.float32)}
+        mgr = BBCheckpointManager(sys_, io_mode="batched",
+                                  chunk_bytes=128 << 10)
+        mgr.save(1, state, blocking_flush=True)
+        _wait_drained(sys_, timeout=15.0)
+        restored, step = mgr.restore(state)
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(state["w"]))
+        np.testing.assert_array_equal(np.asarray(restored["b"]),
+                                      np.asarray(state["b"]))
+        assert "pressure" in mgr.metrics[1]
+    finally:
+        sys_.stop()

@@ -119,3 +119,91 @@ def test_index_correct_after_eviction_of_spilled_keys(tmp_path):
             assert store.get(k) == v, f"survivor {k} corrupted by eviction"
     tiers = {store._index[k].tier for k in data if k not in evicted}
     assert "ssd" in tiers                     # survivors span both tiers
+
+
+# ------------------------------------- SSD compaction + eviction (ISSUE 3)
+
+def test_compact_reclaims_ssd_space_from_deleted_entries(tmp_path):
+    """compact() must rewrite the SSD log dropping dead entries: the
+    accounting AND the file on disk both shrink, and every survivor reads
+    back its original bytes."""
+    rng = np.random.default_rng(11)
+    store = LogStore(256 << 10, str(tmp_path), name="c0")
+    data = {f"k{i}": rng.integers(0, 256, 64 << 10, dtype=np.uint8).tobytes()
+            for i in range(32)}               # 2 MB >> 256 KB DRAM
+    for k, v in data.items():
+        store.put(k, v)
+    assert store.ssd_used > 0
+    before_ssd = store.ssd_used
+    before_file = os.path.getsize(store._ssd_path)
+    dead = [k for k, loc in store._index.items() if loc.tier == "ssd"][::2]
+    assert dead
+    for k in dead:
+        store.delete(k)
+    store.compact()
+    assert store.ssd_used < before_ssd, "SSD accounting did not shrink"
+    assert os.path.getsize(store._ssd_path) < before_file, \
+        "SSD log file was not rewritten"
+    assert os.path.getsize(store._ssd_path) == store.ssd_used
+    for k, v in data.items():
+        if k not in dead:
+            assert store.get(k) == v, f"survivor {k} corrupted by compaction"
+
+
+def test_compact_reclaims_ssd_space_from_evicted_entries(tmp_path):
+    store = LogStore(128 << 10, str(tmp_path), name="c1",
+                     segment_bytes=64 << 10)
+    val = b"e" * (64 << 10)
+    for i in range(8):
+        store.put(f"k{i}", val)
+    assert store.ssd_used > 0
+    victims = [k for k, loc in store._index.items() if loc.tier == "ssd"]
+    freed = sum(store.evict(k) for k in victims)
+    assert freed == len(victims) * len(val)
+    store.compact()
+    assert store.ssd_used == 0 or store.ssd_used < freed
+    for k in victims:                         # tombstones survive compaction
+        assert store.was_evicted(k)
+        assert store.get(k) is None
+    survivors = [k for k in store.keys() if k not in victims]
+    for k in survivors:
+        assert store.get(k) == val
+
+
+def test_compact_noop_when_ssd_all_live(tmp_path):
+    store = LogStore(64 << 10, str(tmp_path), name="c2",
+                     segment_bytes=32 << 10)
+    for i in range(8):
+        store.put(f"k{i}", b"q" * (32 << 10))
+    before = os.path.getsize(store._ssd_path)
+    store.compact()                           # nothing dead: no rewrite
+    assert os.path.getsize(store._ssd_path) == before
+    for i in range(8):
+        assert store.get(f"k{i}") == b"q" * (32 << 10)
+
+
+def test_occupancy_fraction_tracks_both_tiers(tmp_path):
+    store = LogStore(128 << 10, str(tmp_path), name="c3",
+                     ssd_capacity=128 << 10, segment_bytes=32 << 10)
+    occ = store.occupancy()
+    assert occ["fraction"] == 0.0 and occ["capacity"] == 256 << 10
+    store.put("a", b"x" * (64 << 10))
+    assert abs(store.occupancy()["fraction"] - 0.25) < 1e-9
+    for i in range(6):                        # spill: fraction keeps rising
+        store.put(f"b{i}", b"x" * (32 << 10))
+    occ = store.occupancy()
+    assert occ["ssd_used"] > 0
+    assert abs(occ["fraction"]
+               - (occ["dram_used"] + occ["ssd_used"]) / occ["capacity"]) \
+        < 1e-9
+
+
+def test_put_bumps_write_generation(tmp_path):
+    store = LogStore(1 << 20, str(tmp_path), name="c4")
+    store.put("k", b"one")
+    g1 = store.gen_of("k")
+    store.put("k", b"two")
+    g2 = store.gen_of("k")
+    assert g2 > g1
+    store.evict("k")
+    assert store.gen_of("k") == g2            # tombstone keeps the gen

@@ -86,3 +86,92 @@ def test_domains_stripe_aligned():
     doms = domains(10 << 20, ["a", "b", "c"])
     for _, a, _ in doms[1:]:
         assert a % (1 << 20) == 0           # 1 MiB (Lustre stripe) aligned
+
+
+# -------------------------- segment-subset planning (ISSUE 3 drain epochs)
+
+@given(segment_layout(), st.integers(1, 9), st.integers(0, 2**31))
+@settings(max_examples=40, deadline=None)
+def test_domains_full_coverage_alignment_no_overlap(layout, n_servers, _seed):
+    """Invariants for any layout: [0, size) covered exactly once, every
+    interior boundary 1 MiB aligned, no negative-width domain."""
+    segs, _, _ = layout
+    size = file_sizes(segs)["f"]
+    doms = domains(size, [f"s{i}" for i in range(n_servers)])
+    assert doms[0][1] == 0 and doms[-1][2] == size
+    pos = 0
+    for s, a, b in doms:
+        assert a == pos and a <= b          # contiguous, no overlap
+        pos = b
+    for _, a, _ in doms[1:]:
+        assert a % (1 << 20) == 0
+
+
+@given(segment_layout(), st.integers(1, 9))
+@settings(max_examples=40, deadline=None)
+def test_split_segment_pieces_disjoint_and_ordered(layout, n_servers):
+    segs, _, _ = layout
+    size = file_sizes(segs)["f"]
+    doms = domains(size, [f"s{i}" for i in range(n_servers)])
+    for seg in segs:
+        pieces = split_segment(seg, doms)
+        for (_, o1, _, l1), (_, o2, _, _) in zip(pieces, pieces[1:]):
+            assert o1 + l1 == o2            # adjacent, never overlapping
+        assert all(l > 0 for _, _, _, l in pieces)
+
+
+@given(segment_layout(), st.integers(2, 6), st.integers(0, 2**31))
+@settings(max_examples=40, deadline=None)
+def test_subset_plan_agrees_with_full_size_domains(layout, n_servers, seed):
+    """Drain micro-epochs plan over a cold SUBSET of a file's segments.
+    With known_sizes pinning the file's true size, every piece's owner must
+    agree with the owner computed from the FULL-size domain partition —
+    otherwise a drain would write bytes to a different server than earlier
+    full flushes did, corrupting the PFS layout."""
+    segs, owner, n_src = layout
+    rng = np.random.default_rng(seed % 2**32)
+    servers = [f"srv{i}" for i in range(n_servers)]
+    full_size = file_sizes(segs)["f"]
+    subset = [s for s in segs if rng.random() < 0.5] or segs[:1]
+    all_meta = {"src0": subset}
+    sizes, doms, sends = plan_shuffle(subset, all_meta, servers,
+                                      known_sizes={"f": full_size})
+    assert sizes["f"] == full_size
+    full_doms = domains(full_size, servers)
+    covered = 0
+    for owner_srv, seg, file_off, local_off, length in sends:
+        assert owner_of(file_off, full_doms) == owner_srv
+        assert 0 <= local_off and local_off + length <= seg.length
+        covered += length
+    assert covered == sum(s.length for s in subset)   # subset covered once
+
+
+def test_subset_plan_deterministic_example():
+    """Deterministic fallback for the subset invariant (runs without
+    hypothesis): a 5 MiB file where only the middle segment drains."""
+    servers = ["a", "b", "c"]
+    full = [Segment("f", 0, 2 << 20), Segment("f", 2 << 20, 1 << 20),
+            Segment("f", 3 << 20, 2 << 20)]
+    full_size = file_sizes(full)["f"]
+    subset = [full[1]]
+    sizes, doms, sends = plan_shuffle(subset, {"src": subset}, servers,
+                                      known_sizes={"f": full_size})
+    assert sizes["f"] == full_size          # pinned, not the 3 MiB extent
+    assert doms["f"] == domains(full_size, servers)
+    assert sum(l for *_, l in sends) == 1 << 20
+    full_doms = domains(full_size, servers)
+    for owner_srv, seg, file_off, _local, length in sends:
+        assert owner_of(file_off, full_doms) == owner_srv
+    # without known_sizes the same subset would plan 3 MiB domains and
+    # disagree with the durable layout
+    sizes2, doms2, _ = plan_shuffle(subset, {"src": subset}, servers)
+    assert sizes2["f"] == 3 << 20
+    assert doms2["f"] != doms["f"]
+
+
+def test_known_sizes_never_shrink_a_file():
+    """A stale (smaller) known size must lose to the epoch's own extent."""
+    seg = [Segment("f", 0, 4 << 20)]
+    sizes, _, _ = plan_shuffle(seg, {"s": seg}, ["a", "b"],
+                               known_sizes={"f": 1 << 20})
+    assert sizes["f"] == 4 << 20
