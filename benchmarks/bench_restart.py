@@ -1,16 +1,32 @@
 """§III-C reproduction: restart latency — burst buffer vs PFS.
 
-Writes a checkpoint through a BBFileSystem handle, flushes, then measures
+Warm scenario (run): writes a checkpoint through a BBFileSystem handle,
+flushes, then measures
   bb_dram    — BBFile.pread of buffered chunks (server DRAM, manifest-
                directed fetches)
   bb_range   — lookup-table range reads (post-shuffle domains, no PFS)
   pfs        — cold-ish file read from the PFS directory
 The paper's claim: recent checkpoints are retrievable without touching the
 PFS; the derived column reports the speedup.
+
+Cold scenario (run_cold, ISSUE 4): the checkpoint is FULLY EVICTED to the
+PFS — the state every restart after PR 3's drain engine actually finds.
+  cold_serial — the pre-staging read path: every chunk-sized read misses
+                the buffer and falls back one at a time through a single
+                client (read fan-out forced to 1)
+  cold_staged — fs.stage() bulk-loads the file back (each server re-ingests
+                its own lookup-table domain in parallel), then the same
+                chunk loop reads with prefetch + parallel fan-out
+Both paths are verified byte-exact; the derived column is the speedup the
+stage-in engine buys. ``--smoke`` runs a capped version in CI and exits
+non-zero if the speedup falls under ``--min-speedup`` (default 3x) or any
+byte differs.
 """
 from __future__ import annotations
 
+import argparse
 import os
+import sys
 import time
 
 import numpy as np
@@ -60,5 +76,121 @@ def run(total_mb=32, seg_kb=256):
     ]
 
 
+def _evict_fully(sys_, fname: str, timeout: float = 10.0):
+    """Retention-evict the file and wait until no server buffers a byte."""
+    sys_.evict(fname)
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        st = sys_.fs().stat(fname)
+        if st["residency"]["dram"] == 0 and st["residency"]["ssd"] == 0:
+            return st
+        time.sleep(0.05)
+    raise RuntimeError(f"{fname} still buffered after evict")
+
+
+def _read_per_miss(fs, fname: str, total: int, seg: int) -> tuple:
+    """The pre-staging restart read: chunk-sized preads, every one missing
+    the buffer and falling back serially (caller pins fan-out to 1).
+    Returns (seconds, bytes)."""
+    r = fs.open(fname, "r", prefetch=False)
+    out = bytearray(total)
+    t0 = time.perf_counter()
+    for off in range(0, total, seg):
+        out[off:off + seg] = r.pread(off, min(seg, total - off))
+    return time.perf_counter() - t0, bytes(out)
+
+
+def run_cold(total_mb=16, seg_kb=32, n_servers=4, min_speedup=3.0) -> dict:
+    """Cold restart off a fully-evicted checkpoint: serial per-miss
+    fallback vs stage-in + parallel fan-out, both byte-exact."""
+    cfg = BBConfig(num_servers=n_servers, num_clients=n_servers,
+                   dram_capacity=256 << 20, chunk_bytes=seg_kb << 10)
+    cfg.stage.slice_bytes = 1 << 20
+    total, seg = total_mb << 20, seg_kb << 10
+    rng = np.random.default_rng(1)
+    data = rng.integers(0, 256, total, dtype=np.uint8).tobytes()
+    out = {"total_mb": total_mb, "seg_kb": seg_kb}
+    sys_ = BurstBufferSystem(cfg).start()
+    try:
+        fs = sys_.fs()
+        with fs.open("coldrst", "w", policy="batched", chunk_bytes=seg) as f:
+            f.pwrite(data, 0)
+        assert sys_.flush(epoch=0, timeout=60)
+        _evict_fully(sys_, "coldrst")
+
+        # baseline: the pre-staging read path — no stage, no prefetch, and
+        # fan-out forced to 1 so every miss is one serial client round-trip
+        fanouts = [(fs, fs.read_fanout)] + \
+            [(c, c.read_fanout) for c in sys_.clients]
+        for obj, _ in fanouts:
+            obj.read_fanout = 1
+        t_serial, got = _read_per_miss(fs, "coldrst", total, seg)
+        out["serial_exact"] = got == data
+        for obj, fo in fanouts:
+            obj.read_fanout = fo
+
+        # re-evict what the serial read's fallbacks may have left warm
+        _evict_fully(sys_, "coldrst")
+
+        # staged restart: one bulk stage-in (timed — it is part of the
+        # restart) pulls every domain back in parallel, then the read
+        # assembles from buffered chunks with the parallel fan-out
+        t0 = time.perf_counter()
+        staged = fs.stage("coldrst")
+        got = fs.open("coldrst", "r").pread(0, total)
+        t_staged = time.perf_counter() - t0
+        out["staged_exact"] = got == data
+        out["stage_completed"] = bool(staged)
+        out["stage_stats"] = dict(sys_.manager.stage_stats)
+        out["server_errors"] = len(sys_.manager.errors)
+        out["serial_s"] = t_serial
+        out["staged_s"] = t_staged
+        out["serial_mbps"] = total / t_serial / 1e6
+        out["staged_mbps"] = total / t_staged / 1e6
+        out["speedup"] = t_serial / t_staged
+        out["ok"] = (out["serial_exact"] and out["staged_exact"]
+                     and out["stage_completed"]
+                     and out["server_errors"] == 0
+                     and out["speedup"] >= min_speedup)
+    finally:
+        sys_.stop()
+    return out
+
+
 def main():
-    return run()
+    rows = run()
+    cold = run_cold()
+    rows += [
+        ("restart_cold_serial", cold["serial_s"] * 1e6,
+         f"{cold['serial_mbps']:.0f} MB/s"),
+        ("restart_cold_staged", cold["staged_s"] * 1e6,
+         f"{cold['staged_mbps']:.0f} MB/s "
+         f"({cold['speedup']:.1f}x serial)"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="capped CI run of the cold-restart scenario")
+    ap.add_argument("--min-speedup", type=float, default=3.0,
+                    help="fail if stage-in + fan-out restart is not at "
+                         "least this much faster than the serial per-miss "
+                         "fallback baseline")
+    args = ap.parse_args()
+    if args.smoke:
+        res = run_cold(total_mb=8, seg_kb=32, n_servers=2,
+                       min_speedup=args.min_speedup)
+        for k, v in res.items():
+            print(f"{k:>16}: {v:.2f}" if isinstance(v, float)
+                  else f"{k:>16}: {v}")
+        if not res["ok"]:
+            print("bench_restart: FAILED (see fields above)",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        print(f"bench_smoke_restart,0.0,{res['speedup']:.1f}x OK")
+    else:
+        print("name,us_per_call,derived")
+        for name, us, derived in main():
+            print(f"{name},{us:.1f},{derived}")

@@ -1,6 +1,9 @@
-"""Failure-injection demo: a burst-buffer server dies mid-training; the job
-restores from surviving replicas and continues BIT-EXACTLY as if the failure
-never happened (compared against an uninterrupted reference run).
+"""Failure + eviction demo: a burst-buffer server dies mid-training AND the
+checkpoint is fully evicted to the PFS (what the drain engine does to cold
+data); the job stages the checkpoint back into the buffer (`fs.stage`, each
+surviving server re-ingesting its own domain in parallel), restores through
+a prefetching handle, and continues BIT-EXACTLY as if nothing happened
+(compared against an uninterrupted reference run).
 
   PYTHONPATH=src python examples/restart_demo.py
 """
@@ -27,6 +30,16 @@ def fresh(cfg, model, optimizer, seed=0):
     return state, pipe
 
 
+def _wait_unbuffered(bb, path, timeout=15.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        st = bb.fs().stat(path)
+        if st["residency"]["dram"] == 0 and st["residency"]["ssd"] == 0:
+            return
+        time.sleep(0.05)
+    raise RuntimeError(f"{path} still buffered after evict")
+
+
 def main():
     cfg = reduced(get_config("h2o-danube-1.8b"))
     model = build_model(cfg)
@@ -39,7 +52,7 @@ def main():
         state, _ = step_fn(state, next(pipe))
     ref = state
 
-    # ---- run with failure ----
+    # ---- run with failure + full eviction ----
     state, pipe = fresh(cfg, model, optimizer)
     with BurstBufferSystem(BBConfig(num_servers=4, num_clients=4,
                                     dram_capacity=128 << 20,
@@ -47,10 +60,12 @@ def main():
         mgr = BBCheckpointManager(bb, quantize=False)
         for step in range(CKPT_AT):
             state, _ = step_fn(state, next(pipe))
+        fname = f"ckpt_{CKPT_AT:08d}"
         mgr.save(CKPT_AT, {"params": state.params,
                            "opt_state": state.opt_state,
-                           "data": {"step": jnp.asarray(pipe.step)}})
-        print(f"[demo] checkpoint at step {CKPT_AT} ingested")
+                           "data": {"step": jnp.asarray(pipe.step)}},
+                 blocking_flush=True)           # durable on the PFS
+        print(f"[demo] checkpoint at step {CKPT_AT} ingested + flushed")
 
         bb.kill_server("server/0")
         print("[demo] killed server/0 (stabilization + manager broadcast)")
@@ -58,12 +73,29 @@ def main():
         for c in bb.clients:
             c.put_timeout = 0.8
 
+        # the drain engine's endgame for cold data: every buffered copy
+        # tombstoned, bytes only on the PFS
+        bb.evict(fname)
+        _wait_unbuffered(bb, fname)
+        st = bb.fs().stat(fname)
+        print(f"[demo] checkpoint fully evicted: residency={st['residency']}")
+
+        # stage-in: one manager-coordinated bulk load; each surviving
+        # server re-ingests its own lookup-table domain in parallel
+        staged = bb.fs().stage(fname)
+        st = bb.fs().stat(fname)
+        print(f"[demo] fs.stage({fname!r}) -> {staged}, "
+              f"stage_stats={bb.manager.stage_stats}, "
+              f"residency={st['residency']}")
+
         print("[demo] simulating job crash: discarding training state")
         state2, pipe2 = fresh(cfg, model, optimizer, seed=123)   # wrong seed!
         target = {"params": state2.params, "opt_state": state2.opt_state,
                   "data": {"step": jnp.asarray(0)}}
+        # restore() stages (cheap no-op here — already staged) and reads
+        # through a prefetching handle with parallel fan-out
         restored, ck = mgr.restore(target)
-        print(f"[demo] restored step {ck} from burst-buffer replicas")
+        print(f"[demo] restored step {ck} from staged burst-buffer chunks")
         state2 = TrainState(restored["params"], restored["opt_state"])
         pipe2.load_state_dict({"step": int(restored["data"]["step"]),
                                "seed": 42, "shard_id": 0, "num_shards": 1})

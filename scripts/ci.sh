@@ -9,7 +9,12 @@
 #                                # drain run that fails if sustained ingest
 #                                # under the autonomous drainer drops below
 #                                # the async put baseline floor or any
-#                                # read-back byte differs
+#                                # read-back byte differs, then a capped
+#                                # cold-restart run (checkpoint fully
+#                                # evicted to the PFS) that fails if the
+#                                # stage-in + parallel fan-out restart is
+#                                # not >= 3x the serial per-miss fallback
+#                                # baseline or any read-back byte differs
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
@@ -17,7 +22,8 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     shift
     timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_ingress --smoke "$@"
-    exec timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_drain --smoke
+    timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_drain --smoke
+    exec timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_restart --smoke
 fi
 
 exec timeout "${CI_TIMEOUT:-1800}" python -m pytest -q -m "not slow" "$@"

@@ -138,21 +138,36 @@ class BBCheckpointManager:
                  if f.startswith("ckpt_") and not f.endswith(".manifest")]
         return max(steps) if steps else None
 
-    def restore(self, target_state, step: Optional[int] = None):
+    def restore(self, target_state, step: Optional[int] = None, *,
+                stage: bool = True):
         """Rebuild a train state. target_state provides structure/shapes
         (e.g. a freshly-initialized state). All reads go through BBFile
         handles, whose pread already prefers buffered chunks, then the
-        lookup table, then the PFS."""
+        lookup table, then the PFS.
+
+        A retired/evicted checkpoint is STAGED first (ISSUE 4): one
+        manager-coordinated bulk load pulls the PFS copy back into the
+        buffer with every server re-ingesting its own domain in parallel,
+        instead of the deserialization loop faulting it in one miss at a
+        time. Staging is best-effort — if the manager is busy or a server
+        dies mid-stage, the handle's read fallback chain still returns
+        byte-exact data — and the payload handle keeps ``prefetch`` on so
+        any unstaged tail is read ahead of the loop."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError("no checkpoint found")
         fname = f"ckpt_{step:08d}"
         fs = self.system.fs()
+        if stage:
+            # short deadline: a manager busy draining (likely, if pressure
+            # is why the checkpoint was evicted) must not stall the restart
+            # — the fallback chain reads byte-exact without the stage
+            fs.stage(fname, timeout=5.0)
 
         with fs.open(f"{fname}.manifest", "r") as mf:
             manifest = ser.manifest_from_bytes(mf.read())
         payloads: Dict[str, bytes] = {}
-        with fs.open(fname, "r") as f:
+        with fs.open(fname, "r", prefetch=True) as f:
             for meta in manifest["leaves"]:
                 payloads[meta["name"]] = f.pread(meta["offset"],
                                                  meta["nbytes"])

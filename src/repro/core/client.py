@@ -37,6 +37,7 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+from repro.core import staging
 from repro.core.filesystem import BBFuture, BBWriteError, WriteOp
 from repro.core.hashing import IsoPlacement, KetamaRing, RendezvousHash
 from repro.core.transport import Message, Transport
@@ -79,6 +80,8 @@ class BBClient:
                  placement: str = "iso",
                  replication: int = 2,
                  put_timeout: float = 3.0,
+                 read_timeout: float = 1.0,
+                 read_fanout: int = 4,
                  batch_bytes: int = 1 << 20,
                  coalesce_threshold: int = 64 << 10):
         self.tname = name
@@ -88,6 +91,11 @@ class BBClient:
         self.placement_kind = placement
         self.replication = replication
         self.put_timeout = put_timeout
+        # one knob for every read-side RPC deadline (manifest fetches,
+        # direct gets, stats); range reads get twice the budget since the
+        # server may have to touch the PFS to fill gaps
+        self.read_timeout = read_timeout
+        self.read_fanout = read_fanout
         self.batch_bytes = batch_bytes
         self.coalesce_threshold = coalesce_threshold
         self.ring: List[str] = []
@@ -564,7 +572,7 @@ class BBClient:
         evicted = None
         for target in replicas:
             r = self.transport.request(self.ep, target, "get", {"key": key},
-                                       timeout=1.0)
+                                       timeout=self.read_timeout)
             if r is not None and r.payload.get("hit"):
                 self.stats["bb_hits"] += 1
                 return r.payload["value"]
@@ -585,7 +593,8 @@ class BBClient:
             return None
         for target in replicas:
             r = self.transport.request(self.ep, target, "file_info",
-                                       {"file": file}, timeout=1.0)
+                                       {"file": file},
+                                       timeout=self.read_timeout)
             if r is not None and r.payload.get("size") is not None:
                 return r.payload
         return None
@@ -599,24 +608,44 @@ class BBClient:
         """Merged per-file chunk manifest across all alive servers:
         {offset: (key, length, holders)}. Primaries and replicas both
         report a chunk, so ``holders`` doubles as the replica set for
-        direct fetches — placement-independent reads survive failover."""
+        direct fetches — placement-independent reads survive failover.
+        A DIRTY copy outranks a CLEAN (staged) one at the same offset:
+        staged chunks are re-ingests of the durable PFS copy, so a
+        buffered write racing a stage epoch must win the merge and its
+        holder is tried first."""
         merged: Dict[int, tuple] = {}
-        for s in self._alive_servers():
-            r = self.transport.request(self.ep, s, "file_chunks",
-                                       {"file": file}, timeout=1.0)
+        clean_at: Dict[int, bool] = {}
+        servers = self._alive_servers()
+        replies = staging.parallel_map(
+            lambda s: self.transport.request(self.ep, s, "file_chunks",
+                                             {"file": file},
+                                             timeout=self.read_timeout),
+            servers, self.read_fanout)
+        for s, r in zip(servers, replies):
             if r is None:
                 continue
-            for off, key, length in r.payload["chunks"]:
-                ent = merged.setdefault(off, (key, length, []))
-                ent[2].append(s)
+            for off, key, length, clean in r.payload["chunks"]:
+                ent = merged.get(off)
+                if ent is None:
+                    merged[off] = (key, length, [s])
+                    clean_at[off] = clean
+                elif not clean and clean_at[off]:
+                    # dirty beats staged: its key/length define the chunk
+                    # and its holder goes to the front of the line
+                    merged[off] = (key, length, [s] + ent[2])
+                    clean_at[off] = False
+                else:
+                    ent[2].append(s)
         return merged
 
     def get_at(self, server: str, key: str) -> Optional[bytes]:
         """Fetch a value from one specific server (manifest-directed read —
         bypasses placement, which only knows where THIS client writes)."""
+        self.stats["gets"] += 1
         r = self.transport.request(self.ep, server, "get", {"key": key},
-                                   timeout=1.0)
+                                   timeout=self.read_timeout)
         if r is not None and r.payload.get("hit"):
+            self.stats["bb_hits"] += 1
             return r.payload["value"]
         return None
 
@@ -628,9 +657,13 @@ class BBClient:
         buffered, chunks, flushed, known = 0, 0, None, False
         residency = {"dram": 0, "ssd": 0, "pfs": 0}
         evicted_chunks = 0
-        for s in self._alive_servers():
-            r = self.transport.request(self.ep, s, "file_stat",
-                                       {"file": file}, timeout=1.0)
+        servers = self._alive_servers()
+        replies = staging.parallel_map(
+            lambda s: self.transport.request(self.ep, s, "file_stat",
+                                             {"file": file},
+                                             timeout=self.read_timeout),
+            servers, self.read_fanout)
+        for r in replies:
             if r is None:
                 continue
             p = r.payload
@@ -649,19 +682,30 @@ class BBClient:
     def read_file(self, file: str, offset: int, length: int
                   ) -> Optional[bytes]:
         """Post-flush read through the lookup table (paper §III-C): locate
-        the domain owners for the range and fetch without touching the PFS."""
+        the domain owners for the range and fetch without touching the PFS.
+        Domain fetches fan out concurrently (ISSUE 4) — a restart-sized
+        range spans every server's domain, and serial round-trips would
+        leave all but one server idle."""
         info = self.file_info(file)
         if info is None:
             return None
-        out = bytearray(length)
-        filled = 0
+        spans = []
         for server, a, b in info["domains"]:
             lo, hi = max(offset, a), min(offset + length, b)
-            if lo >= hi:
-                continue
-            r = self.transport.request(
+            if lo < hi:
+                spans.append((server, lo, hi))
+
+        def _fetch(span):
+            server, lo, hi = span
+            return self.transport.request(
                 self.ep, server, "read_range",
-                {"file": file, "offset": lo, "length": hi - lo}, timeout=2.0)
+                {"file": file, "offset": lo, "length": hi - lo},
+                timeout=2 * self.read_timeout)
+
+        replies = staging.parallel_map(_fetch, spans, self.read_fanout)
+        out = bytearray(length)
+        filled = 0
+        for (server, lo, hi), r in zip(spans, replies):
             if r is None or not r.payload.get("complete"):
                 return None     # never fabricate bytes: let callers fall back
             out[lo - offset:hi - offset] = r.payload["data"]

@@ -25,15 +25,25 @@ Write policies (how chunks travel, not where they land):
 
 Reads assemble a byte range from three sources, freshest first: buffered
 chunks via the servers' per-file manifests, post-flush lookup-table range
-reads, and finally the durable PFS copy.
+reads, and finally the durable PFS copy. The read side is parallel
+(ISSUE 4): manifest chunk fetches and gap fills fan out across threads and
+round-robin over the system's clients instead of serially hammering one
+endpoint, ``fs.stage(path)`` bulk-loads an evicted file back into the
+buffer through the manager-coordinated stage-in protocol, and a handle
+opened with ``prefetch=True`` detects sequential reads and stages the next
+window ahead of the reader.
 """
 from __future__ import annotations
 
+import itertools
 import os
 import threading
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
+
+from repro.core import staging
+from repro.core.staging import StageConfig
 
 POLICIES = ("sync", "async", "batched")
 
@@ -190,7 +200,8 @@ class BBFile:
     recency across servers — write aligned, non-overlapping ranges."""
 
     def __init__(self, fs: "BBFileSystem", path: str, mode: str, *,
-                 policy: str = "async", chunk_bytes: Optional[int] = None):
+                 policy: str = "async", chunk_bytes: Optional[int] = None,
+                 prefetch: Optional[bool] = None):
         if mode not in ("r", "w", "a"):
             raise ValueError(f"mode must be r/w/a, got {mode!r}")
         if policy not in POLICIES:
@@ -200,6 +211,12 @@ class BBFile:
         self.mode = mode
         self.policy = policy
         self.chunk_bytes = chunk_bytes or fs.chunk_bytes
+        # read-ahead (ISSUE 4): sequential-access detection on positional
+        # reads issues asynchronous stage-ins of the next window
+        if prefetch is None:
+            prefetch = fs.prefetch_default
+        self._ra = staging.ReadAhead(fs.stage_cfg) \
+            if prefetch and fs.stage_cfg.enabled else None
         self._pos = 0
         self._size = 0
         self._rr = 0                       # round-robin cursor over clients
@@ -350,6 +367,9 @@ class BBFile:
              (individual gets are replica-aware, so this survives failover),
           2. post-flush lookup-table range read (paper §III-C),
           3. the durable PFS copy.
+        Chunk fetches and gap fills fan out over ``fs.read_fanout`` threads
+        and round-robin across the system's clients (ISSUE 4) — a restart-
+        sized read keeps every server busy instead of one.
         """
         self._check_open(writing=False)
         # POSIX short-read semantics at EOF: never fabricate zero bytes
@@ -357,38 +377,66 @@ class BBFile:
         length = min(length, max(0, self._size - offset))
         if length <= 0:
             return b""
-        client = self.fs.clients[0]
+        if self._ra is not None:
+            win = self._ra.observe(offset, length, self._size)
+            if win is not None:
+                # true fire-and-forget read-ahead: the request runs off a
+                # daemon thread so a slow or dead manager never stalls the
+                # reading thread; a rejection (manager busy with a drain
+                # epoch) simply costs the prefetch
+                threading.Thread(
+                    target=self.fs.stage,
+                    args=(self.path, win[0], win[1] - win[0]),
+                    kwargs={"wait": False}, daemon=True,
+                    name="bb-readahead").start()
+                # staged chunks land in the servers' manifests; drop the
+                # cached merge so subsequent reads see them (triggers fire
+                # every half window, so staleness is bounded by design)
+                self._chunks = None
         out = bytearray(length)
         covered: List[List[int]] = []
         chunks = self._chunk_map()
-        # ascending-offset order: overlap resolution is deterministic
-        # (chunks at the SAME offset are last-writer-wins via their shared
-        # key; partially-overlapping writes at different offsets have no
-        # cross-server recency order — avoid them)
+        jobs = []                            # (base, key, ln, holders, lo, hi)
         for base in sorted(chunks):
             key, ln, holders = chunks[base]
             lo, hi = max(offset, base), min(offset + length, base + ln)
-            if lo >= hi:
-                continue
-            piece = None
+            if lo < hi:
+                jobs.append((base, key, ln, holders, lo, hi))
+
+        def _fetch(job):
+            base, key, ln, holders, _lo, _hi = job
+            client = self.fs.next_client()
             for server in holders:           # primary + replicas
                 piece = client.get_at(server, key)
                 if piece is not None and len(piece) == ln:
-                    break
+                    return piece
                 # wrong length = stale replica of a same-offset rewrite;
                 # a raw slice-assign would silently RESIZE the bytearray
-                piece = None
+            return None                      # evicted/unreachable: fall back
+
+        pieces = staging.parallel_map(_fetch, jobs, self.fs.read_fanout)
+        # assembly stays in ascending-offset order: overlap resolution is
+        # deterministic (chunks at the SAME offset are last-writer-wins via
+        # their shared key; partially-overlapping writes at different
+        # offsets have no cross-server recency order — avoid them)
+        for (base, _key, _ln, _holders, lo, hi), piece in zip(jobs, pieces):
             if piece is None:
-                continue                     # evicted or unreachable: fall back
+                continue
             out[lo - offset:hi - offset] = piece[lo - base:hi - base]
             covered.append([lo, hi])
         missing = _gaps(_merge(covered), offset, offset + length)
         if not missing:
             return bytes(out)
-        for lo, hi in list(missing):
-            data = client.read_file(self.path, lo, hi - lo)
+
+        def _fill(gap):
+            lo, hi = gap
+            data = self.fs.next_client().read_file(self.path, lo, hi - lo)
             if data is None:
                 data = self._pread_pfs(lo, hi - lo)
+            return data
+
+        fills = staging.parallel_map(_fill, missing, self.fs.read_fanout)
+        for (lo, hi), data in zip(missing, fills):
             if data is None or len(data) < hi - lo:
                 # a short fallback read would silently zero-fill — the range
                 # is inside the known size, so this is real data loss
@@ -399,7 +447,7 @@ class BBFile:
 
     def _chunk_map(self) -> Dict[int, Tuple]:
         if self._chunks is None:
-            self._chunks = self.fs.clients[0].file_chunks(self.path)
+            self._chunks = self.fs.next_client().file_chunks(self.path)
         return self._chunks
 
     def _pread_pfs(self, offset: int, length: int) -> Optional[bytes]:
@@ -421,22 +469,36 @@ class BBFileSystem:
     reflect every client's files, not just this process's."""
 
     def __init__(self, clients, *, chunk_bytes: int = 4 << 20,
-                 pfs_dir: Optional[str] = None, manager: str = "manager"):
+                 pfs_dir: Optional[str] = None, manager: str = "manager",
+                 read_fanout: int = 4, stage: Optional[StageConfig] = None,
+                 prefetch: bool = False):
         if not clients:
             raise ValueError("BBFileSystem needs at least one client")
         self.clients = list(clients)
         self.chunk_bytes = chunk_bytes
         self.pfs_dir = pfs_dir
         self.manager = manager
+        self.read_fanout = max(1, read_fanout)
+        self.stage_cfg = stage or StageConfig()
+        self.prefetch_default = prefetch
+        self._rr = itertools.count()
+
+    def next_client(self):
+        """Round-robin over the system's clients. Every read-side RPC used
+        to go through ``clients[0]`` — one endpoint became the funnel for
+        manifest fetches, direct gets, and fallback range reads while the
+        others sat idle."""
+        return self.clients[next(self._rr) % len(self.clients)]
 
     # -------------------------------------------------------------- namespace
     def _mgr_request(self, kind: str, payload: dict, timeout: float = 2.0):
-        c = self.clients[0]
+        c = self.next_client()
         return c.transport.request(c.ep, self.manager, kind, payload,
                                    timeout=timeout)
 
     def open(self, path: str, mode: str = "r", *, policy: str = "async",
-             chunk_bytes: Optional[int] = None) -> BBFile:
+             chunk_bytes: Optional[int] = None,
+             prefetch: Optional[bool] = None) -> BBFile:
         if mode in ("w", "a"):
             r = self._mgr_request("fs_open", {"path": path, "mode": mode})
             if mode == "w":
@@ -454,7 +516,54 @@ class BBFileSystem:
                     # back stale tail bytes of a longer previous incarnation
                     self.truncate(path)
         return BBFile(self, path, mode, policy=policy,
-                      chunk_bytes=chunk_bytes)
+                      chunk_bytes=chunk_bytes, prefetch=prefetch)
+
+    def stage(self, path: str, offset: int = 0,
+              length: Optional[int] = None, *, wait: bool = True,
+              timeout: Optional[float] = None) -> bool:
+        """Bulk-load ``path`` (or a byte range of it) from the PFS back into
+        the burst buffer — the drain engine run in reverse. The manager runs
+        one stage epoch at a time (serialized against drain micro-epochs);
+        each server re-ingests its own lookup-table domain in parallel, and
+        the staged chunks are CLEAN (durable copy exists), so later pressure
+        evicts them for free.
+
+        wait=True blocks until the epoch completes and returns whether it
+        did; wait=False fires the request and returns whether the manager
+        accepted it (read-ahead callers just drop a rejection). Staging is
+        best-effort either way: reads are byte-exact with or without it."""
+        if not self.stage_cfg.enabled:
+            return False
+        if timeout is None:
+            timeout = self.stage_cfg.stage_timeout_s
+        hi = -1 if length is None else offset + length
+        payload = {"path": path, "lo": offset, "hi": hi}
+        deadline = time.monotonic() + timeout
+        c = self.next_client()
+        req_timeout = 1.0 if wait else 0.25
+        epoch = None
+        while epoch is None:
+            r = c.transport.request(c.ep, self.manager, "stage_request",
+                                    payload, timeout=req_timeout)
+            if r is not None and r.payload.get("accepted"):
+                epoch = r.payload["epoch"]
+                break
+            if not wait or time.monotonic() >= deadline:
+                return False     # manager busy (drain/flush in flight)
+            time.sleep(0.01)
+        if not wait:
+            return True
+        while time.monotonic() < deadline:
+            r = c.transport.request(c.ep, self.manager, "stage_status",
+                                    {"epoch": epoch}, timeout=1.0)
+            if r is not None:
+                state = r.payload["state"]
+                if state == "done":
+                    return True
+                if state in ("aborted", "unknown"):
+                    return False
+            time.sleep(0.005)
+        return False
 
     def truncate(self, path: str):
         """Drop every buffered chunk of ``path`` on every server (replicas
@@ -533,27 +642,7 @@ class BBFileSystem:
         self._mgr_request("fs_unlink", {"path": path})
 
 
-# interval helpers shared by the read-assembly path ------------------------
-
-def _merge(iv: List[List[int]]) -> List[List[int]]:
-    out: List[List[int]] = []
-    for lo, hi in sorted(iv):
-        if out and lo <= out[-1][1]:
-            out[-1][1] = max(out[-1][1], hi)
-        else:
-            out.append([lo, hi])
-    return out
-
-
-def _gaps(covered: List[List[int]], lo: int, hi: int) -> List[List[int]]:
-    gaps = []
-    pos = lo
-    for a, b in covered:
-        if a > pos:
-            gaps.append([pos, min(a, hi)])
-        pos = max(pos, b)
-        if pos >= hi:
-            break
-    if pos < hi:
-        gaps.append([pos, hi])
-    return [g for g in gaps if g[0] < g[1]]
+# interval helpers shared by the read-assembly path (one implementation,
+# in staging.py — the stage planner needs the identical math)
+_merge = staging.merge_intervals
+_gaps = staging.gaps

@@ -7,6 +7,14 @@ and request drains; the manager serializes one drain micro-epoch at a time
 through the two-phase protocol, broadcasts the eviction once EVERY
 participant reported its PFS writes done, and aborts the epoch (nothing is
 evicted, nothing is lost) on any mid-epoch server death or timeout.
+
+It also coordinates the stage-in engine (ISSUE 4, the drain in reverse):
+a client's stage_request starts ONE stage epoch at a time — serialized
+against drain micro-epochs AND application flushes, so the two engines can
+never thrash the same segments — broadcasting stage_begin to the ring
+snapshot; the epoch completes when every participant reports stage_done,
+and aborts (harmlessly: staged bytes are clean copies of durable data) on
+death or timeout. Clients poll stage_status for the outcome.
 Collocated with a server on a real deployment."""
 from __future__ import annotations
 
@@ -16,9 +24,10 @@ from typing import Dict, List, Optional, Set
 
 from repro.core.transport import Message, Transport
 
-# drain micro-epochs live in their own id space so they can never collide
-# with application-chosen flush epochs
+# drain micro-epochs and stage epochs live in their own id spaces so they
+# can never collide with application-chosen flush epochs (or each other)
 DRAIN_EPOCH_BASE = 1 << 30
+STAGE_EPOCH_BASE = 2 << 30
 
 
 class BBManager(threading.Thread):
@@ -52,6 +61,13 @@ class BBManager(threading.Thread):
         self._next_drain_epoch = DRAIN_EPOCH_BASE
         self._flush_lock = threading.Lock()
         self._user_flushes: Dict[int, float] = {}   # epoch -> begin time
+        # stage-in coordination (ISSUE 4): one stage epoch at a time,
+        # serialized against drain micro-epochs; finished epochs keep a
+        # bounded result record for stage_status polling
+        self.stage_stats = {"epochs": 0, "aborts": 0, "staged_bytes": 0}
+        self._stage: Optional[dict] = None
+        self._next_stage_epoch = STAGE_EPOCH_BASE
+        self._stage_results: Dict[int, dict] = {}
 
     # ------------------------------------------------------------------ api
     def alive_ring(self) -> List[str]:
@@ -82,6 +98,9 @@ class BBManager(threading.Thread):
             if self._drain is not None \
                     and now - self._drain["started"] > self.drain_epoch_timeout:
                 self._abort_drain("timeout")
+            if self._stage is not None \
+                    and now - self._stage["started"] > self.drain_epoch_timeout:
+                self._abort_stage("timeout")
             with self._flush_lock:
                 # a user epoch wedged past any plausible completion must not
                 # block drain micro-epochs forever
@@ -123,8 +142,11 @@ class BBManager(threading.Thread):
         self.dead.add(dead)
         # a death mid-drain invalidates the epoch's domain plan (the dead
         # server's owned domains may never reach the PFS) — abort before
-        # anything can be evicted; the chunks re-drain from replicas later
+        # anything can be evicted; the chunks re-drain from replicas later.
+        # A death mid-stage just aborts the bulk load: staged bytes are
+        # clean copies of durable data, reads stay correct via fallback.
         self._abort_drain(f"server failure: {dead}")
+        self._abort_stage(f"server failure: {dead}")
         for dst in self.alive_ring() + sorted(self.clients):
             self.transport.send(self.tname, dst, "ring_update",
                                 {"dead": [dead]})
@@ -185,7 +207,8 @@ class BBManager(threading.Thread):
         phase state (shuffle buffers, lookup sizes) is shared per server."""
         with self._flush_lock:
             busy = bool(self._user_flushes)
-        if self._drain is not None or busy or not self.ring:
+        if self._drain is not None or self._stage is not None or busy \
+                or not self.ring:
             return
         epoch = self._next_drain_epoch
         self._next_drain_epoch += 1
@@ -211,11 +234,82 @@ class BBManager(threading.Thread):
 
     def pressure_report(self) -> dict:
         """Cluster pressure view: per-server occupancy reports plus drain
-        progress counters."""
-        d = self._drain
+        and stage progress counters."""
+        d, st = self._drain, self._stage
         return {"servers": dict(self.pressure),
                 "drain": dict(self.drain_stats),
-                "inflight_epoch": d["epoch"] if d is not None else None}
+                "stage": dict(self.stage_stats),
+                "inflight_epoch": d["epoch"] if d is not None else None,
+                "inflight_stage": st["epoch"] if st is not None else None}
+
+    # stage-in coordination (ISSUE 4) --------------------------------------
+    def _on_stage_request(self, msg: Message):
+        """A client asked to bulk-load a PFS file (or byte range) back into
+        the buffer. One stage epoch at a time, never while a drain micro-
+        epoch or an application flush is in flight — the two engines would
+        otherwise thrash the same segments (stage admitting bytes the drain
+        is busy flushing, drain evicting bytes the stage just loaded)."""
+        with self._flush_lock:
+            busy = bool(self._user_flushes)
+        if self._stage is not None or self._drain is not None or busy \
+                or not self.ring:
+            self.transport.reply(self.tname, msg, "stage_ack",
+                                 {"accepted": False})
+            return
+        epoch = self._next_stage_epoch
+        self._next_stage_epoch += 1
+        ring = self.alive_ring()
+        self._stage = {"epoch": epoch, "path": msg.payload["path"],
+                       "started": time.monotonic(),
+                       "expected": set(ring), "done": set(), "bytes": 0}
+        for s in ring:
+            self.transport.send(self.tname, s, "stage_begin",
+                                {"epoch": epoch,
+                                 "file": msg.payload["path"],
+                                 "lo": msg.payload.get("lo", 0),
+                                 "hi": msg.payload.get("hi", -1),
+                                 "ring": ring})
+        self.transport.reply(self.tname, msg, "stage_ack",
+                             {"accepted": True, "epoch": epoch})
+
+    def _on_stage_done(self, msg: Message):
+        st = self._stage
+        epoch = msg.payload["epoch"]
+        if st is None or epoch != st["epoch"]:
+            return                   # straggler for an aborted epoch
+        st["done"].add(msg.payload["server"])
+        st["bytes"] += msg.payload.get("bytes", 0)
+        if st["done"] >= st["expected"]:
+            self._stage = None
+            self.stage_stats["epochs"] += 1
+            self.stage_stats["staged_bytes"] += st["bytes"]
+            self._record_stage(epoch, "done", st["bytes"])
+
+    def _abort_stage(self, reason: str):
+        st, self._stage = self._stage, None
+        if st is None:
+            return
+        self.stage_stats["aborts"] += 1
+        self._record_stage(st["epoch"], "aborted", st["bytes"])
+        for s in sorted(set(self.alive_ring()) | st["expected"]):
+            self.transport.send(self.tname, s, "stage_abort",
+                                {"epoch": st["epoch"], "reason": reason})
+
+    def _record_stage(self, epoch: int, state: str, nbytes: int):
+        self._stage_results[epoch] = {"state": state, "bytes": nbytes}
+        while len(self._stage_results) > 1024:   # bounded poll history
+            self._stage_results.pop(next(iter(self._stage_results)))
+
+    def _on_stage_status(self, msg: Message):
+        epoch = msg.payload["epoch"]
+        st = self._stage
+        if st is not None and st["epoch"] == epoch:
+            out = {"state": "inflight", "bytes": st["bytes"]}
+        else:
+            out = self._stage_results.get(epoch, {"state": "unknown",
+                                                  "bytes": 0})
+        self.transport.reply(self.tname, msg, "stage_status_ack",
+                             {"epoch": epoch, **out})
 
     # file-session namespace (BBFileSystem) --------------------------------
     def _on_fs_open(self, msg: Message):

@@ -19,6 +19,12 @@ One thread per server. Responsibilities:
     (index tombstones) once every participant reported the epoch durable;
     a burst detector defers draining while ingest is hot and a token
     bucket caps drain bandwidth so flushing never competes with absorption
+  - stage-in engine (ISSUE 4): the drain run in reverse — a manager-
+    coordinated stage epoch re-ingests a PFS file into the buffer,
+    partitioned by lookup-table domains so every server loads its own
+    domain in parallel; staged bytes are marked CLEAN (durable copy
+    exists), giving the drainer a free clean-evict fast path and staging
+    an admission guard so it can never trigger a drain storm
 """
 from __future__ import annotations
 
@@ -27,35 +33,16 @@ import threading
 import time
 from typing import Dict, List, Optional
 
-from repro.core import twophase
+from repro.core import staging, twophase
 from repro.core.drain import DrainConfig, DrainEngine
+from repro.core.staging import StageConfig
 from repro.core.tiering import LogStore
 from repro.core.transport import Message, Transport
 
 
-def _merge_intervals(iv: List[List[int]]) -> List[List[int]]:
-    out: List[List[int]] = []
-    for lo, hi in sorted(iv):
-        if out and lo <= out[-1][1]:
-            out[-1][1] = max(out[-1][1], hi)
-        else:
-            out.append([lo, hi])
-    return out
-
-
-def _gaps(covered: List[List[int]], lo: int, hi: int) -> List[List[int]]:
-    """Sub-intervals of [lo, hi) not covered by the (merged) interval list."""
-    gaps = []
-    pos = lo
-    for a, b in covered:
-        if a > pos:
-            gaps.append([pos, min(a, hi)])
-        pos = max(pos, b)
-        if pos >= hi:
-            break
-    if pos < hi:
-        gaps.append([pos, hi])
-    return [g for g in gaps if g[0] < g[1]]
+# interval math shared with the stage planner (one implementation)
+_merge_intervals = staging.merge_intervals
+_gaps = staging.gaps
 
 
 class BBServer(threading.Thread):
@@ -67,7 +54,8 @@ class BBServer(threading.Thread):
                  pfs_dir: str = "/tmp/pfs",
                  replication: int = 2,
                  stabilize_interval: float = 0.25,
-                 drain: Optional[DrainConfig] = None):
+                 drain: Optional[DrainConfig] = None,
+                 stage: Optional[StageConfig] = None):
         super().__init__(daemon=True, name=name)
         self.tname = name
         self.transport = transport
@@ -82,6 +70,7 @@ class BBServer(threading.Thread):
         self.drain_cfg = drain or DrainConfig()
         self.drainer = DrainEngine(self.drain_cfg) \
             if self.drain_cfg.enabled else None
+        self.stage_cfg = stage or StageConfig()
 
         self.ring: List[str] = []            # manager-ordered server list
         self.alive: Dict[str, bool] = {}
@@ -111,6 +100,8 @@ class BBServer(threading.Thread):
         self._evicted: Dict[str, tuple] = {}     # key -> (file, off, len)
         self._evicted_files: Dict[str, Dict[int, tuple]] = {}
         self._drain_epochs: Dict[int, dict] = {}  # epoch -> keys/gens/bytes
+        # stage-in epochs (ISSUE 4): epoch -> coverage metas + range state
+        self._stage_epochs: Dict[int, dict] = {}
         # epochs already written or aborted: late flush_meta/shuffle_done
         # stragglers must not resurrect them through _flush_state's
         # auto-create (a zombie entry would wedge self._flush forever and
@@ -119,7 +110,9 @@ class BBServer(threading.Thread):
         self._last_pressure = 0.0
         self.stats = {"puts": 0, "batch_puts": 0, "redirects": 0, "spills": 0,
                       "flushes": 0, "stabilize_repairs": 0,
-                      "drain_epochs": 0, "drained_bytes": 0, "evictions": 0}
+                      "drain_epochs": 0, "drained_bytes": 0, "evictions": 0,
+                      "stage_epochs": 0, "staged_bytes": 0,
+                      "clean_evictions": 0, "clean_evicted_bytes": 0}
         # async stabilization state
         self._inflight_pings: Dict[int, tuple] = {}   # nonce -> (peer, deadline)
         self._ping_misses: Dict[str, int] = {}
@@ -175,6 +168,7 @@ class BBServer(threading.Thread):
             self._check_ping_deadlines(now)
             self._check_confirm_deadlines(now)
             self._drain_tick(now)
+            self._stage_tick(now)
 
     def stop(self):
         self._stop.set()
@@ -448,11 +442,14 @@ class BBServer(threading.Thread):
                              self._file_stat_payload(msg.payload["file"]))
 
     def _on_file_chunks(self, msg: Message):
-        """The local chunk manifest for one file: [(offset, key, length)].
-        Clients merge manifests across servers to assemble buffered reads
-        without knowing the writer's striping."""
+        """The local chunk manifest for one file: [(offset, key, length,
+        clean)]. Clients merge manifests across servers to assemble
+        buffered reads without knowing the writer's striping; the clean
+        flag lets the merge prefer dirty copies — a buffered write is at
+        least as fresh as any staged re-ingest of the PFS copy."""
         fmap = self._files.get(msg.payload["file"], {})
-        chunks = [[off, key, ln] for off, (key, ln) in fmap.items()]
+        chunks = [[off, key, ln, self.store.is_clean(key)]
+                  for off, (key, ln) in fmap.items()]
         self.transport.reply(self.tname, msg, "file_chunks_ack",
                              {"file": msg.payload["file"], "chunks": chunks})
 
@@ -648,7 +645,10 @@ class BBServer(threading.Thread):
             segs = {k: self._segments[k] for k in keys
                     if k in self._segments}
         else:
-            segs = dict(self._segments)
+            # clean (staged) chunks are byte-identical to their durable PFS
+            # copy — re-shuffling and re-writing them would be pure waste
+            segs = {k: s for k, s in self._segments.items()
+                    if not self.store.is_clean(k)}
         st["my_metas"] = segs
         metas = [(s.file, s.offset, s.length, k) for k, s in segs.items()]
         sizes = {s.file: self.lookup_table[s.file] for s in segs.values()
@@ -801,6 +801,11 @@ class BBServer(threading.Thread):
             return                  # nothing file-attributed: nothing to drain
         if not eng.update(occ["fraction"], now):
             return
+        # clean-evict fast path (ISSUE 4): staged bytes already have a
+        # durable PFS copy, so under pressure they are dropped first —
+        # locally, for free, with no flush epoch and no token-bucket debit
+        if self._clean_evict():
+            return
         if eng.peek(now) <= 0:
             return
         keys, nbytes = self._drain_select(self.drain_cfg.max_epoch_bytes)
@@ -818,10 +823,12 @@ class BBServer(threading.Thread):
     def _drain_select(self, budget: int):
         """Cold, sealed, FILE-ATTRIBUTED chunks in age order up to ``budget``
         bytes (always at least one chunk). Bare KV keys cannot travel the
-        two-phase planner and are skipped."""
+        two-phase planner and are skipped; clean (staged) keys never need a
+        drain epoch — the clean-evict fast path drops them for free."""
         out: List[str] = []
         total = 0
-        for key, length in self.store.cold_keys(self.drain_cfg.min_idle_s):
+        for key, length in self.store.cold_keys(self.drain_cfg.min_idle_s,
+                                                clean=False):
             if key not in self._segments:
                 continue
             if out and total + length > budget:
@@ -829,6 +836,33 @@ class BBServer(threading.Thread):
             out.append(key)
             total += length
         return out, total
+
+    def _clean_evict(self, skip_file: Optional[str] = None) -> int:
+        """Evict cold CLEAN chunks (stage-in re-ingests): they are durable
+        on the PFS by construction, so no flush epoch, no coordination, no
+        bandwidth debit — tombstone, remember the residency for transparent
+        read fallthrough, compact. ``skip_file`` protects the file an
+        in-progress stage is loading from being cannibalized by its own
+        admission guard. Returns bytes freed."""
+        freed = 0
+        for key, length in self.store.cold_keys(clean=True):
+            seg = self._segments.get(key)
+            if seg is not None and seg.file == skip_file:
+                continue
+            n = self.store.evict(key)
+            if n == 0:
+                continue
+            freed += n
+            self.stats["clean_evictions"] += 1
+            if seg is not None:
+                self._evicted[key] = (seg.file, seg.offset, seg.length)
+                self._evicted_files.setdefault(
+                    seg.file, {})[seg.offset] = (key, seg.length)
+            self._drop_segment(key)
+        if freed:
+            self.store.compact()
+            self.stats["clean_evicted_bytes"] += freed
+        return freed
 
     def _on_drain_evict(self, msg: Message):
         """The manager confirmed a drain micro-epoch fully durable: evict the
@@ -886,6 +920,178 @@ class BBServer(threading.Thread):
                     and not st["written"]:
                 st["written"] = True
                 self._write_pfs(epoch, st)
+
+    # stage-in engine (ISSUE 4) ----------------------------------------------
+    def _stage_state(self, epoch: int) -> dict:
+        """Per-epoch stage state; the ring is snapshotted from the manager's
+        stage_begin so every participant computes the same domains (exactly
+        the flush-epoch rule, in reverse)."""
+        return self._stage_epochs.setdefault(epoch, {
+            "file": None, "lo": 0, "hi": -1, "ring": [], "expected": set(),
+            "meta": {}, "size": 0, "begun": False, "staged": False})
+
+    def _close_stage(self, epoch: int):
+        self._stage_epochs.pop(epoch, None)
+        self._closed_epochs.add(epoch)
+        if len(self._closed_epochs) > 4096:
+            self._closed_epochs.clear()
+
+    def _on_stage_begin(self, msg: Message):
+        """Phase 1 of a stage epoch: broadcast my live buffered coverage of
+        the file to every participant. Bytes ANYONE still buffers are at
+        least as fresh as the durable PFS copy — staging over them could
+        resurrect stale bytes, so the coverage union defines what must NOT
+        be re-ingested."""
+        p = msg.payload
+        epoch = p["epoch"]
+        if epoch in self._closed_epochs:
+            return
+        st = self._stage_state(epoch)
+        st["file"], st["lo"], st["hi"] = p["file"], p["lo"], p["hi"]
+        st["ring"] = list(p["ring"])
+        st["expected"] = set(p["ring"])
+        st["begun"] = True
+        fmap = self._files.get(p["file"], {})
+        covered = staging.merge_intervals(
+            [[off, off + ln] for off, (_k, ln) in fmap.items()])
+        size = max(self.lookup_table.get(p["file"], 0),
+                   max((off + ln for off, (_k, ln) in fmap.items()),
+                       default=0))
+        path = os.path.join(self.pfs_dir, p["file"])
+        if os.path.exists(path):
+            size = max(size, os.path.getsize(path))
+        for peer in st["ring"]:
+            self.transport.send(self.tname, peer, "stage_meta",
+                                {"epoch": epoch, "from": self.tname,
+                                 "covered": covered, "size": size})
+        self._maybe_stage(epoch, st)
+
+    def _on_stage_meta(self, msg: Message):
+        epoch = msg.payload["epoch"]
+        if epoch in self._closed_epochs:
+            return
+        st = self._stage_state(epoch)
+        st["meta"][msg.payload["from"]] = msg.payload["covered"]
+        st["size"] = max(st["size"], msg.payload["size"])
+        self._maybe_stage(epoch, st)
+
+    def _on_stage_abort(self, msg: Message):
+        """The manager aborted the epoch (death / timeout mid-stage). Drop
+        the state; slices already re-ingested are CLEAN copies of durable
+        bytes, so nothing needs undoing and reads stay correct either way."""
+        self._close_stage(msg.payload["epoch"])
+
+    def _maybe_stage(self, epoch: int, st: dict):
+        if st["begun"] and set(st["meta"]) >= st["expected"] \
+                and not st["staged"]:
+            st["staged"] = True
+            self._plan_stage(epoch, st)
+
+    def _plan_stage(self, epoch: int, st: dict):
+        """Phase 2 setup: plan MY lookup-table domain's uncovered slices.
+        The re-ingest itself runs incrementally from ``_stage_tick`` (at
+        most ``tick_bytes`` per server-loop pass) so a large stage cannot
+        stall ping/pong long enough for peers to declare this server dead
+        mid-epoch."""
+        f, size = st["file"], st["size"]
+        lo = max(0, st["lo"])
+        hi = size if st["hi"] < 0 else min(st["hi"], size)
+        path = os.path.join(self.pfs_dir, f)
+        plan: List = []
+        if size > 0:
+            self._merge_lookup({f: size})
+        if size > 0 and lo < hi and os.path.exists(path):
+            doms = twophase.domains(size, st["ring"])
+            mine = [(a, b) for s, a, b in doms if s == self.tname]
+            covered = [iv for metas in st["meta"].values() for iv in metas]
+            plan = staging.plan_stage(mine, (lo, hi), covered,
+                                      self.stage_cfg.slice_bytes)
+        st["plan"] = list(plan)
+        st["path"] = path
+        st["bytes"] = 0
+        if not st["plan"]:
+            self._finish_stage(epoch, st)
+
+    def _stage_tick(self, now: float):
+        """Re-ingest up to ``tick_bytes`` of the in-flight stage plan, then
+        return to the message loop (every participant stages its own domain
+        in parallel — this is what makes a cold restart a cluster-wide bulk
+        load instead of one client's serial miss loop)."""
+        for epoch, st in list(self._stage_epochs.items()):
+            plan = st.get("plan")
+            if not plan:
+                continue
+            f = st["file"]
+            budget = self.stage_cfg.tick_bytes
+            while plan and budget > 0:
+                if not self._stage_admit(f):
+                    plan.clear()    # buffer under real pressure: stop, the
+                    break           # rest stays readable via PFS fallback
+                off, ln = plan.pop(0)
+                with open(st["path"], "rb") as fh:
+                    fh.seek(off)
+                    data = fh.read(ln)
+                if len(data) < ln:
+                    plan.clear()    # PFS copy shorter than advertised
+                    break
+                if self._ingest_clean(f, off, data):
+                    st["bytes"] += len(data)
+                budget -= ln
+            if not plan:
+                self._finish_stage(epoch, st)
+
+    def _finish_stage(self, epoch: int, st: dict):
+        staged = st.get("bytes", 0)
+        self._close_stage(epoch)
+        if staged:
+            self.stats["stage_epochs"] += 1
+            self.stats["staged_bytes"] += staged
+        self.transport.send(self.tname, self.manager, "stage_done",
+                            {"epoch": epoch, "server": self.tname,
+                             "bytes": staged})
+
+    def _stage_admit(self, file: str) -> bool:
+        """Admission guard: staging must never push the store into a drain
+        storm. At the high watermark, clean-evict older staged bytes first
+        (free, no epoch); if occupancy is STILL at the watermark, refuse
+        further slices — dirty data is never displaced to make room for
+        bytes that already have a durable copy."""
+        occ = self.store.occupancy()["fraction"]
+        if occ < self.drain_cfg.high_watermark:
+            return True
+        self._clean_evict(skip_file=file)
+        return self.store.occupancy()["fraction"] \
+            < self.drain_cfg.high_watermark
+
+    def _ingest_clean(self, file: str, offset: int, data: bytes) -> bool:
+        """Store one staged slice as a CLEAN chunk under the ordinary
+        ``{file}:{offset}`` key namespace (manifest-directed reads find it
+        like any buffered chunk), clearing any tombstone it re-covers.
+
+        A write that landed AFTER the epoch's coverage snapshot is fresher
+        than the PFS copy, so the slice is SKIPPED when its key is live or
+        any live local chunk overlaps its range — staging over it would
+        resurrect stale bytes and, worse, mark them clean (evictable with
+        no flush). Returns whether the slice was ingested."""
+        key = f"{file}:{offset}"
+        if key in self.store:
+            return False
+        fmap = self._files.get(file)
+        if fmap:
+            lo, hi = offset, offset + len(data)
+            for off, (_k, ln) in fmap.items():
+                if off < hi and lo < off + ln:
+                    return False
+        self.store.put(key, data, clean=True)
+        # the offset is resident again: clear a matching tombstone record
+        self._evicted.pop(key, None)
+        emap = self._evicted_files.get(file)
+        if emap is not None and emap.get(offset, (None, 0))[0] == key:
+            del emap[offset]
+            if not emap:
+                del self._evicted_files[file]
+        self._record_segment(key, file, offset, len(data))
+        return True
 
     # checkpoint retention ---------------------------------------------------
     def _on_evict_epoch(self, msg: Message):

@@ -19,6 +19,7 @@ from repro.core.drain import DrainConfig
 from repro.core.filesystem import BBFileSystem
 from repro.core.manager import BBManager
 from repro.core.server import BBServer
+from repro.core.staging import StageConfig
 from repro.core.transport import Transport
 
 
@@ -38,8 +39,14 @@ class BBConfig:
     batch_bytes: int = 1 << 20          # flush a coalesced batch at this size
     coalesce_threshold: int = 64 << 10  # writes below this auto-coalesce
     chunk_bytes: int = 4 << 20          # BBFile striping unit
+    # read path (ISSUE 4): one knob for every read-side RPC deadline, and
+    # the thread fan-out width for parallel manifest/range fetches
+    read_timeout: float = 1.0
+    read_fanout: int = 4
     # autonomous drain engine (ISSUE 3): watermark-driven background flush
     drain: DrainConfig = field(default_factory=DrainConfig)
+    # stage-in engine (ISSUE 4): PFS -> BB bulk re-ingest + read-ahead
+    stage: StageConfig = field(default_factory=StageConfig)
 
 
 class BurstBufferSystem:
@@ -66,10 +73,12 @@ class BurstBufferSystem:
                 pfs_dir=self.pfs_dir,
                 replication=cfg.replication,
                 stabilize_interval=cfg.stabilize_interval,
-                drain=cfg.drain)
+                drain=cfg.drain, stage=cfg.stage)
         self.clients: List[BBClient] = [
             BBClient(f"client/{i}", self.transport, client_index=i,
                      placement=cfg.placement, replication=cfg.replication,
+                     read_timeout=cfg.read_timeout,
+                     read_fanout=cfg.read_fanout,
                      batch_bytes=cfg.batch_bytes,
                      coalesce_threshold=cfg.coalesce_threshold)
             for i in range(cfg.num_clients)]
@@ -107,7 +116,9 @@ class BurstBufferSystem:
         if self._fs is None:
             self._fs = BBFileSystem(self.clients,
                                     chunk_bytes=self.cfg.chunk_bytes,
-                                    pfs_dir=self.pfs_dir)
+                                    pfs_dir=self.pfs_dir,
+                                    read_fanout=self.cfg.read_fanout,
+                                    stage=self.cfg.stage)
         return self._fs
 
     def flush(self, epoch: int, timeout: float = 30.0) -> bool:
@@ -139,7 +150,7 @@ class BurstBufferSystem:
                        pfs_dir=self.pfs_dir,
                        replication=self.cfg.replication,
                        stabilize_interval=self.cfg.stabilize_interval,
-                       drain=self.cfg.drain)
+                       drain=self.cfg.drain, stage=self.cfg.stage)
         self.servers[name] = srv
         srv.start()
         # the joining server knows the ring via the manager's ring_update;

@@ -17,6 +17,11 @@ Drain-engine support (ISSUE 3):
   - ``occupancy()``/``cold_keys()`` feed the watermark policy: occupancy is
     used bytes over DRAM+SSD capacity, cold keys are whole sealed segments
     in age order (SSD first — it spilled earliest — then DRAM by segment id).
+
+Stage-in support (ISSUE 4): a put may be marked ``clean`` — the bytes were
+re-ingested from a durable PFS copy (staging.py), so eviction loses nothing
+and needs no flush epoch. ``cold_keys(clean=True)`` lists the free-eviction
+candidates; a plain rewrite of the key clears the flag.
 """
 from __future__ import annotations
 
@@ -34,6 +39,8 @@ class _Loc:
     offset: int
     length: int
     gen: int = 0       # write generation (monotonic per store)
+    clean: bool = False  # a durable PFS copy exists (stage-in re-ingest):
+    #                      evictable for free, without a flush epoch
 
 
 class LogStore:
@@ -120,17 +127,26 @@ class LogStore:
     def was_evicted(self, key: str) -> bool:
         return self.tier_of(key) == "pfs"
 
+    def is_clean(self, key: str) -> bool:
+        """True when the key's bytes were staged in from a durable PFS copy
+        (and not rewritten since): evicting them loses nothing."""
+        with self._lock:
+            loc = self._index.get(key)
+            return loc is not None and loc.tier != "pfs" and loc.clean
+
     # ----------------------------------------------------------------- write
-    def put(self, key: str, value: bytes) -> str:
+    def put(self, key: str, value: bytes, *, clean: bool = False) -> str:
         """Append to the DRAM log; spill oldest segments to SSD if needed.
-        Returns the tier the value landed in."""
+        Returns the tier the value landed in. ``clean`` marks the bytes as
+        having a durable PFS copy already (stage-in re-ingest) — a plain
+        rewrite of the same key clears the flag."""
         with self._lock:
             if key in self._index:
                 self.delete(key)
             self._gen += 1
             seg = self._segments[self._open_seg]
             loc = _Loc("dram", self._open_seg, len(seg), len(value),
-                       self._gen)
+                       self._gen, clean)
             seg += value
             self._index[key] = loc
             self._dram_bytes += len(value)
@@ -169,7 +185,7 @@ class LogStore:
                 for k, loc in self._index.items():
                     if loc.tier == "dram" and loc.segment == seg_id:
                         self._index[k] = _Loc("ssd", 0, base + loc.offset,
-                                              loc.length, loc.gen)
+                                              loc.length, loc.gen, loc.clean)
                 self._dram_bytes -= len(data)
                 self._ssd_bytes += len(data)
                 spilled = True
@@ -208,21 +224,26 @@ class LogStore:
             return loc.length
 
     def cold_keys(self, min_idle_s: float = 0.0,
-                  now: Optional[float] = None) -> List[Tuple[str, int]]:
+                  now: Optional[float] = None, *,
+                  clean: Optional[bool] = None) -> List[Tuple[str, int]]:
         """Drain candidates in age order: SSD-resident keys first (they
         spilled earliest, i.e. are the coldest), then keys of sealed DRAM
         segments oldest-segment-first. The open segment never drains, and a
         DRAM segment appended to within ``min_idle_s`` is considered warm.
-        Returns [(key, length)]."""
+        ``clean`` filters by the clean flag (True: only staged/re-ingested
+        keys — the free-eviction candidates; False: only dirty keys — the
+        ones that need a drain epoch; None: both). Returns [(key, length)]."""
         now = time.monotonic() if now is None else now
         with self._lock:
             ssd = sorted((loc.offset, k, loc.length)
                          for k, loc in self._index.items()
-                         if loc.tier == "ssd")
+                         if loc.tier == "ssd"
+                         and (clean is None or loc.clean == clean))
             dram = sorted(
                 (loc.segment, loc.offset, k, loc.length)
                 for k, loc in self._index.items()
                 if loc.tier == "dram" and loc.segment != self._open_seg
+                and (clean is None or loc.clean == clean)
                 and now - self._seg_touched.get(loc.segment, 0.0)
                 >= min_idle_s)
             return [(k, ln) for _, k, ln in ssd] \
@@ -261,7 +282,7 @@ class LogStore:
                     src.seek(loc.offset)
                     data = src.read(loc.length)
                     self._index[k] = _Loc("ssd", 0, dst.tell(), loc.length,
-                                          loc.gen)
+                                          loc.gen, loc.clean)
                     dst.write(data)           # sequential rewrite
             os.replace(tmp, self._ssd_path)
             self._ssd_bytes = live_bytes

@@ -1,0 +1,456 @@
+"""Stage-in engine (ISSUE 4): domain-partitioned stage planning, sequential
+read-ahead, parallel fan-out, the manager-coordinated stage epoch protocol
+(serialized against drain micro-epochs), the clean-evict fast path (staged
+bytes drop without a flush epoch), and the fault-injection surface — kill a
+server mid-stage (the epoch must abort cleanly and reads stay byte-exact
+via the fallback chain)."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BBConfig, BurstBufferSystem, DrainConfig, ReadAhead,
+                        StageConfig, Transport)
+from repro.core import staging
+from repro.core.manager import DRAIN_EPOCH_BASE, STAGE_EPOCH_BASE
+from repro.core.server import BBServer
+from repro.core.tiering import LogStore
+from repro.core.transport import Message
+
+
+# ------------------------------------------------------------- plan units
+
+def test_plan_stage_slices_only_uncovered_domain_bytes():
+    plan = staging.plan_stage([(0, 100)], (0, 100),
+                              [[20, 40], [60, 70]], slice_bytes=25)
+    # gaps [0,20) [40,60) [70,100), the last sliced at 25 bytes
+    assert plan == [(0, 20), (40, 20), (70, 25), (95, 5)]
+
+
+def test_plan_stage_respects_requested_range_and_foreign_domains():
+    # my domain is [50, 100); the request stops at 80; nothing is covered
+    assert staging.plan_stage([(50, 100)], (0, 80), [], 1000) == [(50, 30)]
+    # a fully covered domain needs no slices at all
+    assert staging.plan_stage([(0, 50)], (0, 50), [[0, 50]], 16) == []
+    # a domain wholly outside the request stages nothing
+    assert staging.plan_stage([(90, 100)], (0, 50), [], 16) == []
+
+
+def test_plan_stage_merges_overlapping_coverage():
+    plan = staging.plan_stage([(0, 60)], (0, 60),
+                              [[0, 20], [10, 30], [30, 40]], slice_bytes=100)
+    assert plan == [(40, 20)]
+
+
+# ------------------------------------------------------- read-ahead units
+
+def _ra(**kw):
+    base = dict(prefetch_min_run=2, prefetch_window=100)
+    base.update(kw)
+    return ReadAhead(StageConfig(**base))
+
+
+def test_read_ahead_triggers_on_sequential_run():
+    ra = _ra()
+    assert ra.observe(0, 10, 1000) is None          # run of 1: no trigger
+    assert ra.observe(10, 10, 1000) == (20, 120)    # sequential: window
+    # plenty staged ahead — no re-trigger until the reader catches up
+    assert ra.observe(20, 10, 1000) is None
+    got = None
+    for off in range(30, 70, 10):
+        got = ra.observe(off, 10, 1000) or got
+    assert got == (120, 220), "next window must start at the staged mark"
+
+
+def test_read_ahead_seek_breaks_the_run():
+    ra = _ra()
+    assert ra.observe(0, 10, 1000) is None
+    assert ra.observe(500, 10, 1000) is None        # seek: run restarts
+    assert ra.observe(510, 10, 1000) == (520, 620)
+
+
+def test_read_ahead_clamps_at_eof():
+    ra = _ra(prefetch_window=1000)
+    assert ra.observe(0, 10, 30) is None
+    assert ra.observe(10, 10, 30) == (20, 30)
+    assert ra.observe(20, 10, 30) is None           # nothing left to stage
+
+
+# ------------------------------------------------------- fan-out helper
+
+def test_parallel_map_preserves_order_and_propagates_errors():
+    assert staging.parallel_map(lambda x: x * x, range(20), 4) \
+        == [x * x for x in range(20)]
+    assert staging.parallel_map(lambda x: x + 1, [5], 8) == [6]
+    assert staging.parallel_map(lambda x: x, [], 8) == []
+
+    def _boom(x):
+        if x == 7:
+            raise ValueError("seven")
+        return x
+
+    with pytest.raises(ValueError, match="seven"):
+        staging.parallel_map(_boom, range(10), 3)
+
+
+# ------------------------------------------------------- LogStore clean flag
+
+def test_logstore_clean_flag_filters_and_survives_spill(tmp_path):
+    store = LogStore(128 << 10, str(tmp_path), name="cl0",
+                     segment_bytes=32 << 10)
+    val = b"c" * (32 << 10)
+    for i in range(4):
+        store.put(f"d{i}", val)                  # dirty
+    for i in range(4):
+        store.put(f"c{i}", val, clean=True)      # staged
+    assert store.ssd_used > 0, "expected spill to exercise tier moves"
+    assert store.is_clean("c0") and not store.is_clean("d0")
+    clean = {k for k, _ in store.cold_keys(clean=True)}
+    dirty = {k for k, _ in store.cold_keys(clean=False)}
+    assert clean <= {f"c{i}" for i in range(4)} and clean
+    assert dirty <= {f"d{i}" for i in range(4)} and dirty
+    store.compact()
+    assert store.is_clean("c0"), "compact must preserve the clean flag"
+    # a plain rewrite dirties the key again
+    store.put("c0", val)
+    assert not store.is_clean("c0")
+
+
+# ------------------------------------------- single-server protocol units
+
+def _stage_server(tmp_path):
+    tr = Transport()
+    srv = BBServer("s0", tr, dram_capacity=4 << 20,
+                   ssd_dir=str(tmp_path / "ssd"),
+                   pfs_dir=str(tmp_path / "pfs"), replication=1)
+    srv.ring, srv.alive = ["s0"], {"s0": True}
+    os.makedirs(srv.pfs_dir, exist_ok=True)
+    return tr, srv
+
+
+def _begin(srv, epoch, file="f"):
+    srv._on_stage_begin(Message("stage_begin", "manager", "s0",
+                                {"epoch": epoch, "file": file, "lo": 0,
+                                 "hi": -1, "ring": ["s0"]}, msg_id=1))
+
+
+def _meta(srv, epoch, covered, size):
+    # the epoch's coverage snapshot, delivered by hand so a put can be
+    # interleaved between snapshot and re-ingest — the race under test
+    srv._on_stage_meta(Message("stage_meta", "s0", "s0",
+                               {"epoch": epoch, "from": "s0",
+                                "covered": covered, "size": size},
+                               msg_id=2))
+
+
+def test_write_landing_mid_stage_is_not_clobbered(tmp_path):
+    """A put that lands AFTER the epoch's coverage snapshot but BEFORE the
+    re-ingest holds fresher bytes than the PFS — staging over it would
+    resurrect stale data and mark it clean (silently evictable). The slice
+    must be skipped when its key is live."""
+    tr, srv = _stage_server(tmp_path)
+    with open(os.path.join(srv.pfs_dir, "f"), "wb") as fh:
+        fh.write(b"stale" * 200)
+    epoch = (2 << 30) + 1
+    _begin(srv, epoch)                           # snapshot: nothing covered
+    srv._on_put(Message("put", "client", "s0",   # fresh write races in
+                        {"key": "f:0", "value": b"fresh" * 200, "file": "f",
+                         "offset": 0, "chain": []}, msg_id=3))
+    _meta(srv, epoch, covered=[], size=1000)
+    srv._stage_tick(time.monotonic())
+    assert srv.store.get("f:0") == b"fresh" * 200, \
+        "mid-stage write clobbered by stale PFS bytes"
+    assert not srv.store.is_clean("f:0"), \
+        "fresh write must not become silently evictable"
+
+
+def test_mid_stage_write_at_other_offset_blocks_overlapping_slice(tmp_path):
+    tr, srv = _stage_server(tmp_path)
+    with open(os.path.join(srv.pfs_dir, "f"), "wb") as fh:
+        fh.write(b"s" * 1000)
+    epoch = (2 << 30) + 2
+    _begin(srv, epoch)
+    srv._on_put(Message("put", "client", "s0",   # unaligned fresh write
+                        {"key": "f:100", "value": b"F" * 50, "file": "f",
+                         "offset": 100, "chain": []}, msg_id=3))
+    _meta(srv, epoch, covered=[], size=1000)
+    srv._stage_tick(time.monotonic())
+    # the overlapping slice was skipped wholesale: the fresh chunk survives
+    assert srv.store.get("f:100") == b"F" * 50
+    assert "f:0" not in srv.store, "overlapping slice must not be staged"
+
+
+# --------------------------------------------------------- integration
+
+def _stage_system(num=3, dram=32 << 20, **kw):
+    base = dict(num_servers=num, num_clients=num, placement="iso",
+                dram_capacity=dram, chunk_bytes=128 << 10,
+                segment_bytes=256 << 10, stabilize_interval=0.15,
+                read_timeout=0.5)
+    base.update(kw)
+    return BurstBufferSystem(BBConfig(**base)).start()
+
+
+def _write(sys_, path, nbytes, seed=0):
+    data = np.random.default_rng(seed).integers(
+        0, 256, nbytes, dtype=np.uint8).tobytes()
+    f = sys_.fs().open(path, "w", policy="batched")
+    f.pwrite(data, 0)
+    f.close(60.0)
+    return data
+
+
+def _evict_fully(sys_, path, timeout=10.0):
+    sys_.evict(path)
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        st = sys_.fs().stat(path)
+        if st["residency"]["dram"] == 0 and st["residency"]["ssd"] == 0:
+            return st
+        time.sleep(0.05)
+    raise AssertionError(f"{path} still buffered after evict")
+
+
+def test_stage_in_of_evicted_file_restores_buffered_reads():
+    """The acceptance scenario: a flushed-and-evicted file is bulk-loaded
+    back by one stage epoch, each server re-ingesting its own domain; reads
+    then come from buffered CLEAN chunks and stay byte-exact."""
+    sys_ = _stage_system()
+    try:
+        data = _write(sys_, "ckpt", 4 << 20)
+        assert sys_.flush(epoch=1, timeout=30)
+        st = _evict_fully(sys_, "ckpt")
+        assert st["evicted_chunks"] > 0
+        assert sys_.fs().stage("ckpt"), "stage epoch did not complete"
+        assert sys_.manager.stage_stats["epochs"] == 1
+        assert sys_.manager.stage_stats["staged_bytes"] == len(data)
+        st = sys_.fs().stat("ckpt")
+        assert st["residency"]["dram"] + st["residency"]["ssd"] \
+            >= len(data), f"staged bytes not resident: {st}"
+        clean = [k for srv in sys_.servers.values()
+                 for k in srv.store.keys() if srv.store.is_clean(k)]
+        assert clean, "staged chunks must be marked clean"
+        got = sys_.fs().open("ckpt", "r").pread(0, len(data))
+        assert got == data
+        assert sys_.manager.errors == []
+    finally:
+        sys_.stop()
+
+
+def test_stage_never_overwrites_fresher_buffered_chunks():
+    """Coverage exchange: bytes ANY server still buffers are fresher than
+    the PFS copy and must survive a stage — staging over a buffered rewrite
+    would resurrect stale durable bytes."""
+    sys_ = _stage_system()
+    try:
+        data = _write(sys_, "mix", 2 << 20, seed=3)
+        assert sys_.flush(epoch=1, timeout=30)
+        _evict_fully(sys_, "mix")
+        # rewrite one chunk AFTER the flush: buffered only, PFS is stale
+        fresh = np.random.default_rng(9).integers(
+            0, 256, 128 << 10, dtype=np.uint8).tobytes()
+        f = sys_.fs().open("mix", "a", policy="sync")
+        f.pwrite(fresh, 256 << 10)
+        f.sync(30.0)
+        want = data[:256 << 10] + fresh + data[(256 << 10) + len(fresh):]
+        assert sys_.fs().stage("mix")
+        got = sys_.fs().open("mix", "r").pread(0, len(want))
+        assert got == want, "stage resurrected stale PFS bytes"
+    finally:
+        sys_.stop()
+
+
+def test_clean_evict_drops_staged_data_without_flush_epoch():
+    """Staged bytes have a durable copy by construction: pressure drops
+    them locally (tombstone + compact), with NO drain micro-epoch, and
+    reads fall through transparently."""
+    sys_ = _stage_system()
+    try:
+        data = _write(sys_, "ce", 3 << 20, seed=1)
+        assert sys_.flush(epoch=1, timeout=30)
+        _evict_fully(sys_, "ce")
+        assert sys_.fs().stage("ce")
+        epochs_before = sys_.manager.drain_stats["epochs"]
+        freed = {n: srv._clean_evict() for n, srv in sys_.servers.items()}
+        assert sum(freed.values()) > 0, "no clean bytes were evicted"
+        for n, srv in sys_.servers.items():
+            if freed[n]:
+                assert srv.stats["clean_evictions"] > 0
+        # no coordination happened: drain epoch counter untouched
+        assert sys_.manager.drain_stats["epochs"] == epochs_before
+        st = sys_.fs().stat("ce")
+        assert st["residency"]["dram"] + st["residency"]["ssd"] == 0, st
+        got = sys_.fs().open("ce", "r").pread(0, len(data))
+        assert got == data, "clean-evicted data unreadable via fallback"
+    finally:
+        sys_.stop()
+
+
+def test_pressure_clean_evicts_before_requesting_drain_epochs():
+    """Admission/storm guard, end to end: staging into a tight store pushes
+    occupancy over the high watermark; the drain tick must relieve it via
+    the free clean-evict path instead of burning drain micro-epochs on
+    bytes that are already durable."""
+    dram = 1 << 20
+    sys_ = _stage_system(
+        dram=dram, ssd_capacity=dram, segment_bytes=128 << 10,
+        drain=DrainConfig(high_watermark=0.5, low_watermark=0.25,
+                          request_interval=0.02, pressure_interval=0.05))
+    try:
+        data = _write(sys_, "big", 4 << 20, seed=2)
+        deadline = time.monotonic() + 20.0       # let the drainer evict it
+        while time.monotonic() < deadline:
+            st = sys_.fs().stat("big")
+            if st["residency"]["dram"] + st["residency"]["ssd"] == 0:
+                break
+            time.sleep(0.1)
+        epochs_before = sys_.manager.drain_stats["epochs"]
+        assert sys_.fs().stage("big"), "stage did not complete"
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            if sum(s.stats["clean_evictions"]
+                   for s in sys_.servers.values()) > 0:
+                break
+            time.sleep(0.05)
+        cleans = sum(s.stats["clean_evictions"]
+                     for s in sys_.servers.values())
+        assert cleans > 0, "pressure never took the clean-evict fast path"
+        assert sys_.manager.drain_stats["epochs"] == epochs_before, \
+            "staged (already durable) bytes triggered a drain storm"
+        got = sys_.fs().open("big", "r").pread(0, len(data))
+        assert got == data
+    finally:
+        sys_.stop()
+
+
+def test_stage_and_drain_epochs_are_serialized():
+    sys_ = _stage_system()
+    try:
+        data = _write(sys_, "ser", 1 << 20, seed=4)
+        assert sys_.flush(epoch=1, timeout=30)
+        _evict_fully(sys_, "ser")
+        mgr = sys_.manager
+        # a drain micro-epoch in flight: stage requests are refused
+        mgr._drain = {"epoch": DRAIN_EPOCH_BASE, "started": time.monotonic(),
+                      "expected": set(mgr.alive_ring()), "done": set(),
+                      "drained": set(), "bytes": 0, "requested_by": None}
+        assert sys_.fs().stage("ser", wait=False) is False
+        mgr._drain = None
+        # a stage epoch in flight: drain requests are dropped
+        mgr._stage = {"epoch": STAGE_EPOCH_BASE + 99, "path": "ser",
+                      "started": time.monotonic(),
+                      "expected": set(mgr.alive_ring()), "done": set(),
+                      "bytes": 0}
+        c = sys_.clients[0]
+        c.transport.send(c.tname, "manager", "drain_request",
+                         {"server": "server/0", "occupancy": 0.99,
+                          "drainable": 1 << 20})
+        time.sleep(0.5)
+        assert mgr._drain is None, "drain epoch started during a stage"
+        mgr._stage = None
+        # with both slots free, staging works again and reads stay exact
+        assert sys_.fs().stage("ser")
+        got = sys_.fs().open("ser", "r").pread(0, len(data))
+        assert got == data
+    finally:
+        sys_.stop()
+
+
+def test_sequential_read_ahead_stages_the_next_window():
+    """A prefetching handle reading sequentially must trigger asynchronous
+    stage-ins; later reads then HIT buffered clean chunks instead of
+    falling back per miss — and the whole file reads byte-exact."""
+    sys_ = _stage_system(
+        stage=StageConfig(prefetch_window=1 << 20, prefetch_min_run=2,
+                          slice_bytes=256 << 10))
+    try:
+        data = _write(sys_, "seq", 4 << 20, seed=5)
+        assert sys_.flush(epoch=1, timeout=30)
+        _evict_fully(sys_, "seq")
+        r = sys_.fs().open("seq", "r", prefetch=True)
+        step = 128 << 10
+        got = bytearray()
+        got += r.read(step)
+        got += r.read(step)                      # sequential run: trigger
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline \
+                and sys_.manager.stage_stats["epochs"] < 1:
+            time.sleep(0.05)
+        assert sys_.manager.stage_stats["epochs"] >= 1, \
+            "sequential reads never triggered a stage"
+        hits_before = sum(c.stats["bb_hits"] for c in sys_.clients)
+        while len(got) < len(data):
+            got += r.read(step)
+        assert bytes(got) == data
+        hits = sum(c.stats["bb_hits"] for c in sys_.clients) - hits_before
+        assert hits > 0, "read-ahead staged nothing the reader then hit"
+    finally:
+        sys_.stop()
+
+
+def test_mid_stage_server_death_aborts_cleanly_reads_correct():
+    """Fault injection: a participant dies while a stage epoch is in
+    flight. The manager must abort the epoch (nothing to undo — staged
+    bytes are clean copies of durable data) and every byte must still read
+    back via the fallback chain."""
+    sys_ = _stage_system(drain=DrainConfig(epoch_timeout_s=3.0))
+    try:
+        # a PFS-only file (written straight to the PFS directory): the
+        # stage is the only thing that could make it buffered
+        data = np.random.default_rng(6).integers(
+            0, 256, 8 << 20, dtype=np.uint8).tobytes()
+        with open(os.path.join(sys_.pfs_dir, "pfsonly"), "wb") as f:
+            f.write(data)
+        caught = threading.Event()
+
+        def _assassin():
+            deadline = time.monotonic() + 10.0
+            while time.monotonic() < deadline and not caught.is_set():
+                st = sys_.manager._stage
+                if st is not None:
+                    victim = sorted(st["expected"])[-1]
+                    sys_.kill_server(victim)
+                    caught.set()
+                    return
+        killer = threading.Thread(target=_assassin, daemon=True)
+        killer.start()
+        completed = sys_.fs().stage("pfsonly", timeout=15.0)
+        killer.join(10.0)
+        assert caught.is_set(), "no stage epoch was ever in flight"
+        if not completed:
+            # the abort path: bookkeeping must record it and clear the slot
+            deadline = time.monotonic() + 10.0
+            while time.monotonic() < deadline \
+                    and sys_.manager.stage_stats["aborts"] < 1:
+                time.sleep(0.05)
+            assert sys_.manager.stage_stats["aborts"] >= 1
+        assert sys_.manager._stage is None
+        # wait for the clients to learn of the death so holders exclude it
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline \
+                and len(sys_.manager.dead) < 1:
+            time.sleep(0.05)
+        got = sys_.fs().open("pfsonly", "r").pread(0, len(data))
+        assert got == data, "data lost across mid-stage failover"
+        # the system is not wedged: a fresh stage of another file works
+        data2 = _write(sys_, "after", 1 << 20, seed=7)
+        assert sys_.flush(epoch=2, timeout=30)
+        _evict_fully(sys_, "after")
+        assert sys_.fs().stage("after", timeout=15.0)
+        assert sys_.fs().open("after", "r").pread(0, len(data2)) == data2
+    finally:
+        sys_.stop()
+
+
+def test_stage_of_unknown_file_completes_empty():
+    """Staging a path with no PFS copy and no buffered bytes is a clean
+    no-op epoch, not a hang or an error."""
+    sys_ = _stage_system()
+    try:
+        assert sys_.fs().stage("nope", timeout=10.0)
+        assert sys_.manager.stage_stats["staged_bytes"] == 0
+        assert sys_.manager.errors == []
+    finally:
+        sys_.stop()

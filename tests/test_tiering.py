@@ -1,5 +1,6 @@
 """Log-structured DRAM/SSD store (paper §V hybrid storage)."""
 import os
+import threading
 
 import numpy as np
 import pytest
@@ -196,6 +197,47 @@ def test_occupancy_fraction_tracks_both_tiers(tmp_path):
     assert abs(occ["fraction"]
                - (occ["dram_used"] + occ["ssd_used"]) / occ["capacity"]) \
         < 1e-9
+
+
+def test_concurrent_readers_race_evict_and_compact_byte_exact(tmp_path):
+    """ISSUE 4 satellite: readers racing evict()+compact() must never see
+    torn or relocated bytes — every get() returns either the original value
+    or None (evicted), while the SSD log is being rewritten underneath."""
+    rng = np.random.default_rng(21)
+    store = LogStore(256 << 10, str(tmp_path), name="race",
+                     segment_bytes=32 << 10)
+    data = {f"k{i}": rng.integers(0, 256, 16 << 10, dtype=np.uint8).tobytes()
+            for i in range(64)}                  # 1 MB: most spill to SSD
+    for k, v in data.items():
+        store.put(k, v)
+    assert store.ssd_used > 0
+    stop = threading.Event()
+    errors = []
+
+    def _reader():
+        while not stop.is_set():
+            for k, v in data.items():
+                got = store.get(k)
+                if got is not None and got != v:
+                    errors.append(k)
+                    return
+
+    readers = [threading.Thread(target=_reader) for _ in range(3)]
+    for t in readers:
+        t.start()
+    victims = list(data)[::3]
+    for k in victims:                            # evict + compact in waves
+        store.evict(k)
+        store.compact()
+    stop.set()
+    for t in readers:
+        t.join(10.0)
+    assert not errors, f"raced read returned wrong bytes: {errors[:3]}"
+    for k, v in data.items():
+        if k in victims:
+            assert store.get(k) is None and store.was_evicted(k)
+        else:
+            assert store.get(k) == v, f"survivor {k} corrupted"
 
 
 def test_put_bumps_write_generation(tmp_path):
