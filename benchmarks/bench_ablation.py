@@ -69,3 +69,8 @@ def placement_balance(n_keys=2000):
 
 def main():
     return replication_sweep() + placement_balance()
+
+
+if __name__ == "__main__":
+    from benchmarks import jsonout
+    jsonout.cli_main(main, "bench_ablation")

@@ -136,3 +136,8 @@ def run():
 
 def main():
     return run()
+
+
+if __name__ == "__main__":
+    from benchmarks import jsonout
+    jsonout.cli_main(main, "bench_ckpt")

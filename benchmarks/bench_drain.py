@@ -113,12 +113,15 @@ def run(n_servers: int = 4, n_clients: int = 4, dram_mb: int = 4,
 
 
 def main(argv=None) -> int:
+    from benchmarks import jsonout
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="capped CI run (2 servers, ~3x DRAM)")
     ap.add_argument("--floor-frac", type=float, default=0.25,
                     help="fail if sustained ingest under drain drops below "
                          "this fraction of the async put baseline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results to PATH")
     args = ap.parse_args(argv)
     if args.smoke:
         res = run(n_servers=2, n_clients=2, dram_mb=1,
@@ -131,6 +134,7 @@ def main(argv=None) -> int:
             print(f"{k:>24}: {v:.2f}")
         else:
             print(f"{k:>24}: {v}")
+    jsonout.dump(args.json, "bench_drain", res)
     if not res["ok"]:
         print("bench_drain: FAILED (see fields above)", file=sys.stderr)
         return 1

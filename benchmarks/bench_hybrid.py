@@ -110,3 +110,8 @@ def main(tmpdir: str = "/tmp/bench_hybrid"):
     ok = res["bbIORMEM"] >= res["bbIORHYB"] >= res["bbIORSSD"] * 0.8
     out.append(("fig6_ordering_mem>=hyb>=ssd", 0.0, str(ok)))
     return out
+
+
+if __name__ == "__main__":
+    from benchmarks import jsonout
+    jsonout.cli_main(main, "bench_hybrid")

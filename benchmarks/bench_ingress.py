@@ -133,18 +133,25 @@ def main(full: bool = True, legacy_kv: bool = False):
 
 
 if __name__ == "__main__":
+    from benchmarks import jsonout
     ap = argparse.ArgumentParser()
     ap.add_argument("--legacy-kv", action="store_true",
                     help="drive ingest through the raw put/put_async shims "
                          "instead of BBFileSystem handles (A/B comparison)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI smoke run: assert non-zero bandwidth")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results to PATH")
     args = ap.parse_args()
     if args.smoke:
         bw = run_smoke()
         assert bw > 0, "smoke ingest produced zero bandwidth"
         print(f"bench_smoke_ingress,0.0,{bw / 1e6:.1f} MB/s OK")
+        jsonout.dump(args.json, "bench_ingress", {"smoke_mbps": bw / 1e6})
     else:
+        rows = main(legacy_kv=args.legacy_kv)
         print("name,us_per_call,derived")
-        for name, us, derived in main(legacy_kv=args.legacy_kv):
+        for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
+        jsonout.dump(args.json, "bench_ingress",
+                     jsonout.rows_to_records(rows))

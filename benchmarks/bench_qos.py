@@ -1,0 +1,297 @@
+"""QoS engine benchmark (ISSUE 5): checkpoint latency under contention.
+
+The scenario the QoS engine exists for: a background flood has the cluster
+saturated when a checkpoint burst lands on the same servers. Without QoS
+every checkpoint chunk waits behind whatever background traffic arrived
+first (FIFO inboxes, no congestion windows); with QoS the burst rides the
+checkpoint lane — weighted-deficit priority on both the client dispatch
+queue and the server put path — while per-lane congestion windows park the
+background flood client-side. A third, steady sequential stream writes
+through the PFS bypass and must never raise BB occupancy above the drain
+low-watermark.
+
+Reported: checkpoint-chunk p50/p99 completion latency for the FIFO
+baseline (QoS disabled) vs the QoS run, background throughput, max
+occupancy, byte-exact readback of every stream.
+
+CLI:
+  python -m benchmarks.bench_qos                 # full run (4 servers)
+  python -m benchmarks.bench_qos --smoke         # capped CI run; exits
+        non-zero unless checkpoint p99 improves >= --min-speedup over the
+        FIFO baseline, the bypassed stream stayed under the drain
+        low-watermark, and every stream read back byte-exact
+  python -m benchmarks.bench_qos --json out.json # machine-readable results
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import sys
+import threading
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import jsonout
+from repro.core import BBConfig, BurstBufferSystem, DrainConfig, QoSConfig
+
+
+def _config(qos_enabled: bool, n_servers: int, n_clients: int,
+            dram_mb: int, drain_enabled: bool = True) -> BBConfig:
+    dram = dram_mb << 20
+    return BBConfig(
+        num_servers=n_servers, num_clients=n_clients, placement="iso",
+        dram_capacity=dram, ssd_capacity=4 * dram,
+        # small segments: frequent, short SSD spills instead of rare long
+        # ones — a spill stalls the store, and a multi-MB spill mid-burst
+        # is indistinguishable from queueing in the latency tail
+        segment_bytes=max(dram // 32, 64 << 10),
+        chunk_bytes=64 << 10, coalesce_threshold=32 << 10,
+        stabilize_interval=0.5,
+        drain=DrainConfig(enabled=drain_enabled, pressure_interval=0.1),
+        qos=QoSConfig(enabled=qos_enabled))
+
+
+def _pattern(offset: int, length: int) -> bytes:
+    """Deterministic bytes from the offset alone, so background rewrites of
+    a region are idempotent and the final readback has one right answer
+    regardless of which in-flight rewrite won. Vectorized: the generators
+    must be able to saturate the servers, not the interpreter."""
+    return ((np.arange(offset, offset + length, dtype=np.int64) >> 6)
+            & 0xFF).astype(np.uint8).tobytes()
+
+
+def _stuff_background(fs, names, total: int, chunk: int):
+    """Queue ``total`` bytes of background-lane batched writes per stream
+    WITHOUT waiting, then flush every coalesce buffer onto the wire. The
+    payloads are pre-generated so the submit loop outruns the servers —
+    the backlog the checkpoint burst faces is structural, not a race
+    against thread scheduling: with FIFO servers its chunks wait behind
+    the queued flood; with QoS they jump it (and the client windows park
+    most of the flood before it ever reaches a server inbox). Returns the
+    open handles."""
+    offsets = list(range(0, total, chunk))
+    payloads = [_pattern(off, chunk) for off in offsets]
+    handles = [fs.open(name, "w", policy="batched", chunk_bytes=chunk,
+                       lane="background") for name in names]
+    for f in handles:
+        for off, data in zip(offsets, payloads):
+            f.pwrite(data, off)
+    for c in fs.clients:
+        c.flush_coalesced()
+    return handles
+
+
+def _through_writer(f, total: int, chunk: int, stop: threading.Event,
+                    out: dict):
+    """Steady sequential stream on the write-through bypass."""
+    off = 0
+    while off < total and not stop.is_set():
+        f.pwrite(_pattern(off, chunk), off)
+        off += chunk
+        if (off // chunk) % 4 == 0:
+            time.sleep(0.002)   # steady, not bursty
+    out["bytes"] = off
+
+
+def _ckpt_burst(fs, fname: str, total: int, chunk: int) -> List[float]:
+    """The measured workload: a checkpoint-lane burst; returns per-chunk
+    completion latencies (pwrite call -> replicated-ACK callback). The
+    payloads are pre-generated so the burst hits while the background
+    backlog is still deep."""
+    offsets = list(range(0, total, chunk))
+    payloads = [_pattern(off, chunk) for off in offsets]
+    lat: List[float] = []
+    lock = threading.Lock()
+    f = fs.open(fname, "w", policy="async", chunk_bytes=chunk,
+                lane="checkpoint")
+    for off, data in zip(offsets, payloads):
+        t0 = time.perf_counter()
+        fut = f.pwrite(data, off)
+
+        def _done(_fut, t0=t0):
+            dt = time.perf_counter() - t0
+            with lock:
+                lat.append(dt)
+        fut.add_done_callback(_done)
+    f.close(120.0)
+    return lat
+
+
+def _phase(qos_enabled: bool, *, n_servers: int, n_clients: int,
+           dram_mb: int, ckpt_mb: int, bg_mb: int,
+           through_mb: int) -> dict:
+    """One contention run: a pre-queued background flood + a steady
+    write-through stream + the measured checkpoint burst. The drainer is
+    off here — the flood churns the log-structured store, and
+    drain/compaction stalls would add identical noise spikes to both
+    phases' p99, drowning the queueing signal this phase isolates (the
+    bypass phase runs with the drainer on)."""
+    cfg = _config(qos_enabled, n_servers, n_clients, dram_mb,
+                  drain_enabled=False)
+    chunk = cfg.chunk_bytes
+    out = {"qos_enabled": qos_enabled}
+    with BurstBufferSystem(cfg) as sys_:
+        fs = sys_.fs()
+        stop = threading.Event()
+        thr_out: dict = {}
+
+        thr_f = fs.open("seq_through", "w", policy="through")
+        thr_t = threading.Thread(
+            target=_through_writer, daemon=True, name="through-writer",
+            args=(thr_f, through_mb << 20, chunk, stop, thr_out))
+        thr_t.start()
+
+        bg_files = ["bg_stream_0", "bg_stream_1"]
+        gc.collect()
+        gc.disable()    # a gen-2 pause mid-burst would land random
+        try:            # 10-100 ms spikes on either phase's p99
+            bg_fs = _stuff_background(fs, bg_files, bg_mb << 20, chunk)
+
+            t0 = time.perf_counter()
+            lat = _ckpt_burst(fs, "ckpt_burst", ckpt_mb << 20, chunk)
+            burst_s = time.perf_counter() - t0
+
+            for f in bg_fs:     # drain the flood (barrier raises on loss)
+                f.close(180.0)
+            bg_s = time.perf_counter() - t0
+        finally:
+            gc.enable()
+        stop.set()
+        thr_t.join(60.0)
+        thr_f.close(120.0)
+
+        out["ckpt_p50_ms"] = float(np.percentile(lat, 50)) * 1e3
+        out["ckpt_p99_ms"] = float(np.percentile(lat, 99)) * 1e3
+        out["ckpt_burst_mbps"] = (ckpt_mb << 20) / burst_s / 1e6
+        out["bg_mbps"] = 2 * (bg_mb << 20) / bg_s / 1e6
+
+        # byte-exact readback of every stream
+        got = fs.open("ckpt_burst", "r").pread(0, ckpt_mb << 20)
+        out["ckpt_exact"] = got == b"".join(
+            _pattern(o, chunk) for o in range(0, ckpt_mb << 20, chunk))
+        out["bg_exact"] = True
+        for name in bg_files:
+            bg_st = fs.stat(name)
+            got = fs.open(name, "r").pread(0, bg_st["size"])
+            out["bg_exact"] &= got == b"".join(
+                _pattern(o, chunk) for o in range(0, bg_st["size"], chunk))
+        n = thr_out.get("bytes", 0)
+        got = fs.open("seq_through", "r").pread(0, n)
+        out["through_mb"] = n / 1e6
+        out["through_exact"] = got == b"".join(
+            _pattern(o, chunk) for o in range(0, n, chunk))
+        st = fs.stat("seq_through")
+        out["through_buffered_bytes"] = (st["residency"]["dram"]
+                                         + st["residency"]["ssd"])
+        out["fs_bypass"] = dict(fs.bypass_stats)
+        stats = sys_.server_stats()
+        out["puts_by_lane"] = [s.get("puts_by_lane")
+                               for s in stats.values()]
+        out["final_occupancy"] = max(
+            (s.get("occupancy", 0.0) for s in stats.values()), default=0.0)
+        out["server_errors"] = len(sys_.manager.errors)
+    return out
+
+
+def _bypass_phase(n_servers: int, n_clients: int, dram_mb: int,
+                  through_mb: int) -> dict:
+    """The ISSUE acceptance criterion in isolation: a sequential stream on
+    the write-through bypass, sized so that BUFFERING it would blow far
+    past the drain low-watermark, must never raise BB occupancy above it
+    (the bytes go straight to the PFS) while reading back byte-exact."""
+    cfg = _config(True, n_servers, n_clients, dram_mb)
+    chunk = cfg.chunk_bytes
+    cap = n_servers * (cfg.dram_capacity + cfg.ssd_capacity)
+    # size the stream so that BUFFERING it would land well past the low
+    # watermark — otherwise "occupancy stayed low" proves nothing
+    total = max(through_mb << 20,
+                int(1.5 * cfg.drain.low_watermark * cap / cfg.replication))
+    total -= total % chunk
+    out = {"through_mb": total / 1e6,
+           "buffered_would_be_frac": total * cfg.replication / cap,
+           "low_watermark": cfg.drain.low_watermark}
+    with BurstBufferSystem(cfg) as sys_:
+        fs = sys_.fs()
+        occ: List[float] = []
+        f = fs.open("seq_through", "w", policy="through")
+        for off in range(0, total, chunk):
+            f.pwrite(_pattern(off, chunk), off)
+            if (off // chunk) % 32 == 0:
+                pr = sys_.pressure()
+                occ.extend(s.get("fraction", 0.0)
+                           for s in pr["servers"].values())
+        f.close(60.0)
+        got = fs.open("seq_through", "r").pread(0, total)
+        out["exact"] = got == b"".join(
+            _pattern(o, chunk) for o in range(0, total, chunk))
+        st = fs.stat("seq_through")
+        out["buffered_bytes"] = (st["residency"]["dram"]
+                                 + st["residency"]["ssd"])
+        out["pfs_bytes"] = st["pfs_size"]
+        pr = sys_.pressure()
+        occ.extend(s.get("fraction", 0.0) for s in pr["servers"].values())
+        out["max_occupancy"] = max(occ, default=0.0)
+        out["server_errors"] = len(sys_.manager.errors)
+    return out
+
+
+def run(n_servers: int = 4, n_clients: int = 4, dram_mb: int = 16,
+        ckpt_mb: int = 16, bg_mb: int = 64, through_mb: int = 32,
+        min_speedup: float = 2.0) -> dict:
+    kw = dict(n_servers=n_servers, n_clients=n_clients, dram_mb=dram_mb,
+              ckpt_mb=ckpt_mb, bg_mb=bg_mb, through_mb=through_mb)
+    fifo = _phase(False, **kw)
+    qos = _phase(True, **kw)
+    bypass = _bypass_phase(n_servers, n_clients, dram_mb, through_mb)
+    speedup = fifo["ckpt_p99_ms"] / max(qos["ckpt_p99_ms"], 1e-9)
+    res = {"fifo": fifo, "qos": qos, "bypass": bypass,
+           "p99_speedup": speedup, "min_speedup": min_speedup,
+           "ok": (speedup >= min_speedup
+                  and all(p[k] for p in (fifo, qos)
+                          for k in ("ckpt_exact", "bg_exact",
+                                    "through_exact"))
+                  and qos["through_buffered_bytes"] == 0
+                  and bypass["exact"]
+                  and bypass["buffered_bytes"] == 0
+                  and bypass["max_occupancy"] < bypass["low_watermark"]
+                  and fifo["server_errors"] == 0
+                  and qos["server_errors"] == 0
+                  and bypass["server_errors"] == 0)}
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="capped CI run (2 servers)")
+    ap.add_argument("--min-speedup", type=float, default=2.0,
+                    help="fail unless checkpoint-lane p99 under contention "
+                         "beats the FIFO baseline by this factor")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results to PATH")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        res = run(n_servers=2, n_clients=2, dram_mb=16, ckpt_mb=4,
+                  bg_mb=64, through_mb=16, min_speedup=args.min_speedup)
+    else:
+        res = run(min_speedup=args.min_speedup)
+    for phase in ("fifo", "qos", "bypass"):
+        print(f"--- {phase} ---")
+        for k, v in res[phase].items():
+            if isinstance(v, float):
+                print(f"{k:>24}: {v:.3f}")
+            else:
+                print(f"{k:>24}: {v}")
+    print(f"{'p99_speedup':>24}: {res['p99_speedup']:.2f}x "
+          f"(floor {res['min_speedup']:.1f}x)")
+    jsonout.dump(args.json, "bench_qos", res)
+    if not res["ok"]:
+        print("bench_qos: FAILED (see fields above)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -171,6 +171,7 @@ def main():
 
 
 if __name__ == "__main__":
+    from benchmarks import jsonout
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="capped CI run of the cold-restart scenario")
@@ -178,6 +179,8 @@ if __name__ == "__main__":
                     help="fail if stage-in + fan-out restart is not at "
                          "least this much faster than the serial per-miss "
                          "fallback baseline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results to PATH")
     args = ap.parse_args()
     if args.smoke:
         res = run_cold(total_mb=8, seg_kb=32, n_servers=2,
@@ -185,12 +188,16 @@ if __name__ == "__main__":
         for k, v in res.items():
             print(f"{k:>16}: {v:.2f}" if isinstance(v, float)
                   else f"{k:>16}: {v}")
+        jsonout.dump(args.json, "bench_restart", res)
         if not res["ok"]:
             print("bench_restart: FAILED (see fields above)",
                   file=sys.stderr)
             raise SystemExit(1)
         print(f"bench_smoke_restart,0.0,{res['speedup']:.1f}x OK")
     else:
+        rows = main()
         print("name,us_per_call,derived")
-        for name, us, derived in main():
+        for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
+        jsonout.dump(args.json, "bench_restart",
+                     jsonout.rows_to_records(rows))

@@ -1,0 +1,48 @@
+"""Machine-readable benchmark output (ISSUE 5 satellite).
+
+Every bench CLI accepts ``--json <path>`` and funnels its results through
+``dump`` so the perf trajectory can be tracked as ``BENCH_*.json`` files
+across PRs — MB/s, p50/p99 latencies, occupancy, whatever the bench
+measures — instead of scraping the human-readable CSV."""
+from __future__ import annotations
+
+import datetime
+import json
+import sys
+from typing import Optional, Sequence, Tuple
+
+
+def rows_to_records(rows: Sequence[Tuple[str, float, str]]):
+    """The harness row format (name, us_per_call, derived) as dicts."""
+    return [{"name": n, "us_per_call": us, "derived": d}
+            for n, us, d in rows]
+
+
+def cli_main(main_fn, bench: str) -> None:
+    """Shared __main__ body for row-producing benches: parse ``--json``,
+    print the CSV table, and dump the rows."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results to PATH")
+    args = ap.parse_args()
+    rows = main_fn()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    dump(args.json, bench, rows_to_records(rows))
+
+
+def dump(path: Optional[str], bench: str, payload) -> None:
+    """Write one bench's results as JSON; a None path is a no-op so every
+    caller can pass its ``--json`` argument through unconditionally."""
+    if not path:
+        return
+    doc = {"bench": bench,
+           "generated": datetime.datetime.now(
+               datetime.timezone.utc).isoformat(timespec="seconds"),
+           "results": payload}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+    print(f"[{bench}] json results -> {path}", file=sys.stderr)

@@ -3,6 +3,7 @@
 
   python -m benchmarks.run            # all benches
   python -m benchmarks.run --only fig5,fig6
+  python -m benchmarks.run --json out.json   # machine-readable results too
 
 Benches (paper artifact -> module):
   Fig 5 ingress scaling        -> bench_ingress  (sim: calibrated Titan model;
@@ -11,6 +12,7 @@ Benches (paper artifact -> module):
   SIII-B two-phase I/O         -> bench_twophase (real system flush)
   SIII-C restart               -> bench_restart  (real BB vs PFS reads)
   checkpoint stall (framework) -> bench_ckpt     (train-state save paths)
+  QoS lanes + bypass           -> bench_qos      (priority under contention)
   roofline summary             -> roofline_report (dry-run artifacts)
 """
 from __future__ import annotations
@@ -19,15 +21,19 @@ import argparse
 import sys
 import traceback
 
+from benchmarks import jsonout
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every bench's rows as JSON to PATH")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_ckpt, bench_hybrid,
-                            bench_ingress, bench_restart, bench_twophase,
-                            roofline_report)
+                            bench_ingress, bench_qos, bench_restart,
+                            bench_twophase, roofline_report)
     benches = {
         "fig5": bench_ingress.main,
         "fig6": bench_hybrid.main,
@@ -35,23 +41,44 @@ def main() -> None:
         "restart": bench_restart.main,
         "ckpt": bench_ckpt.main,
         "ablation": bench_ablation.main,
+        "qos": lambda: _qos_rows(bench_qos),
         "roofline": roofline_report.main,
     }
     only = [s for s in args.only.split(",") if s]
     print("name,us_per_call,derived")
     failed = 0
+    doc = {}
     for key, fn in benches.items():
         if only and key not in only:
             continue
         try:
-            for name, us, derived in fn():
+            rows = fn()
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}")
+            doc[key] = jsonout.rows_to_records(rows)
         except Exception as e:
             failed += 1
+            doc[key] = {"error": repr(e)}
             print(f"{key},nan,ERROR {e!r}")
             traceback.print_exc(file=sys.stderr)
+    jsonout.dump(args.json, "run", doc)
     if failed:
         raise SystemExit(1)
+
+
+def _qos_rows(bench_qos):
+    """bench_qos reports dicts; fold the headline numbers into rows."""
+    res = bench_qos.run()
+    return [
+        ("qos_ckpt_p99_fifo", res["fifo"]["ckpt_p99_ms"] * 1e3,
+         f"{res['fifo']['ckpt_p99_ms']:.0f} ms p99 under contention"),
+        ("qos_ckpt_p99_lanes", res["qos"]["ckpt_p99_ms"] * 1e3,
+         f"{res['qos']['ckpt_p99_ms']:.0f} ms p99 "
+         f"({res['p99_speedup']:.1f}x better, ok={res['ok']})"),
+        ("qos_bypass_occupancy", 0.0,
+         f"max {res['bypass']['max_occupancy']:.2f} vs low-watermark "
+         f"{res['bypass']['low_watermark']:.2f}"),
+    ]
 
 
 if __name__ == '__main__':

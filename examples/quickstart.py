@@ -52,9 +52,27 @@ def main():
                                          f"{v.get('flush_s', 0)*1e3:.0f}ms flush"
                                       for k, v in sorted(mgr.metrics.items())})
 
+        # control-plane view (ISSUE 5): where the latest checkpoint's bytes
+        # physically sit, and the cluster pressure the QoS engine acts on
+        fs = bb.fs()
+        last = max(mgr.metrics)
+        st = fs.stat(f"ckpt_{last:08d}")
+        print(f"ckpt_{last:08d} residency:",
+              {t: f"{n/1e6:.1f} MB" for t, n in st["residency"].items()},
+              f"({st['evicted_chunks']} chunks evicted to PFS)")
+        pr = bb.pressure()
+        q = pr["qos"]
+        print("cluster pressure:",
+              f"occupancy max {q['max_occupancy']:.2f} / "
+              f"mean {q['mean_occupancy']:.2f},",
+              f"ingest {q['aggregate_ingest_bps']/1e6:.0f} MB/s,",
+              f"{q['draining']} draining;",
+              f"drain epochs {pr['drain']['epochs']}"
+              f" ({pr['drain']['drained_bytes']/1e6:.1f} MB drained),",
+              f"stage epochs {pr['stage']['epochs']}")
+
         # the same file-session API, used directly: write a run manifest
         # next to the checkpoints and read it back through the buffer
-        fs = bb.fs()
         with fs.open("run_info.txt", "w", policy="batched") as f:
             f.write(f"arch={cfg.name} steps=20 ckpts="
                     f"{sorted(mgr.metrics)}\n".encode())

@@ -14,7 +14,14 @@
 #                                # evicted to the PFS) that fails if the
 #                                # stage-in + parallel fan-out restart is
 #                                # not >= 3x the serial per-miss fallback
-#                                # baseline or any read-back byte differs
+#                                # baseline or any read-back byte differs,
+#                                # then a QoS contention run that fails if
+#                                # checkpoint-lane p99 under a background
+#                                # flood does not beat the FIFO baseline by
+#                                # >= 2x, if the write-through bypass
+#                                # raises occupancy above the drain
+#                                # low-watermark, or if any stream reads
+#                                # back inexact
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
@@ -23,7 +30,9 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     shift
     timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_ingress --smoke "$@"
     timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_drain --smoke
-    exec timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_restart --smoke
+    timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_restart --smoke
+    exec timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_qos --smoke \
+        --min-speedup=2
 fi
 
 exec timeout "${CI_TIMEOUT:-1800}" python -m pytest -q -m "not slow" "$@"

@@ -76,11 +76,16 @@ class BBCheckpointManager:
         fname = f"ckpt_{step:08d}"
         offset_of = {m["name"]: m["offset"] for m in manifest["leaves"]}
 
+        # checkpoint-lane writes (ISSUE 5): the highest QoS priority — a
+        # concurrent background stream can no longer queue ahead of the
+        # burst on either the client dispatch queue or the server put path
         fs = self.system.fs()
-        f = fs.open(fname, "w", policy=mode, chunk_bytes=self.chunk_bytes)
+        f = fs.open(fname, "w", policy=mode, chunk_bytes=self.chunk_bytes,
+                    lane="checkpoint")
         for name, data in payloads.items():
             f.pwrite(data, offset_of[name])
-        mf = fs.open(f"{fname}.manifest", "w", policy=mode)
+        mf = fs.open(f"{fname}.manifest", "w", policy=mode,
+                     lane="checkpoint")
         mf.write(ser.manifest_bytes(manifest))
         # barrier: both handles' write pipelines must drain before the
         # checkpoint counts as ingested (paper Fig 4 thread-2); the manifest

@@ -10,5 +10,8 @@ from repro.core.filesystem import (BBError, BBFile,        # noqa: F401
                                    BBFileSystem, BBFuture, BBWriteError)
 from repro.core.server import BBServer                     # noqa: F401
 from repro.core.manager import BBManager                   # noqa: F401
+from repro.core.qos import (BandwidthArbiter,              # noqa: F401
+                            CongestionWindows, LaneQueue, QoSConfig,
+                            TrafficClassifier)
 from repro.core.staging import ReadAhead, StageConfig      # noqa: F401
 from repro.core.transport import Transport                 # noqa: F401

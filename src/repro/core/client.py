@@ -37,9 +37,10 @@ import threading
 import time
 from typing import Dict, List, Optional
 
-from repro.core import staging
+from repro.core import qos, staging
 from repro.core.filesystem import BBFuture, BBWriteError, WriteOp
 from repro.core.hashing import IsoPlacement, KetamaRing, RendezvousHash
+from repro.core.qos import QoSConfig
 from repro.core.transport import Message, Transport
 
 
@@ -81,9 +82,11 @@ class BBClient:
                  replication: int = 2,
                  put_timeout: float = 3.0,
                  read_timeout: float = 1.0,
+                 control_timeout: float = 1.0,
                  read_fanout: int = 4,
                  batch_bytes: int = 1 << 20,
-                 coalesce_threshold: int = 64 << 10):
+                 coalesce_threshold: int = 64 << 10,
+                 qos_cfg: Optional[QoSConfig] = None):
         self.tname = name
         self.transport = transport
         self.ep = transport.register(name)
@@ -95,9 +98,24 @@ class BBClient:
         # direct gets, stats); range reads get twice the budget since the
         # server may have to touch the PFS to fill gaps
         self.read_timeout = read_timeout
+        # ... and one for every control-plane RPC (manager hellos, failure
+        # confirmation probes) — mirrors the read_timeout cleanup of ISSUE 4
+        self.control_timeout = control_timeout
         self.read_fanout = read_fanout
         self.batch_bytes = batch_bytes
         self.coalesce_threshold = coalesce_threshold
+        # QoS (ISSUE 5): lane-ordered dispatch gated by per-lane congestion
+        # windows; ACK-piggybacked occupancy feeds the windows
+        self.qos_cfg = qos_cfg or QoSConfig()
+        if self.qos_cfg.enabled:
+            self._laneq: Optional[qos.LaneQueue] = qos.LaneQueue(
+                self.qos_cfg.lane_weights, self.qos_cfg.quantum_bytes)
+            self._cwnd: Optional[qos.CongestionWindows] = \
+                qos.CongestionWindows(self.qos_cfg)
+        else:
+            self._laneq = None
+            self._cwnd = None
+        self._lane_inflight = [0] * len(qos.LANES)
         self.ring: List[str] = []
         self.dead: set = set()
         self._placement = None
@@ -128,7 +146,7 @@ class BBClient:
         deadline = time.monotonic() + timeout
         while time.monotonic() < deadline:
             r = self.transport.request(self.ep, "manager", "client_hello", {},
-                                       timeout=1.0)
+                                       timeout=self.control_timeout)
             if r is not None and r.kind == "ring":
                 self._set_ring(r.payload["ring"],
                                set(r.payload.get("dead", [])))
@@ -150,6 +168,9 @@ class BBClient:
             self._pending.clear()
             self._coalesce.clear()
             self._coalesce_nbytes.clear()
+            if self._laneq is not None:
+                self._laneq.discard(lambda ent: True)
+            self._lane_inflight = [0] * len(qos.LANES)
         for op in pending:
             op.future._set_exception(BBWriteError(op.key, "client closed"))
 
@@ -210,15 +231,21 @@ class BBClient:
 
     # ------------------------------------------------------- write pipeline
     def submit(self, key: str, value: bytes, *, file: Optional[str] = None,
-               offset: int = 0, coalesce: Optional[bool] = None) -> BBFuture:
+               offset: int = 0, coalesce: Optional[bool] = None,
+               lane: int = qos.LANE_INTERACTIVE) -> BBFuture:
         """THE write path. Returns a BBFuture that completes with True on a
         replicated ACK or with a BBWriteError once retries are exhausted.
         ``coalesce`` None applies the size threshold; True/False force the
-        coalesced/pipelined route."""
+        coalesced/pipelined route. ``lane`` is the QoS priority lane: with
+        QoS enabled, ops go on the wire in weighted lane order and only
+        while their lane's congestion window has room — a background flood
+        parks client-side instead of stuffing the server's inbox ahead of
+        a checkpoint burst."""
         self.stats["puts"] += 1
         self.stats["put_bytes"] += len(value)
+        lane = qos.lane_index(lane)
         fut = BBFuture(key)
-        op = WriteOp(key, value, file, offset, fut)
+        op = WriteOp(key, value, file, offset, fut, lane=lane)
         if coalesce is None:
             coalesce = len(value) < self.coalesce_threshold
         self._ensure_pump()
@@ -230,20 +257,24 @@ class BBClient:
         with self._op_lock:
             self._inflight.add(op)
             if coalesce:
-                self._coalesce.setdefault(target, []).append(op)
-                nb = self._coalesce_nbytes.get(target, 0) + len(value)
-                self._coalesce_nbytes[target] = nb
+                ckey = (target, lane)
+                self._coalesce.setdefault(ckey, []).append(op)
+                nb = self._coalesce_nbytes.get(ckey, 0) + len(value)
+                self._coalesce_nbytes[ckey] = nb
                 if nb >= self.batch_bytes:
-                    self._flush_target_locked(target)
-            else:
+                    self._flush_target_locked(ckey)
+            elif self._laneq is None:
                 self._issue_locked([op], target, batch=False)
+            else:
+                self._laneq.push(lane, [[op], target, False], len(value))
+                self._dispatch_locked()
         return fut
 
     def flush_coalesced(self):
         """Ship every pending coalesce buffer (one put_batch per server)."""
         with self._op_lock:
-            for target in list(self._coalesce):
-                self._flush_target_locked(target)
+            for ckey in list(self._coalesce):
+                self._flush_target_locked(ckey)
 
     def outstanding(self) -> int:
         """Write ops submitted but not yet completed — includes ops still
@@ -318,7 +349,8 @@ class BBClient:
             self.stats["batched_puts"] += len(ops)
             payload = {"items": [{"key": o.key, "value": o.value,
                                   "file": o.file, "offset": o.offset}
-                                 for o in ops]}
+                                 for o in ops],
+                       "lane": ops[0].lane}
             msg_id = self.transport.request_async(
                 self.ep, target, "put_batch", payload, sink=self._acks)
         else:
@@ -326,21 +358,57 @@ class BBClient:
             msg_id = self.transport.request_async(
                 self.ep, target, "put",
                 {"key": op.key, "value": op.value, "file": op.file,
-                 "offset": op.offset,
+                 "offset": op.offset, "lane": op.lane,
                  # after 2 redirects force acceptance (server spills to SSD)
                  # to avoid ping-pong on stale free-memory gossip
                  "redirectable": op.redirects < 2},
                 sink=self._acks)
         for op in ops:
             op.msg_id = msg_id
+            if not op.counted:      # window accounting (re-issues stay held)
+                op.counted = True
+                self._lane_inflight[op.lane] += len(op.value)
         self._pending[msg_id] = _Inflight(
             ops, target, time.monotonic() + self.put_timeout, batch)
 
-    def _flush_target_locked(self, target: str):
-        ops = self._coalesce.pop(target, [])
-        self._coalesce_nbytes.pop(target, None)
-        if ops:
+    def _flush_target_locked(self, ckey: tuple):
+        ops = self._coalesce.pop(ckey, [])
+        self._coalesce_nbytes.pop(ckey, None)
+        if not ops:
+            return
+        target, lane = ckey
+        if self._laneq is None:
             self._issue_locked(ops, target, batch=True)
+        else:
+            self._laneq.push(lane, [ops, target, True],
+                             sum(len(o.value) for o in ops))
+            self._dispatch_locked()
+
+    def _can_issue(self, lane: int, nbytes: int) -> bool:
+        """Congestion gate for one lane-queue head. An idle lane may always
+        issue one entry (progress even when a single op exceeds the
+        window); otherwise the lane's in-flight bytes must fit."""
+        infl = self._lane_inflight[lane]
+        return infl == 0 or infl + nbytes <= self._cwnd.window(lane)
+
+    def _dispatch_locked(self):
+        """Move queued entries onto the wire in weighted lane order, as far
+        as the congestion windows allow. Caller holds _op_lock. Runs on
+        every submit, every ACK (window space freed), and the pump's
+        deadline scan — queued ops can never strand."""
+        while True:
+            ent = self._laneq.pop(self._can_issue)
+            if ent is None:
+                return
+            ops, target, batch = ent
+            if ops:                 # abandon may have emptied the entry
+                self._issue_locked(ops, target, batch)
+
+    def _uncount_locked(self, op: WriteOp):
+        """Release the op's congestion-window hold. Caller holds _op_lock."""
+        if op.counted:
+            op.counted = False
+            self._lane_inflight[op.lane] -= len(op.value)
 
     def _fail_op(self, op: WriteOp, exc: Exception):
         # record BEFORE completing the future: a blocking put() woken by the
@@ -348,6 +416,7 @@ class BBClient:
         # be there or it would leak into the next drain cycle
         with self._op_lock:
             self._inflight.discard(op)
+            self._uncount_locked(op)
             self._failed.append(op.key)
         if not op.future._set_exception(exc):
             self._consume_failed(op.key)    # op had already succeeded
@@ -355,20 +424,29 @@ class BBClient:
     def _complete_op(self, op: WriteOp):
         with self._op_lock:
             self._inflight.discard(op)
+            self._uncount_locked(op)
         op.future._set_result(True)
 
     def _abandon(self, op: WriteOp, reason: str):
-        """Cancel an op wherever it currently is (coalesce buffer or wire)
-        and fail its future. Late ACKs for it are ignored (first-win)."""
+        """Cancel an op wherever it currently is (coalesce buffer, lane
+        queue, or wire) and fail its future. Late ACKs for it are ignored
+        (first-win)."""
         with self._op_lock:
-            for target, ops in list(self._coalesce.items()):
+            for ckey, ops in list(self._coalesce.items()):
                 if op in ops:
                     ops.remove(op)
-                    self._coalesce_nbytes[target] = \
-                        self._coalesce_nbytes.get(target, 0) - len(op.value)
+                    self._coalesce_nbytes[ckey] = \
+                        self._coalesce_nbytes.get(ckey, 0) - len(op.value)
                     if not ops:
-                        del self._coalesce[target]
-                        self._coalesce_nbytes.pop(target, None)
+                        del self._coalesce[ckey]
+                        self._coalesce_nbytes.pop(ckey, None)
+            if self._laneq is not None:
+                # pull the op out of any queued entry; an emptied entry is
+                # dropped whole (dispatch also skips empties defensively)
+                for ent in self._laneq.entries():
+                    if op in ent[0]:
+                        ent[0].remove(op)
+                self._laneq.discard(lambda ent: not ent[0])
             if op.msg_id is not None:
                 ent = self._pending.get(op.msg_id)
                 if ent is not None and op in ent.ops:
@@ -384,10 +462,19 @@ class BBClient:
         if ent is None:
             return                          # late reply for a re-issued op
         self._last_reply[ent.target] = time.monotonic()
+        # backpressure (ISSUE 5): every server reply piggybacks its store
+        # occupancy; the congestion windows shrink background lanes first
+        occ = msg.payload.get("occupancy") if msg.payload else None
+        if occ is not None and self._cwnd is not None:
+            self._cwnd.on_pressure(occ)
         if msg.kind in ("put_ack", "put_batch_ack"):
             # one lock round for the whole entry (batches carry many ops)
             with self._op_lock:
                 self._inflight.difference_update(ent.ops)
+                for op in ent.ops:
+                    self._uncount_locked(op)
+                if self._laneq is not None:
+                    self._dispatch_locked()   # window space just freed
             for op in ent.ops:
                 op.future._set_result(True)
             return
@@ -412,6 +499,8 @@ class BBClient:
         # i.e. the timeout judges per-server liveness, not per-message queue
         # position. A dead server acks nothing, so real failures still fire.
         with self._op_lock:
+            if self._laneq is not None:
+                self._dispatch_locked()   # insurance: windows may have grown
             expired = [mid for mid, e in self._pending.items()
                        if e.deadline < now
                        and self._last_reply.get(e.target, -1e9)
@@ -475,7 +564,8 @@ class BBClient:
             pred = alive[(i - 1) % len(alive)]
         if pred and pred != target:
             self.transport.request(self.ep, pred, "confirm_failure",
-                                   {"suspect": target}, timeout=1.0)
+                                   {"suspect": target},
+                                   timeout=self.control_timeout)
         with self._lock:
             self.dead.add(target)
             self._rebuild_placement()
@@ -518,6 +608,36 @@ class BBClient:
                 self._failed.remove(key)
             except ValueError:
                 pass
+
+    def cancel_parked(self, file: str):
+        """Truncate support: complete-and-drop every op of ``file`` still
+        parked client-side (lane queue or coalesce buffer). A parked op
+        dispatched AFTER the truncate RPC would re-land stale bytes of the
+        dead incarnation; completing it as success gives the caller the
+        FIFO-equivalent outcome — applied, then truncated."""
+        done: List[WriteOp] = []
+        with self._op_lock:
+            if self._laneq is not None:
+                for ent in self._laneq.entries():
+                    for op in [o for o in ent[0] if o.file == file]:
+                        ent[0].remove(op)
+                        self._inflight.discard(op)
+                        self._uncount_locked(op)
+                        done.append(op)
+                self._laneq.discard(lambda ent: not ent[0])
+            for ckey, ops in list(self._coalesce.items()):
+                stale = [o for o in ops if o.file == file]
+                for op in stale:
+                    ops.remove(op)
+                    self._coalesce_nbytes[ckey] = \
+                        self._coalesce_nbytes.get(ckey, 0) - len(op.value)
+                    self._inflight.discard(op)
+                    done.append(op)
+                if not ops:
+                    del self._coalesce[ckey]
+                    self._coalesce_nbytes.pop(ckey, None)
+        for op in done:
+            op.future._set_result(True)
 
     def abandon_by_future(self, fut) -> bool:
         """Cancel the in-flight op behind ``fut`` and consume its failure

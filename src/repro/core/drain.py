@@ -22,10 +22,11 @@ server.py / manager.py.
 """
 from __future__ import annotations
 
-import collections
 import time
 from dataclasses import dataclass
 from typing import Optional
+
+from repro.core.qos import RateWindow
 
 
 @dataclass
@@ -45,18 +46,25 @@ class DrainConfig:
 
 
 class DrainEngine:
-    """Per-server drain policy state machine (pure; injected clock)."""
+    """Per-server drain policy state machine (pure; injected clock).
 
-    def __init__(self, cfg: DrainConfig, now: Optional[float] = None):
+    ``bucket`` (ISSUE 5) replaces the engine's private token bucket with a
+    shared one — the server passes its QoS ``BandwidthArbiter`` so drain
+    micro-epochs and stage-in slices debit ONE background-bandwidth budget
+    instead of each claiming their own against a foreground burst. The
+    watermark/burst policy is unchanged either way."""
+
+    def __init__(self, cfg: DrainConfig, now: Optional[float] = None,
+                 bucket=None):
         self.cfg = cfg
         now = time.monotonic() if now is None else now
         self.draining = False           # watermark hysteresis state
-        self._ingest: collections.deque = collections.deque()  # (t, nbytes)
-        self._ingest_bytes = 0
+        self._ingest = RateWindow(cfg.burst_window_s)
         # start with a full bucket: the first burst past the watermark must
         # be allowed to drain immediately, not wait out a refill period
         self._tokens = float(cfg.bw_bytes_per_s)
         self._token_t = now
+        self._bucket = bucket
         self._last_request = -1e9
         self.stats = {"requests": 0, "deferred_hot": 0,
                       "granted_bytes": 0, "refunded_bytes": 0}
@@ -64,21 +72,12 @@ class DrainEngine:
     # ---------------------------------------------------- burst detection
     def note_ingest(self, nbytes: int, now: Optional[float] = None):
         now = time.monotonic() if now is None else now
-        self._ingest.append((now, nbytes))
-        self._ingest_bytes += nbytes
-        self._trim(now)
-
-    def _trim(self, now: float):
-        horizon = now - self.cfg.burst_window_s
-        dq = self._ingest
-        while dq and dq[0][0] < horizon:
-            self._ingest_bytes -= dq.popleft()[1]
+        self._ingest.note(nbytes, now)
 
     def ingest_rate(self, now: Optional[float] = None) -> float:
         """Bytes/s of ingest over the sliding window."""
         now = time.monotonic() if now is None else now
-        self._trim(now)
-        return self._ingest_bytes / max(self.cfg.burst_window_s, 1e-9)
+        return self._ingest.rate(now)
 
     def hot(self, now: Optional[float] = None) -> bool:
         return self.ingest_rate(now) >= self.cfg.hot_bytes_per_s
@@ -123,11 +122,19 @@ class DrainEngine:
 
     def peek(self, now: Optional[float] = None) -> int:
         """Currently available drain-bandwidth budget in bytes."""
+        if self._bucket is not None:
+            return self._bucket.peek(now)
         now = time.monotonic() if now is None else now
         self._refill(now)
         return max(0, int(self._tokens))
 
     def take(self, nbytes: int, now: Optional[float] = None) -> int:
+        if self._bucket is not None:
+            self.stats["granted_bytes"] += int(nbytes)
+            return self._bucket.take(nbytes, now)
+        return self._take_local(nbytes, now)
+
+    def _take_local(self, nbytes: int, now: Optional[float] = None) -> int:
         """Debit ``nbytes`` of budget in full. The bucket may go NEGATIVE —
         a single cold segment can exceed what is left, and progress demands
         at least one segment per epoch — and peek() then reports 0 until
@@ -146,6 +153,9 @@ class DrainEngine:
     def refund(self, nbytes: int):
         """Return budget consumed by an aborted micro-epoch (the bytes were
         never actually drained, so they must not count against the cap)."""
+        self.stats["refunded_bytes"] += nbytes
+        if self._bucket is not None:
+            self._bucket.refund(nbytes)
+            return
         self._tokens = min(float(self.cfg.bw_bytes_per_s),
                            self._tokens + nbytes)
-        self.stats["refunded_bytes"] += nbytes

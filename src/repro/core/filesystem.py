@@ -18,10 +18,17 @@ single internal ``WriteOp`` pipeline (client.py). Each write returns a
 ``sync()``/``close()`` barrier — there is no shared last-failed list to
 race on.
 
-Write policies (how chunks travel, not where they land):
+Write policies:
   "sync"     one replicated round-trip per chunk (blocking)
   "async"    pipelined through the ACK ledger, one barrier at sync()
   "batched"  async + small chunks coalesced into put_batch messages
+  "through"  QoS write-through bypass (ISSUE 5): bytes go straight to the
+             durable PFS copy, never occupying the buffer; servers get
+             metadata-only residency reports so reads stay transparent.
+             Streams the per-handle traffic classifier tags SEQUENTIAL
+             take this route automatically (unless policy is "sync").
+Handles also carry a QoS ``lane`` (checkpoint > interactive > background)
+that orders their chunks against other traffic end to end.
 
 Reads assemble a byte range from three sources, freshest first: buffered
 chunks via the servers' per-file manifests, post-flush lookup-table range
@@ -42,10 +49,11 @@ import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from repro.core import staging
+from repro.core import qos, staging
+from repro.core.qos import QoSConfig
 from repro.core.staging import StageConfig
 
-POLICIES = ("sync", "async", "batched")
+POLICIES = ("sync", "async", "batched", "through")
 
 
 class BBError(RuntimeError):
@@ -177,15 +185,20 @@ class BBFuture:
 class WriteOp:
     """One chunk travelling the client write pipeline. Every put — blocking,
     pipelined, or coalesced — is a WriteOp; the policy knobs only change how
-    it is shipped and awaited."""
+    it is shipped and awaited. ``lane`` is the QoS priority lane (ISSUE 5):
+    it orders the op against other traffic on the client dispatch queue and
+    the server put path, and counts it against that lane's congestion
+    window while on the wire."""
     key: str
     value: bytes
     file: Optional[str]
     offset: int
     future: BBFuture
+    lane: int = qos.LANE_INTERACTIVE
     redirects: int = 0
     attempts: int = 0
     msg_id: Optional[int] = None     # current in-flight message, if any
+    counted: bool = False            # held against the lane window right now
 
 
 class BBFile:
@@ -201,16 +214,29 @@ class BBFile:
 
     def __init__(self, fs: "BBFileSystem", path: str, mode: str, *,
                  policy: str = "async", chunk_bytes: Optional[int] = None,
-                 prefetch: Optional[bool] = None):
+                 prefetch: Optional[bool] = None, lane=None):
         if mode not in ("r", "w", "a"):
             raise ValueError(f"mode must be r/w/a, got {mode!r}")
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}")
+        if policy == "through" and not fs.pfs_dir:
+            raise ValueError("policy='through' needs a PFS directory")
         self.fs = fs
         self.path = path
         self.mode = mode
         self.policy = policy
         self.chunk_bytes = chunk_bytes or fs.chunk_bytes
+        # QoS (ISSUE 5): the stream's priority lane, and a per-stream
+        # traffic classifier — SEQUENTIAL (steady, in-order, sub-burst-rate)
+        # streams are routed around the buffer entirely (write-through to
+        # the PFS) so BB capacity stays free for the bursts that need it
+        self.lane = qos.lane_index(lane if lane is not None
+                                   else fs.lane_default)
+        self._clf = qos.TrafficClassifier(fs.qos_cfg) \
+            if fs.qos_cfg.enabled and mode != "r" else None
+        self.bypassed_bytes = 0
+        self._thru_fh = None           # cached PFS handle (bypass writes)
+        self._thru_run: Optional[List[int]] = None   # unreported [lo, hi)
         # read-ahead (ISSUE 4): sequential-access detection on positional
         # reads issues asynchronous stage-ins of the next window
         if prefetch is None:
@@ -269,8 +295,26 @@ class BBFile:
         """Positional write: stripe ``data`` into chunks and submit each to
         the next client's write pipeline. Under policy "sync" each chunk
         blocks on its replicated ACK (raising on failure); otherwise the
-        returned future completes when every chunk of this call does."""
+        returned future completes when every chunk of this call does.
+
+        QoS routing (ISSUE 5): a handle opened with ``policy="through"``,
+        or one whose traffic classifier has tagged the stream SEQUENTIAL
+        (steady, in-order, below the burst rate), writes straight to the
+        PFS — the bytes never occupy the buffer, and residency metadata
+        registered with the servers keeps reads transparent."""
         self._check_open(writing=True)
+        if self._clf is not None:
+            self._clf.observe(offset, len(data))
+        if self.policy == "through" or (
+                self._clf is not None and self.fs.qos_cfg.auto_bypass
+                and self.fs.pfs_dir and self.policy != "sync"
+                and self.lane != qos.LANE_CHECKPOINT   # bursts stay buffered
+                and self._clf.classify() == qos.SEQUENTIAL):
+            return self._pwrite_through(data, offset)
+        # a pending bypass run must be reported BEFORE a buffered write
+        # ships: servers evict chunks a run covers, so a report chasing a
+        # fresher buffered rewrite of the same range would evict new bytes
+        self._flush_bypass_report()
         clients = self.fs.clients
         # "batched" forces coalescing (a chunk at/above batch_bytes still
         # ships immediately as its own batch); other policies pipeline
@@ -283,7 +327,7 @@ class BBFile:
             self._rr += 1
             key = f"{self.path}:{offset + off}"
             fut = c.submit(key, piece, file=self.path, offset=offset + off,
-                           coalesce=coalesce)
+                           coalesce=coalesce, lane=self.lane)
             if self.policy == "sync":
                 try:
                     fut.result(c.sync_put_timeout())
@@ -300,11 +344,61 @@ class BBFile:
         self._chunks = None    # read-after-write must see the new chunks
         return futs[0] if len(futs) == 1 else BBFuture.gather(futs)
 
+    # report a bypass run to the servers once it grows this large (or on
+    # sync/close, or when the stream seeks) — metadata stays timely without
+    # a per-write broadcast
+    BYPASS_REPORT_BYTES = 8 << 20
+
+    def _pwrite_through(self, data: bytes, offset: int) -> BBFuture:
+        """Write-through bypass (ISSUE 5): the bytes go straight to the
+        durable PFS copy — zero BB occupancy, no replication traffic, no
+        later drain work — and the write is durable when this returns, so
+        the future is already complete. The servers get a metadata-only
+        ``bypass_report`` per contiguous run: every one max-merges the
+        file's lookup-table size (range reads cover the extent) and the
+        run's placement owner records an eviction tombstone, making a
+        bypassed run indistinguishable from a drained-and-evicted chunk on
+        the read path. The PFS handle is cached on the BBFile (one open
+        per stream, not per write) and flushed per write so concurrent
+        readers of the durable copy always see the bytes."""
+        fs = self.fs
+        if self._thru_fh is None:
+            with fs._pfs_lock:
+                p = os.path.join(fs.pfs_dir, self.path)
+                self._thru_fh = open(p, "r+b" if os.path.exists(p)
+                                     else "w+b")
+        self._thru_fh.seek(offset)
+        self._thru_fh.write(data)
+        self._thru_fh.flush()
+        fs.bypass_stats["writes"] += 1
+        fs.bypass_stats["bytes"] += len(data)
+        hi = offset + len(data)
+        if self._thru_run is not None and offset == self._thru_run[1]:
+            self._thru_run[1] = hi
+        else:
+            self._flush_bypass_report()
+            self._thru_run = [offset, hi]
+        if self._thru_run[1] - self._thru_run[0] >= self.BYPASS_REPORT_BYTES:
+            self._flush_bypass_report()
+        self.bypassed_bytes += len(data)
+        self._size = max(self._size, hi)
+        self._chunks = None
+        fut = BBFuture(f"{self.path}:{offset}")
+        fut._set_result(True)
+        return fut
+
+    def _flush_bypass_report(self):
+        run, self._thru_run = self._thru_run, None
+        if run is not None:
+            self.fs._report_bypass(self.path, run[0], run[1] - run[0],
+                                   self.chunk_bytes)
+
     def sync(self, timeout: float = 60.0) -> "BBFile":
         """Barrier (paper Fig 4 thread-2 drain, per handle): flush every
         client's coalesce buffer, wait for all of this handle's outstanding
         futures, and raise BBWriteError listing the failed chunk keys if any
         write did not achieve a replicated ACK."""
+        self._flush_bypass_report()     # bypassed runs: metadata barrier
         for c in self.fs.clients:
             c.flush_coalesced()
         deadline = time.monotonic() + timeout
@@ -352,6 +446,9 @@ class BBFile:
                 self.sync(timeout)
         finally:
             self._closed = True
+            if self._thru_fh is not None:
+                self._thru_fh.close()
+                self._thru_fh = None
 
     # ------------------------------------------------------------------- reads
     def read(self, n: int = -1) -> bytes:
@@ -471,7 +568,8 @@ class BBFileSystem:
     def __init__(self, clients, *, chunk_bytes: int = 4 << 20,
                  pfs_dir: Optional[str] = None, manager: str = "manager",
                  read_fanout: int = 4, stage: Optional[StageConfig] = None,
-                 prefetch: bool = False):
+                 prefetch: bool = False, qos_cfg: Optional[QoSConfig] = None,
+                 lane_default="interactive", control_timeout: float = 1.0):
         if not clients:
             raise ValueError("BBFileSystem needs at least one client")
         self.clients = list(clients)
@@ -481,6 +579,13 @@ class BBFileSystem:
         self.read_fanout = max(1, read_fanout)
         self.stage_cfg = stage or StageConfig()
         self.prefetch_default = prefetch
+        self.qos_cfg = qos_cfg or QoSConfig()
+        self.lane_default = lane_default
+        # one knob for every manager/control RPC deadline, mirroring the
+        # ISSUE 4 read_timeout cleanup (was a scatter of hardcoded 1.0s)
+        self.control_timeout = control_timeout
+        self._pfs_lock = threading.Lock()   # bypass writers share PFS files
+        self.bypass_stats = {"writes": 0, "bytes": 0}
         self._rr = itertools.count()
 
     def next_client(self):
@@ -491,14 +596,42 @@ class BBFileSystem:
         return self.clients[next(self._rr) % len(self.clients)]
 
     # -------------------------------------------------------------- namespace
-    def _mgr_request(self, kind: str, payload: dict, timeout: float = 2.0):
+    def _mgr_request(self, kind: str, payload: dict,
+                     timeout: Optional[float] = None):
         c = self.next_client()
+        if timeout is None:
+            timeout = 2 * self.control_timeout
         return c.transport.request(c.ep, self.manager, kind, payload,
                                    timeout=timeout)
 
+    # ----------------------------------------------------- write-through path
+    def _report_bypass(self, path: str, offset: int, length: int,
+                       chunk_bytes: int):
+        """Metadata-only broadcast for a bypassed run: every server
+        max-merges the lookup-table size and evicts live chunks the run
+        covers; each chunk-granular slice's placement owner records an
+        eviction tombstone, so direct KV gets of ANY ``{path}:{offset}``
+        inside the run fall through to the PFS just as they would for an
+        identically-striped buffered-then-drained stream. Fire-and-forget
+        — even with zero reports delivered, reads stay byte-exact via the
+        PFS fallback."""
+        c = self.next_client()
+        chunks = []
+        for off in range(offset, offset + length, chunk_bytes):
+            ln = min(chunk_bytes, offset + length - off)
+            try:
+                owner = c.owner(f"{path}:{off}")
+            except RuntimeError:
+                owner = None
+            chunks.append([off, ln, owner])
+        payload = {"file": path, "offset": offset, "length": length,
+                   "size": offset + length, "chunks": chunks}
+        for s in c._alive_servers():
+            c.transport.send(c.tname, s, "bypass_report", payload)
+
     def open(self, path: str, mode: str = "r", *, policy: str = "async",
              chunk_bytes: Optional[int] = None,
-             prefetch: Optional[bool] = None) -> BBFile:
+             prefetch: Optional[bool] = None, lane=None) -> BBFile:
         if mode in ("w", "a"):
             r = self._mgr_request("fs_open", {"path": path, "mode": mode})
             if mode == "w":
@@ -516,7 +649,7 @@ class BBFileSystem:
                     # back stale tail bytes of a longer previous incarnation
                     self.truncate(path)
         return BBFile(self, path, mode, policy=policy,
-                      chunk_bytes=chunk_bytes, prefetch=prefetch)
+                      chunk_bytes=chunk_bytes, prefetch=prefetch, lane=lane)
 
     def stage(self, path: str, offset: int = 0,
               length: Optional[int] = None, *, wait: bool = True,
@@ -540,7 +673,8 @@ class BBFileSystem:
         payload = {"path": path, "lo": offset, "hi": hi}
         deadline = time.monotonic() + timeout
         c = self.next_client()
-        req_timeout = 1.0 if wait else 0.25
+        req_timeout = self.control_timeout if wait \
+            else self.control_timeout / 4
         epoch = None
         while epoch is None:
             r = c.transport.request(c.ep, self.manager, "stage_request",
@@ -555,7 +689,8 @@ class BBFileSystem:
             return True
         while time.monotonic() < deadline:
             r = c.transport.request(c.ep, self.manager, "stage_status",
-                                    {"epoch": epoch}, timeout=1.0)
+                                    {"epoch": epoch},
+                                    timeout=self.control_timeout)
             if r is not None:
                 state = r.payload["state"]
                 if state == "done":
@@ -571,24 +706,30 @@ class BBFileSystem:
         manager's recorded size. Raises BBError if any server fails to
         acknowledge — an unacknowledged truncation could resurrect stale
         tail bytes of a longer previous incarnation later."""
+        # ops of the dead incarnation still parked client-side must never
+        # ship after the truncate (they would resurrect stale chunks)
+        for cl in self.clients:
+            cl.cancel_parked(path)
         c = self.clients[0]
+        to = self.control_timeout
         for s in c._alive_servers():
             r = c.transport.request(c.ep, s, "file_truncate", {"file": path},
-                                    timeout=1.0)
+                                    timeout=to)
             if r is None:       # one retry: deep inboxes happen under load
                 r = c.transport.request(c.ep, s, "file_truncate",
-                                        {"file": path}, timeout=1.0)
+                                        {"file": path}, timeout=to)
             if r is None:
                 raise BBError(f"truncate of {path!r} unacknowledged by {s}")
         if self.pfs_dir:
             p = os.path.join(self.pfs_dir, path)
             if os.path.exists(p):
                 os.remove(p)
-        self._mgr_request("fs_truncate", {"path": path}, timeout=1.0)
+        self._mgr_request("fs_truncate", {"path": path},
+                          timeout=self.control_timeout)
 
     def _register_sync(self, path: str, size: int):
         self._mgr_request("fs_sync", {"path": path, "size": size},
-                          timeout=1.0)
+                          timeout=self.control_timeout)
 
     def listdir(self, prefix: str = "") -> List[str]:
         r = self._mgr_request("fs_list", {"prefix": prefix})
@@ -622,7 +763,8 @@ class BBFileSystem:
             p = os.path.join(self.pfs_dir, path)
             if os.path.exists(p):
                 pfs = os.path.getsize(p)
-        r = self._mgr_request("fs_stat", {"path": path}, timeout=1.0)
+        r = self._mgr_request("fs_stat", {"path": path},
+                              timeout=self.control_timeout)
         ns_known = r is not None and r.payload["known"]
         ns_size = r.payload["size"] if ns_known else 0
         if not (buffered or flushed or pfs or st["known"] or ns_known):

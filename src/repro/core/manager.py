@@ -234,13 +234,29 @@ class BBManager(threading.Thread):
 
     def pressure_report(self) -> dict:
         """Cluster pressure view: per-server occupancy reports plus drain
-        and stage progress counters."""
+        and stage progress counters, and the QoS summary the congestion
+        windows act on (ISSUE 5)."""
         d, st = self._drain, self._stage
         return {"servers": dict(self.pressure),
                 "drain": dict(self.drain_stats),
                 "stage": dict(self.stage_stats),
+                "qos": self.qos_summary(),
                 "inflight_epoch": d["epoch"] if d is not None else None,
                 "inflight_stage": st["epoch"] if st is not None else None}
+
+    def qos_summary(self) -> dict:
+        """Cluster-level congestion view from the per-server pressure
+        reports: occupancy spread and aggregate foreground ingest rate —
+        what an operator (or the quickstart demo) reads to see whether the
+        control plane is throttling background lanes."""
+        occ = [p.get("fraction", 0.0) for p in self.pressure.values()]
+        rates = [p.get("ingest_bps", 0.0) for p in self.pressure.values()]
+        return {"servers_reporting": len(occ),
+                "max_occupancy": max(occ, default=0.0),
+                "mean_occupancy": sum(occ) / len(occ) if occ else 0.0,
+                "aggregate_ingest_bps": sum(rates),
+                "draining": sum(1 for p in self.pressure.values()
+                                if p.get("draining"))}
 
     # stage-in coordination (ISSUE 4) --------------------------------------
     def _on_stage_request(self, msg: Message):

@@ -33,8 +33,9 @@ import threading
 import time
 from typing import Dict, List, Optional
 
-from repro.core import staging, twophase
+from repro.core import qos, staging, twophase
 from repro.core.drain import DrainConfig, DrainEngine
+from repro.core.qos import QoSConfig
 from repro.core.staging import StageConfig
 from repro.core.tiering import LogStore
 from repro.core.transport import Message, Transport
@@ -55,7 +56,8 @@ class BBServer(threading.Thread):
                  replication: int = 2,
                  stabilize_interval: float = 0.25,
                  drain: Optional[DrainConfig] = None,
-                 stage: Optional[StageConfig] = None):
+                 stage: Optional[StageConfig] = None,
+                 qos_cfg: Optional[QoSConfig] = None):
         super().__init__(daemon=True, name=name)
         self.tname = name
         self.transport = transport
@@ -68,7 +70,19 @@ class BBServer(threading.Thread):
         self.replication = replication
         self.stabilize_interval = stabilize_interval
         self.drain_cfg = drain or DrainConfig()
-        self.drainer = DrainEngine(self.drain_cfg) \
+        # QoS (ISSUE 5): lane-priority dequeue of buffered puts, plus ONE
+        # background-bandwidth arbiter shared by the drain + stage engines
+        self.qos_cfg = qos_cfg or QoSConfig()
+        if self.qos_cfg.enabled:
+            self.arbiter: Optional[qos.BandwidthArbiter] = \
+                qos.BandwidthArbiter(self.qos_cfg,
+                                     self.drain_cfg.bw_bytes_per_s)
+            self._laneq: Optional[qos.LaneQueue] = qos.LaneQueue(
+                self.qos_cfg.lane_weights, self.qos_cfg.quantum_bytes)
+        else:
+            self.arbiter = None
+            self._laneq = None
+        self.drainer = DrainEngine(self.drain_cfg, bucket=self.arbiter) \
             if self.drain_cfg.enabled else None
         self.stage_cfg = stage or StageConfig()
 
@@ -112,7 +126,9 @@ class BBServer(threading.Thread):
                       "flushes": 0, "stabilize_repairs": 0,
                       "drain_epochs": 0, "drained_bytes": 0, "evictions": 0,
                       "stage_epochs": 0, "staged_bytes": 0,
-                      "clean_evictions": 0, "clean_evicted_bytes": 0}
+                      "clean_evictions": 0, "clean_evicted_bytes": 0,
+                      "bypass_chunks": 0, "bypass_bytes": 0,
+                      "puts_by_lane": [0] * len(qos.LANES)}
         # async stabilization state
         self._inflight_pings: Dict[int, tuple] = {}   # nonce -> (peer, deadline)
         self._ping_misses: Dict[str, int] = {}
@@ -154,14 +170,28 @@ class BBServer(threading.Thread):
     # ---------------------------------------------------------------- thread
     def run(self):
         while not self._stop.is_set():
-            msg = self.ep.recv(timeout=0.02)
+            # With QoS enabled, the inbox is drained in bursts: control
+            # messages dispatch immediately (reads and pings stay responsive
+            # under a put flood), while put/put_batch messages park in the
+            # lane queue and are applied below in weighted priority order —
+            # a checkpoint burst no longer waits behind every background put
+            # that happened to arrive first.
+            busy = self._laneq is not None and len(self._laneq) > 0
+            msg = self.ep.recv(timeout=0.0 if busy else 0.02)
+            burst = self.qos_cfg.server_recv_burst
+            while msg is not None:
+                self._safe_dispatch(msg)
+                burst -= 1
+                if burst <= 0:
+                    break
+                msg = self.ep.recv(timeout=0)
+            if self._laneq is not None:
+                for _ in range(self.qos_cfg.server_ops_per_tick):
+                    ent = self._laneq.pop()
+                    if ent is None:
+                        break
+                    self._safe_dispatch(ent, queued=True)
             now = time.monotonic()
-            if msg is not None:
-                try:
-                    self._dispatch(msg)
-                except Exception as e:   # pragma: no cover - defensive
-                    self.transport.send(self.tname, self.manager, "server_error",
-                                        {"server": self.tname, "error": repr(e)})
             if now - self._last_stab > self.stabilize_interval and self.ring:
                 self._last_stab = now
                 self._stabilize(now)
@@ -169,6 +199,40 @@ class BBServer(threading.Thread):
             self._check_confirm_deadlines(now)
             self._drain_tick(now)
             self._stage_tick(now)
+
+    def _safe_dispatch(self, msg: Message, queued: bool = False):
+        try:
+            if not queued and self._qos_enqueue(msg):
+                return
+            self._dispatch(msg)
+        except Exception as e:   # pragma: no cover - defensive
+            self.transport.send(self.tname, self.manager, "server_error",
+                                {"server": self.tname, "error": repr(e)})
+
+    _LANED_KINDS = ("put", "put_batch", "replica_put", "replica_put_batch")
+
+    def _qos_enqueue(self, msg: Message) -> bool:
+        """Park puts — client-facing AND replica-chain — in the lane queue
+        (everything else: reads, ACKs, control, dispatches immediately).
+        Replica traffic carries the originating put's lane: a checkpoint
+        chunk's ACK depends on its replica hop, so an unprioritized
+        replica path would hand the background flood the priority back.
+        FIFO order is preserved within a lane, so same-key rewrites from
+        one stream stay ordered; cross-lane writes to one key were never
+        ordered."""
+        if self._laneq is None or msg.kind not in self._LANED_KINDS:
+            return False
+        p = msg.payload
+        lane = p.get("lane")
+        lane = qos.LANE_INTERACTIVE if lane is None else qos.lane_index(lane)
+        if "items" in p:
+            nbytes = sum(len(it["value"]) for it in p["items"])
+        else:
+            nbytes = len(p["value"])
+        self._laneq.push(lane, msg, nbytes)
+        if msg.kind in ("put", "put_batch"):
+            self.stats["puts_by_lane"][lane] += 1
+        return True
 
     def stop(self):
         self._stop.set()
@@ -206,7 +270,10 @@ class BBServer(threading.Thread):
     # put path -------------------------------------------------------------
     def _record_segment(self, key: str, file: Optional[str], offset: int,
                         length: int):
-        """Track a buffered chunk in both flush-segment and per-file views."""
+        """Track a buffered chunk in both flush-segment and per-file views.
+        A live buffered chunk shadows any tombstone at its key (a rewrite
+        of drained/bypassed bytes is fresher than the PFS copy), so the
+        tombstone record is dropped here."""
         if file is None:
             return
         old = self._segments.get(key)
@@ -214,6 +281,13 @@ class BBServer(threading.Thread):
             fmap = self._files.get(old.file)
             if fmap is not None and fmap.get(old.offset, (None, 0))[0] == key:
                 del fmap[old.offset]
+        if key in self._evicted:
+            self._evicted.pop(key, None)
+            emap = self._evicted_files.get(file)
+            if emap is not None and emap.get(offset, (None, 0))[0] == key:
+                del emap[offset]
+                if not emap:
+                    del self._evicted_files[file]
         self._segments[key] = twophase.Segment(file, offset, length)
         self._files.setdefault(file, {})[offset] = (key, length)
 
@@ -227,12 +301,27 @@ class BBServer(threading.Thread):
             if not fmap:
                 del self._files[seg.file]
 
+    def _occupancy_frac(self) -> float:
+        return self.store.occupancy()["fraction"]
+
+    def _note_foreground(self, nbytes: int):
+        """Feed the burst detector AND the background-bandwidth arbiter:
+        foreground ingest is the signal that throttles drain/stage."""
+        if self.drainer is not None:
+            self.drainer.note_ingest(nbytes)
+        if self.arbiter is not None:
+            self.arbiter.note_foreground(nbytes)
+
     def _on_put(self, msg: Message):
         p = msg.payload
         key, value = p["key"], p["value"]
         self.stats["puts"] += 1
-        if self.drainer is not None:
-            self.drainer.note_ingest(len(value))
+        if p.get("_stale"):        # truncated while parked: ack, don't store
+            self.transport.reply(self.tname, msg, "put_ack",
+                                 {"key": key,
+                                  "occupancy": self._occupancy_frac()})
+            return
+        self._note_foreground(len(value))
 
         # load-balanced buffering: redirect if DRAM exhausted (paper §III-A)
         if p.get("redirectable", True) \
@@ -241,7 +330,8 @@ class BBServer(threading.Thread):
             if target is not None:
                 self.stats["redirects"] += 1
                 self.transport.reply(self.tname, msg, "redirect",
-                                     {"key": key, "target": target})
+                                     {"key": key, "target": target,
+                                      "occupancy": self._occupancy_frac()})
                 return
 
         tier = self.store.put(key, value)
@@ -260,10 +350,12 @@ class BBServer(threading.Thread):
             self.transport.send(self.tname, nxt, "replica_put", {
                 "key": key, "value": value, "chain": rest,
                 "primary": self.tname, "primary_msg": msg.msg_id,
-                "client": msg.src,
+                "client": msg.src, "lane": p.get("lane"),
                 "file": p.get("file"), "offset": p.get("offset", 0)})
         else:
-            self.transport.reply(self.tname, msg, "put_ack", {"key": key})
+            self.transport.reply(self.tname, msg, "put_ack",
+                                 {"key": key,
+                                  "occupancy": self._occupancy_frac()})
 
     def _on_put_batch(self, msg: Message):
         """Coalesced put (client write coalescing): store every segment in
@@ -273,9 +365,11 @@ class BBServer(threading.Thread):
         items = msg.payload["items"]
         self.stats["puts"] += len(items)
         self.stats["batch_puts"] += 1
-        if self.drainer is not None:
-            self.drainer.note_ingest(sum(len(it["value"]) for it in items))
+        self._note_foreground(sum(len(it["value"]) for it in items
+                                  if not it.get("_stale")))
         for it in items:
+            if it.get("_stale"):   # truncated while parked: ack, don't store
+                continue           # (the flag travels the replica chain too)
             tier = self.store.put(it["key"], it["value"])
             if tier == "ssd":
                 self.stats["spills"] += 1
@@ -288,18 +382,20 @@ class BBServer(threading.Thread):
                 [msg.src, len(chain), msg]
             self.transport.send(self.tname, nxt, "replica_put_batch", {
                 "items": items, "chain": rest, "primary": self.tname,
-                "primary_msg": msg.msg_id, "client": msg.src})
+                "primary_msg": msg.msg_id, "client": msg.src,
+                "lane": msg.payload.get("lane")})
         else:
             self.transport.reply(self.tname, msg, "put_batch_ack",
-                                 {"count": len(items)})
+                                 {"count": len(items),
+                                  "occupancy": self._occupancy_frac()})
 
     def _on_replica_put(self, msg: Message):
         p = msg.payload
-        if self.drainer is not None:
-            self.drainer.note_ingest(len(p["value"]))
-        self.store.put(p["key"], p["value"])
-        self._record_segment(p["key"], p.get("file"), p.get("offset", 0),
-                             len(p["value"]))
+        if not p.get("_stale"):    # truncated while parked: protocol only
+            self._note_foreground(len(p["value"]))
+            self.store.put(p["key"], p["value"])
+            self._record_segment(p["key"], p.get("file"),
+                                 p.get("offset", 0), len(p["value"]))
         if p["chain"]:
             nxt, rest = p["chain"][0], p["chain"][1:]
             self.transport.send(self.tname, nxt, "replica_put",
@@ -312,10 +408,11 @@ class BBServer(threading.Thread):
 
     def _on_replica_put_batch(self, msg: Message):
         p = msg.payload
-        if self.drainer is not None:
-            self.drainer.note_ingest(sum(len(it["value"])
-                                         for it in p["items"]))
+        self._note_foreground(sum(len(it["value"]) for it in p["items"]
+                                  if not it.get("_stale")))
         for it in p["items"]:
+            if it.get("_stale"):
+                continue
             self.store.put(it["key"], it["value"])
             self._record_segment(it["key"], it.get("file"),
                                  it.get("offset", 0), len(it["value"]))
@@ -339,12 +436,15 @@ class BBServer(threading.Thread):
         if entry[1] <= 0:
             client, _, orig = self._pending_primary.pop(
                 (msg.payload.get("client"), pm))
+            occ = self._occupancy_frac()
             if orig.kind == "put_batch":
                 self.transport.reply(self.tname, orig, "put_batch_ack",
-                                     {"count": len(orig.payload["items"])})
+                                     {"count": len(orig.payload["items"]),
+                                      "occupancy": occ})
             else:
                 self.transport.reply(self.tname, orig, "put_ack",
-                                     {"key": msg.payload["key"]})
+                                     {"key": msg.payload["key"],
+                                      "occupancy": occ})
 
     def _least_loaded_neighbor(self, need: int) -> Optional[str]:
         """Pick the neighbour with the most free DRAM (paper §III-A). Free-
@@ -457,8 +557,21 @@ class BBServer(threading.Thread):
         """Open-for-write truncation: drop every buffered chunk of the file
         (primary and replica copies alike — the message is broadcast), its
         shuffle data, and its lookup-table entry, so a rewrite can never
-        read back stale tail bytes from a longer previous incarnation."""
+        read back stale tail bytes from a longer previous incarnation.
+
+        Puts of this file still PARKED in the lane queue are marked stale:
+        pre-QoS the FIFO inbox guaranteed they applied before the truncate
+        that followed them, but lane parking would apply them after it and
+        resurrect the dead incarnation. A stale put is ACKed without being
+        stored — byte-for-byte the FIFO outcome (applied, then truncated a
+        moment later)."""
         f = msg.payload["file"]
+        if self._laneq is not None:
+            for queued in self._laneq.entries():
+                p = queued.payload
+                for it in p.get("items", (p,)):
+                    if it.get("file") == f:
+                        it["_stale"] = True
         for off, (key, _ln) in self._files.pop(f, {}).items():
             self.store.delete(key)
             self._segments.pop(key, None)
@@ -469,6 +582,45 @@ class BBServer(threading.Thread):
         self._domain_data.pop(f, None)
         self.transport.reply(self.tname, msg, "file_truncate_ack",
                              {"file": f})
+
+    def _on_bypass_report(self, msg: Message):
+        """A client wrote bytes of ``file`` straight to the PFS (QoS
+        write-through bypass, ISSUE 5) — the bytes never touch the buffer,
+        only their residency metadata lands here. Every server max-merges
+        the file's lookup-table size so post-shuffle range reads cover the
+        bypassed extent, and EVICTS any live buffered chunk the run fully
+        covers: those chunks hold older bytes of the same range (the
+        handle flushes its pending run before any buffered write, so a
+        report can never chase a fresher put), and leaving them live would
+        shadow the newer PFS copy forever. The tombstones point reads at
+        the PFS like any drained chunk. A chunk only PARTIALLY covered by
+        the run is left alone — its uncovered bytes exist nowhere else,
+        and sub-chunk overlapping writes are documented-undefined.
+        Each chunk-granular slice of the run carries its own placement
+        owner, which records the slice as an eviction tombstone so direct
+        KV gets of ANY ``{file}:{offset}`` inside the run fall through."""
+        p = msg.payload
+        f, off, ln = p["file"], p["offset"], p["length"]
+        lo, hi = off, off + ln
+        self._merge_lookup({f: p.get("size", hi)})
+        for c_off, (key, c_ln) in list(self._files.get(f, {}).items()):
+            if lo <= c_off and c_off + c_ln <= hi:
+                # the PFS run covers this chunk end to end: the durable
+                # copy supersedes it (mid-drain-epoch safe — the shuffle
+                # skips evicted keys, drain_evict frees 0 on them)
+                self.store.evict(key)
+                self._evicted[key] = (f, c_off, c_ln)
+                self._evicted_files.setdefault(f, {})[c_off] = (key, c_ln)
+                self._drop_segment(key)
+        for s_off, s_ln, owner in p.get("chunks", ()):
+            if owner != self.tname:
+                continue
+            key = f"{f}:{s_off}"
+            if key not in self.store and key not in self._segments:
+                self._evicted[key] = (f, s_off, s_ln)
+                self._evicted_files.setdefault(f, {})[s_off] = (key, s_ln)
+            self.stats["bypass_chunks"] += 1
+            self.stats["bypass_bytes"] += s_ln
 
     # stabilization --------------------------------------------------------
     # Fully asynchronous (the server loop never blocks): pings are fired and
@@ -572,7 +724,7 @@ class BBServer(threading.Thread):
                 self.transport.send(self.tname, peer, "replica_put", {
                     "key": key, "value": self.store.get(key), "chain": [],
                     "primary": self.tname, "primary_msg": None,
-                    "client": None,
+                    "client": None, "lane": qos.LANE_DRAIN,
                     "file": seg.file if seg else None,
                     "offset": seg.offset if seg else 0})
 
@@ -1023,6 +1175,17 @@ class BBServer(threading.Thread):
                 continue
             f = st["file"]
             budget = self.stage_cfg.tick_bytes
+            if self.arbiter is not None:
+                # unified background budget (ISSUE 5): stage slices debit
+                # the same per-server bucket as drain micro-epochs, and the
+                # bucket refills slower while foreground ingest is hot — a
+                # stage can no longer compete with an active burst
+                budget = min(budget, self.arbiter.peek(now))
+                if budget <= 0:
+                    continue    # wait for a refill — the plan keeps its
+                    #             remaining slices for a later tick, and
+                    #             reads stay exact via the PFS fallback
+            consumed = 0
             while plan and budget > 0:
                 if not self._stage_admit(f):
                     plan.clear()    # buffer under real pressure: stop, the
@@ -1037,6 +1200,9 @@ class BBServer(threading.Thread):
                 if self._ingest_clean(f, off, data):
                     st["bytes"] += len(data)
                 budget -= ln
+                consumed += ln
+            if consumed and self.arbiter is not None:
+                self.arbiter.take(consumed, now)
             if not plan:
                 self._finish_stage(epoch, st)
 
@@ -1132,4 +1298,8 @@ class BBServer(threading.Thread):
         if self.drainer is not None:
             payload["drain"] = {**self.drainer.stats,
                                 "draining": self.drainer.draining}
+        if self.arbiter is not None:
+            payload["arbiter"] = dict(self.arbiter.stats)
+        if self._laneq is not None:
+            payload["queued_puts"] = len(self._laneq)
         self.transport.reply(self.tname, msg, "stats", payload)

@@ -18,6 +18,7 @@ from repro.core.client import BBClient
 from repro.core.drain import DrainConfig
 from repro.core.filesystem import BBFileSystem
 from repro.core.manager import BBManager
+from repro.core.qos import QoSConfig
 from repro.core.server import BBServer
 from repro.core.staging import StageConfig
 from repro.core.transport import Transport
@@ -42,11 +43,17 @@ class BBConfig:
     # read path (ISSUE 4): one knob for every read-side RPC deadline, and
     # the thread fan-out width for parallel manifest/range fetches
     read_timeout: float = 1.0
+    # control plane (ISSUE 5): one knob for every manager/control RPC
+    # deadline (hellos, fs namespace ops, stage requests, failure probes)
+    control_timeout: float = 1.0
     read_fanout: int = 4
     # autonomous drain engine (ISSUE 3): watermark-driven background flush
     drain: DrainConfig = field(default_factory=DrainConfig)
     # stage-in engine (ISSUE 4): PFS -> BB bulk re-ingest + read-ahead
     stage: StageConfig = field(default_factory=StageConfig)
+    # QoS engine (ISSUE 5): traffic classification, priority lanes,
+    # congestion windows, write-through bypass, unified background arbiter
+    qos: QoSConfig = field(default_factory=QoSConfig)
 
 
 class BurstBufferSystem:
@@ -73,14 +80,16 @@ class BurstBufferSystem:
                 pfs_dir=self.pfs_dir,
                 replication=cfg.replication,
                 stabilize_interval=cfg.stabilize_interval,
-                drain=cfg.drain, stage=cfg.stage)
+                drain=cfg.drain, stage=cfg.stage, qos_cfg=cfg.qos)
         self.clients: List[BBClient] = [
             BBClient(f"client/{i}", self.transport, client_index=i,
                      placement=cfg.placement, replication=cfg.replication,
                      read_timeout=cfg.read_timeout,
+                     control_timeout=cfg.control_timeout,
                      read_fanout=cfg.read_fanout,
                      batch_bytes=cfg.batch_bytes,
-                     coalesce_threshold=cfg.coalesce_threshold)
+                     coalesce_threshold=cfg.coalesce_threshold,
+                     qos_cfg=cfg.qos)
             for i in range(cfg.num_clients)]
         self._fs: Optional[BBFileSystem] = None
 
@@ -118,7 +127,9 @@ class BurstBufferSystem:
                                     chunk_bytes=self.cfg.chunk_bytes,
                                     pfs_dir=self.pfs_dir,
                                     read_fanout=self.cfg.read_fanout,
-                                    stage=self.cfg.stage)
+                                    stage=self.cfg.stage,
+                                    qos_cfg=self.cfg.qos,
+                                    control_timeout=self.cfg.control_timeout)
         return self._fs
 
     def flush(self, epoch: int, timeout: float = 30.0) -> bool:
@@ -150,7 +161,8 @@ class BurstBufferSystem:
                        pfs_dir=self.pfs_dir,
                        replication=self.cfg.replication,
                        stabilize_interval=self.cfg.stabilize_interval,
-                       drain=self.cfg.drain, stage=self.cfg.stage)
+                       drain=self.cfg.drain, stage=self.cfg.stage,
+                       qos_cfg=self.cfg.qos)
         self.servers[name] = srv
         srv.start()
         # the joining server knows the ring via the manager's ring_update;

@@ -1,0 +1,429 @@
+"""Traffic-aware QoS engine (ISSUE 5): classifier, priority lanes,
+congestion windows, the unified background-bandwidth arbiter, and the
+write-through bypass — including the satellite fault-injection case: a
+``policy="through"`` stream must read back byte-exact while concurrent
+bursty writers fill the buffer, and after a server kill."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (BandwidthArbiter, BBConfig, BurstBufferSystem,
+                        CongestionWindows, DrainConfig, DrainEngine,
+                        LaneQueue, QoSConfig)
+from repro.core import qos
+
+
+def _pattern(offset: int, length: int) -> bytes:
+    return bytes(((offset >> 4) + i) % 251 for i in range(length))
+
+
+# ------------------------------------------------------------- lane naming
+
+def test_lane_index_names_and_bounds():
+    assert qos.lane_index("checkpoint") == qos.LANE_CHECKPOINT
+    assert qos.lane_index("background") == qos.LANE_BACKGROUND
+    assert qos.lane_index(3) == qos.LANE_DRAIN
+    with pytest.raises(ValueError):
+        qos.lane_index("vip")
+    with pytest.raises(ValueError):
+        qos.lane_index(7)
+
+
+# ------------------------------------------------------- traffic classifier
+
+def _clf_cfg(**kw):
+    base = dict(window_s=1.0, bursty_bytes_per_s=1000, seq_min_run=3,
+                classify_min_bytes=500, idle_s=5.0)
+    base.update(kw)
+    return QoSConfig(**base)
+
+
+def test_classifier_bursty_until_proven_boring():
+    clf = qos.TrafficClassifier(_clf_cfg(), now=0.0)
+    assert clf.classify(now=0.0) == qos.IDLE       # nothing observed yet
+    clf.observe(0, 100, now=1.0)
+    # in-order but neither enough bytes nor a long enough run
+    assert clf.classify(now=1.0) == qos.BURSTY
+
+
+def test_classifier_rate_keeps_stream_bursty():
+    clf = qos.TrafficClassifier(_clf_cfg(), now=0.0)
+    for i in range(10):                            # 2000 B/s, in order
+        clf.observe(i * 200, 200, now=1.0 + i * 0.1)
+    assert clf.rate(now=2.0) >= 1000
+    assert clf.classify(now=2.0) == qos.BURSTY     # fast => buffer it
+
+
+def test_classifier_sequential_after_evidence_and_seek_resets():
+    clf = qos.TrafficClassifier(_clf_cfg(), now=0.0)
+    for i in range(4):                             # 200 B/s, in order
+        clf.observe(i * 200, 200, now=1.0 + i)
+    assert clf.classify(now=4.0) == qos.SEQUENTIAL
+    clf.observe(10_000, 200, now=5.0)              # seek breaks the run
+    assert clf.classify(now=5.0) == qos.BURSTY
+    clf.observe(10_200, 200, now=6.0)
+    clf.observe(10_400, 200, now=7.0)
+    assert clf.classify(now=7.0) == qos.SEQUENTIAL
+
+
+def test_classifier_idle_after_silence():
+    clf = qos.TrafficClassifier(_clf_cfg(idle_s=2.0), now=0.0)
+    clf.observe(0, 100, now=1.0)
+    assert clf.classify(now=1.5) == qos.BURSTY
+    assert clf.classify(now=4.0) == qos.IDLE
+
+
+# --------------------------------------------------------------- lane queue
+
+def test_lane_queue_priority_and_fifo_within_lane():
+    q = LaneQueue(weights=(8, 4, 2, 1), quantum=1024)
+    q.push(qos.LANE_BACKGROUND, "bg1", 100)
+    q.push(qos.LANE_BACKGROUND, "bg2", 100)
+    q.push(qos.LANE_CHECKPOINT, "ck1", 100)
+    assert q.pop() == "ck1"                        # priority first
+    assert q.pop() == "bg1"                        # FIFO within a lane
+    assert q.pop() == "bg2"
+    assert q.pop() is None
+    assert len(q) == 0
+
+
+def test_lane_queue_weighted_shares_under_backlog():
+    q = LaneQueue(weights=(8, 4, 2, 1), quantum=256)
+    for i in range(400):
+        for lane in range(4):
+            q.push(lane, (lane, i), 100)
+    counts = [0, 0, 0, 0]
+    for _ in range(800):
+        lane, _i = q.pop()
+        counts[lane] += 1
+    assert counts[0] > counts[1] > counts[2] > counts[3] > 0
+    assert counts[0] >= 3 * counts[3]
+
+
+def test_lane_queue_veto_skips_lane_and_big_item_cannot_wedge():
+    q = LaneQueue(weights=(8, 4, 2, 1), quantum=256)
+    q.push(qos.LANE_CHECKPOINT, "ck", 100)
+    q.push(qos.LANE_BACKGROUND, "big", 1 << 20)    # >> quantum * weight
+    assert q.pop(lambda lane, nb: lane != qos.LANE_CHECKPOINT) == "big"
+    assert q.pop() == "ck"
+    # a single huge entry on the lowest lane must pop on the first call
+    q.push(qos.LANE_DRAIN, "huge", 64 << 20)
+    assert q.pop() == "huge"
+
+
+def test_lane_queue_discard():
+    q = LaneQueue()
+    for i in range(6):
+        q.push(i % 2, f"item{i}", 10)
+    removed = q.discard(lambda it: it in ("item2", "item5"))
+    assert removed == 2
+    assert len(q) == 4
+    assert "item2" not in q.entries() and "item5" not in q.entries()
+
+
+# ------------------------------------------------------- congestion windows
+
+def test_congestion_windows_shrink_background_first():
+    cfg = QoSConfig(window_bytes=(64 << 20, 16 << 20, 4 << 20, 4 << 20),
+                    window_floor=1 << 10, low_occupancy=0.5,
+                    high_occupancy=0.9)
+    w = CongestionWindows(cfg)
+    w.on_pressure(0.0)
+    full = [w.window(lane) for lane in range(4)]
+    assert full == [64 << 20, 16 << 20, 4 << 20, 4 << 20]
+    for _ in range(50):                            # EWMA converges to 0.7
+        w.on_pressure(0.7)
+    mid = [w.window(lane) for lane in range(4)]
+    assert mid[0] == full[0]                       # checkpoint never shrinks
+    assert mid[1] < full[1]
+    # deeper lanes shrink by a strictly larger factor
+    assert mid[2] / full[2] < mid[1] / full[1]
+    assert mid[3] / full[3] < mid[2] / full[2]
+    for _ in range(50):
+        w.on_pressure(1.0)
+    sat = [w.window(lane) for lane in range(4)]
+    assert sat[0] == full[0]
+    assert sat[1] == sat[2] == sat[3] == cfg.window_floor
+
+
+# ------------------------------------------- unified background arbiter
+
+def test_arbiter_budget_overdraft_and_refund():
+    arb = BandwidthArbiter(QoSConfig(window_s=1.0, hot_bytes_per_s=1000,
+                                     arb_hot_frac=0.25), 1000, now=0.0)
+    assert arb.peek(now=0.0) == 1000               # starts full
+    arb.take(1500, now=0.0)                        # overdraft allowed
+    assert arb.peek(now=0.0) == 0
+    assert arb.peek(now=0.5) == 0                  # paying the debt back
+    assert arb.peek(now=1.0) == 500
+    arb.refund(10_000)
+    assert arb.peek(now=1.0) == 1000               # clamped at one bucket
+
+
+def test_arbiter_throttles_while_foreground_hot():
+    arb = BandwidthArbiter(QoSConfig(window_s=1.0, hot_bytes_per_s=1000,
+                                     arb_hot_frac=0.25), 1000, now=0.0)
+    arb.take(1000, now=0.0)
+    arb.note_foreground(5000, now=0.0)             # 5000 B/s >> hot
+    assert arb.foreground_hot(now=0.5)
+    assert arb.peek(now=1.0) == 250                # refill at 25% while hot
+    assert not arb.foreground_hot(now=2.0)         # window slid past burst
+    assert arb.peek(now=2.0) > 250                 # full-rate refill resumed
+
+
+def test_drain_engine_delegates_to_shared_bucket():
+    arb = BandwidthArbiter(QoSConfig(), 1000, now=0.0)
+    eng = DrainEngine(DrainConfig(bw_bytes_per_s=1 << 30), now=0.0,
+                      bucket=arb)
+    assert eng.peek(now=0.0) == 1000               # arbiter's, not its own
+    eng.take(600, now=0.0)
+    assert arb.peek(now=0.0) == 400                # debited the shared pool
+    assert eng.stats["granted_bytes"] == 600
+    eng.refund(600)
+    assert arb.peek(now=0.0) == 1000
+    assert eng.stats["refunded_bytes"] == 600
+
+
+# ------------------------------------------------------ integration: lanes
+
+def _sys_cfg(**kw):
+    base = dict(num_servers=2, num_clients=2, placement="iso",
+                dram_capacity=32 << 20, ssd_capacity=128 << 20,
+                chunk_bytes=64 << 10, coalesce_threshold=32 << 10,
+                stabilize_interval=0.5)
+    base.update(kw)
+    return BBConfig(**base)
+
+
+def test_checkpoint_lane_overtakes_background_flood():
+    """Pre-queue a background flood, then sync a checkpoint-lane file: the
+    checkpoint barrier must complete while background ops are still
+    outstanding — with FIFO ordering it would drain strictly behind the
+    whole flood."""
+    chunk = 64 << 10
+    with BurstBufferSystem(_sys_cfg(
+            drain=DrainConfig(enabled=False))) as sys_:
+        fs = sys_.fs()
+        bg = fs.open("bg", "w", policy="batched", chunk_bytes=chunk,
+                     lane="background")
+        data = _pattern(0, chunk)
+        for off in range(0, 64 << 20, chunk):
+            bg.pwrite(data, off)       # same bytes at every offset is fine
+        for c in fs.clients:
+            c.flush_coalesced()
+        ck = fs.open("ck", "w", policy="async", chunk_bytes=chunk,
+                     lane="checkpoint")
+        ckdata = _pattern(7, 1 << 20)
+        ck.pwrite(ckdata, 0)
+        ck.close(60.0)
+        still_queued = sum(c.outstanding() for c in fs.clients)
+        bg.close(120.0)
+        assert still_queued > 0, \
+            "checkpoint barrier should finish before the flood drains"
+        assert fs.open("ck", "r").pread(0, 1 << 20) == ckdata
+        got = fs.open("bg", "r").pread(0, 64 << 20)
+        assert all(got[o:o + chunk] == data
+                   for o in range(0, 64 << 20, chunk))
+        lanes = [s["puts_by_lane"]
+                 for s in sys_.server_stats().values()]
+        assert sum(l[qos.LANE_CHECKPOINT] for l in lanes) > 0
+        assert sum(l[qos.LANE_BACKGROUND] for l in lanes) > 0
+
+
+def test_ack_piggyback_feeds_client_windows():
+    with BurstBufferSystem(_sys_cfg()) as sys_:
+        fs = sys_.fs()
+        with fs.open("f", "w", policy="async") as f:
+            f.pwrite(_pattern(0, 4 << 20), 0)
+        assert any(c._cwnd is not None and c._cwnd.occupancy() > 0
+                   for c in sys_.clients)
+
+
+def test_qos_disabled_is_plain_fifo():
+    cfg = _sys_cfg(qos=QoSConfig(enabled=False))
+    with BurstBufferSystem(cfg) as sys_:
+        fs = sys_.fs()
+        assert all(c._laneq is None for c in sys_.clients)
+        assert all(s._laneq is None and s.arbiter is None
+                   for s in sys_.servers.values())
+        data = _pattern(3, 1 << 20)
+        with fs.open("f", "w", policy="batched", lane="checkpoint") as f:
+            f.pwrite(data, 0)
+        assert fs.open("f", "r").pread(0, len(data)) == data
+
+
+# --------------------------------------------------- write-through bypass
+
+def test_through_stream_under_bursty_writers_and_server_kill(tmp_path):
+    """Satellite: a policy="through" stream reads back byte-exact via
+    pread (manifest + PFS fallback) while concurrent BURSTY writers fill
+    the buffer — and still after a server kill, because its bytes live on
+    the PFS, not in any server's store."""
+    with BurstBufferSystem(_sys_cfg(num_servers=3, num_clients=3)) as sys_:
+        fs = sys_.fs()
+        total = 4 << 20
+        thr_data = _pattern(11, total)
+        stop = threading.Event()
+
+        def bursty(idx):
+            f = fs.open(f"burst_{idx}", "w", policy="batched",
+                        chunk_bytes=64 << 10)
+            data = _pattern(idx, 64 << 10)
+            off = 0
+            while not stop.is_set():
+                f.pwrite(data, off)
+                off += 64 << 10
+            f.close(60.0)
+
+        writers = [threading.Thread(target=bursty, args=(i,), daemon=True)
+                   for i in range(2)]
+        for t in writers:
+            t.start()
+        thr = fs.open("thr", "w", policy="through")
+        for off in range(0, total, 256 << 10):
+            thr.pwrite(thr_data[off:off + 256 << 10], off)
+        thr.close(30.0)
+        stop.set()
+        for t in writers:
+            t.join(60.0)
+
+        st = fs.stat("thr")
+        assert st["size"] == total
+        assert st["residency"]["dram"] == 0
+        assert st["residency"]["ssd"] == 0          # never touched the BB
+        assert fs.open("thr", "r").pread(0, total) == thr_data
+
+        sys_.kill_server("server/0")
+        time.sleep(0.3)
+        assert fs.open("thr", "r").pread(0, total) == thr_data
+
+
+def test_auto_bypass_routes_sequential_stream_to_pfs():
+    cfg = _sys_cfg(qos=QoSConfig(classify_min_bytes=256 << 10,
+                                 bursty_bytes_per_s=1 << 40,
+                                 seq_min_run=2))
+    total = 2 << 20
+    data = _pattern(5, total)
+    with BurstBufferSystem(cfg) as sys_:
+        fs = sys_.fs()
+        f = fs.open("seq", "w", policy="async", chunk_bytes=64 << 10)
+        for off in range(0, total, 64 << 10):
+            f.pwrite(data[off:off + (64 << 10)], off)
+        f.close(60.0)
+        assert f.bypassed_bytes > 0                 # classifier flipped it
+        assert fs.open("seq", "r").pread(0, total) == data
+        st = fs.stat("seq")
+        # the bypassed tail lives on the PFS only; early (pre-evidence)
+        # chunks may be buffered
+        assert st["residency"]["pfs"] > 0
+        assert st["residency"]["dram"] + st["residency"]["ssd"] < total
+
+
+def test_checkpoint_lane_never_auto_bypasses():
+    cfg = _sys_cfg(qos=QoSConfig(classify_min_bytes=64 << 10,
+                                 bursty_bytes_per_s=1 << 40,
+                                 seq_min_run=1))
+    total = 1 << 20
+    data = _pattern(9, total)
+    with BurstBufferSystem(cfg) as sys_:
+        fs = sys_.fs()
+        f = fs.open("ck", "w", policy="async", chunk_bytes=64 << 10,
+                    lane="checkpoint")
+        for off in range(0, total, 64 << 10):
+            f.pwrite(data[off:off + (64 << 10)], off)
+        f.close(60.0)
+        assert f.bypassed_bytes == 0                # bursts stay buffered
+        st = fs.stat("ck")
+        assert st["residency"]["dram"] + st["residency"]["ssd"] > 0
+
+
+def test_bypass_metadata_tombstones_and_kv_fallthrough():
+    with BurstBufferSystem(_sys_cfg()) as sys_:
+        fs = sys_.fs()
+        data = _pattern(2, 128 << 10)
+        with fs.open("thr2", "w", policy="through",
+                     chunk_bytes=64 << 10) as f:
+            f.pwrite(data, 0)
+        # bypass reports are fire-and-forget: poll for the tombstones
+        deadline = time.monotonic() + 3.0
+        while time.monotonic() < deadline:
+            if fs.stat("thr2")["evicted_chunks"] >= 2:
+                break
+            time.sleep(0.02)
+        st = fs.stat("thr2")
+        assert st["evicted_chunks"] >= 2       # chunk-granular, whole run
+        assert st["residency"]["pfs"] == len(data)
+        c = sys_.clients[0]
+        # lookup-table range read works cluster-wide (size was broadcast)
+        assert c.read_file("thr2", 0, len(data)) == data
+        # a direct KV get of ANY chunk key inside the run falls through
+        # like any evicted chunk: the miss carries residency, the bytes
+        # come back from the PFS
+        assert c.get("thr2:0") == data[:64 << 10]
+        assert c.get(f"thr2:{64 << 10}") == data[64 << 10:]
+
+
+def test_truncate_supersedes_parked_writes():
+    """Re-opening a file for write must defeat un-synced writes of the
+    previous incarnation even when they are still PARKED in lane queues
+    (client or server) — pre-QoS FIFO applied them strictly before the
+    truncate; with parking they would otherwise re-land afterwards and
+    resurrect stale bytes."""
+    with BurstBufferSystem(_sys_cfg()) as sys_:
+        fs = sys_.fs()
+        old = fs.open("tp", "w", policy="async", chunk_bytes=64 << 10,
+                      lane="background")
+        futs = [old.pwrite(_pattern(1, 64 << 10), off)
+                for off in range(0, 4 << 20, 64 << 10)]
+        new_data = _pattern(9, 100)
+        with fs.open("tp", "w", policy="async") as g:   # truncates
+            g.pwrite(new_data, 0)
+        for fut in futs:          # every old write resolves (cancelled ops
+            fut.result(30.0)      # complete as applied-then-truncated)
+        assert fs.stat("tp")["size"] == len(new_data)
+        assert fs.open("tp", "r").read() == new_data
+
+
+def test_through_rewrite_of_buffered_chunks_supersedes_them():
+    """A bypassed run over offsets that live buffered chunks fully cover
+    must evict those chunks on every server — otherwise the older BB
+    bytes shadow the newer PFS copy forever (manifest chunks win over
+    gap fills on the read path)."""
+    with BurstBufferSystem(_sys_cfg()) as sys_:
+        fs = sys_.fs()
+        old = _pattern(4, 256 << 10)
+        with fs.open("mix", "w", policy="async", chunk_bytes=64 << 10) as f:
+            f.pwrite(old, 0)                       # buffered + replicated
+        new = _pattern(6, 256 << 10)
+        with fs.open("mix", "a", policy="through") as f:
+            f.pwrite(new, 0)                       # straight to the PFS
+        deadline = time.monotonic() + 3.0          # reports are async
+        while time.monotonic() < deadline:
+            if fs.open("mix", "r").pread(0, len(new)) == new:
+                break
+            time.sleep(0.02)
+        assert fs.open("mix", "r").pread(0, len(new)) == new
+        st = fs.stat("mix")
+        assert st["residency"]["dram"] + st["residency"]["ssd"] == 0
+
+
+def test_through_rewrite_truncates_old_incarnation():
+    with BurstBufferSystem(_sys_cfg()) as sys_:
+        fs = sys_.fs()
+        with fs.open("t", "w", policy="through") as f:
+            f.pwrite(_pattern(1, 1 << 20), 0)
+        short = _pattern(8, 64 << 10)
+        with fs.open("t", "w", policy="through") as f:
+            f.pwrite(short, 0)
+        assert fs.stat("t")["size"] == len(short)
+        assert fs.open("t", "r").read() == short
+
+
+# -------------------------------------------------------- control timeouts
+
+def test_control_timeout_is_wired_through():
+    cfg = _sys_cfg(control_timeout=0.5)
+    with BurstBufferSystem(cfg) as sys_:
+        assert all(c.control_timeout == 0.5 for c in sys_.clients)
+        assert sys_.fs().control_timeout == 0.5
