@@ -1,0 +1,77 @@
+"""Compare a bench's --json output against its committed baseline.
+
+First step of ROADMAP Open item 4 (perf trajectory tracking): each
+``BENCH_*.json`` under ``benchmarks/baselines/`` pins the headline
+metrics of one bench; ``ci.sh --bench-smoke`` re-runs the bench and
+fails if a headline metric regresses below ``--min-ratio`` times the
+baseline value (default 0.5 — lenient on purpose: smoke runs on shared
+CI machines see large variance, and the floor is meant to catch
+collapses, not noise).
+
+    python -m benchmarks.compare CURRENT.json BASELINE.json [--min-ratio R]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# headline higher-is-better metrics per bench (keys into doc["results"])
+METRICS = {
+    "bench_drain": ["sustained_mbps", "readback_mbps"],
+    "bench_restart": ["speedup"],
+    "bench_qos": ["p99_speedup"],
+}
+
+
+def _load(path: str) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def compare(current: dict, baseline: dict, min_ratio: float):
+    """Return (failures, checked) comparing two jsonout documents."""
+    bench = current.get("bench")
+    if bench != baseline.get("bench"):
+        return [f"bench mismatch: {bench!r} vs {baseline.get('bench')!r}"], []
+    failures, checked = [], []
+    cur, base = current.get("results", {}), baseline.get("results", {})
+    for key in METRICS.get(bench, []):
+        b = base.get(key)
+        c = cur.get(key)
+        if not isinstance(b, (int, float)) or b <= 0:
+            continue                    # baseline doesn't pin this metric
+        if not isinstance(c, (int, float)):
+            failures.append(f"{key}: missing from current results")
+            continue
+        floor = min_ratio * b
+        ok = c >= floor
+        checked.append((key, c, b, floor, ok))
+        if not ok:
+            failures.append(
+                f"{key}: {c:.3f} < floor {floor:.3f} "
+                f"({min_ratio:.2f} x baseline {b:.3f})")
+    if not checked and not failures:
+        failures.append(f"no comparable metrics for bench {bench!r}")
+    return failures, checked
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.compare")
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--min-ratio", type=float, default=0.5)
+    args = ap.parse_args(argv)
+
+    current, baseline = _load(args.current), _load(args.baseline)
+    failures, checked = compare(current, baseline, args.min_ratio)
+    for key, c, b, floor, ok in checked:
+        print(f"[compare] {key}: current {c:.3f} vs baseline {b:.3f} "
+              f"(floor {floor:.3f}) {'ok' if ok else 'FAIL'}")
+    for f in failures:
+        print(f"[compare] FAIL {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,9 +35,9 @@ from __future__ import annotations
 import collections
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
-from repro.core import qos, staging
+from repro.core import locktrack, qos, staging
 from repro.core.filesystem import BBFuture, BBWriteError, WriteOp
 from repro.core.hashing import IsoPlacement, KetamaRing, RendezvousHash
 from repro.core.qos import QoSConfig
@@ -86,8 +86,20 @@ class BBClient:
                  read_fanout: int = 4,
                  batch_bytes: int = 1 << 20,
                  coalesce_threshold: int = 64 << 10,
-                 qos_cfg: Optional[QoSConfig] = None):
+                 ack_poll_interval: float = 0.02,
+                 ack_scan_interval: float = 0.05,
+                 drain_poll_interval: float = 0.003,
+                 connect_retry_interval: float = 0.05,
+                 pump_join_timeout: float = 1.0,
+                 qos_cfg: Optional[QoSConfig] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.tname = name
+        self._clock = clock
+        self.ack_poll_interval = ack_poll_interval
+        self.ack_scan_interval = ack_scan_interval
+        self.drain_poll_interval = drain_poll_interval
+        self.connect_retry_interval = connect_retry_interval
+        self.pump_join_timeout = pump_join_timeout
         self.transport = transport
         self.ep = transport.register(name)
         self.client_index = client_index
@@ -120,11 +132,11 @@ class BBClient:
         self.dead: set = set()
         self._placement = None
         self._overrides: Dict[str, str] = {}     # key -> redirected server
-        self._lock = threading.Lock()            # membership/placement state
+        self._lock = locktrack.lock("BBClient._lock")  # membership/placement
         # --- write pipeline (paper Fig 4): in-flight ops + coalesce buffers.
         # All pipeline state is guarded by _op_lock; replies funnel into one
         # completion queue drained by the ACK pump thread.
-        self._op_lock = threading.Lock()
+        self._op_lock = locktrack.lock("BBClient._op_lock")
         self._pending: Dict[int, _Inflight] = {}   # msg_id -> in-flight entry
         self._inflight: set = set()                # WriteOps not yet done
         self._coalesce: Dict[str, List[WriteOp]] = {}
@@ -143,15 +155,15 @@ class BBClient:
 
     # ------------------------------------------------------------ membership
     def connect(self, timeout: float = 10.0):
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
+        deadline = self._clock() + timeout
+        while self._clock() < deadline:
             r = self.transport.request(self.ep, "manager", "client_hello", {},
                                        timeout=self.control_timeout)
             if r is not None and r.kind == "ring":
                 self._set_ring(r.payload["ring"],
                                set(r.payload.get("dead", [])))
                 return
-            time.sleep(0.05)
+            time.sleep(self.connect_retry_interval)
         raise TimeoutError("manager did not provide a ring")
 
     def close(self):
@@ -160,7 +172,7 @@ class BBClient:
         teardown path)."""
         self._stop.set()
         if self._pump is not None:
-            self._pump.join(timeout=1.0)
+            self._pump.join(timeout=self.pump_join_timeout)
             self._pump = None
         with self._op_lock:
             pending = list(self._inflight)
@@ -289,18 +301,18 @@ class BBClient:
         futures fail). Returns the keys of ops that FAILED since the last
         drain; [] means full success."""
         self.flush_coalesced()
-        deadline = time.monotonic() + timeout
+        deadline = self._clock() + timeout
         failed: List[WriteOp] = []
         while True:
             with self._op_lock:
                 pending = list(self._inflight)
             if not pending:
                 break
-            if time.monotonic() > deadline:
+            if self._clock() > deadline:
                 for op in pending:
                     self._abandon(op, "drain timeout")
                 break
-            time.sleep(0.003)
+            time.sleep(self.drain_poll_interval)
         # every completed-with-error op since the last drain
         with self._op_lock:
             keys, self._failed = self._failed, []
@@ -333,14 +345,14 @@ class BBClient:
         sink = self._acks
         while not self._stop.is_set():
             if not sink.items:
-                sink.event.wait(0.02)
+                sink.event.wait(self.ack_poll_interval)
             sink.event.clear()             # clear-then-drain: a concurrent
             while sink.items:              # append re-signals for next pass
                 self._on_ack(sink.items.popleft())
-            now = time.monotonic()
+            now = self._clock()
             if now >= next_scan:
                 self._check_deadlines(now)
-                next_scan = now + 0.05
+                next_scan = now + self.ack_scan_interval
 
     def _issue_locked(self, ops: List[WriteOp], target: str, batch: bool):
         """Fire ops at ``target`` as one message. Caller holds _op_lock."""
@@ -369,7 +381,7 @@ class BBClient:
                 op.counted = True
                 self._lane_inflight[op.lane] += len(op.value)
         self._pending[msg_id] = _Inflight(
-            ops, target, time.monotonic() + self.put_timeout, batch)
+            ops, target, self._clock() + self.put_timeout, batch)
 
     def _flush_target_locked(self, ckey: tuple):
         ops = self._coalesce.pop(ckey, [])
@@ -461,7 +473,7 @@ class BBClient:
             ent = self._pending.pop(msg.reply_to, None)
         if ent is None:
             return                          # late reply for a re-issued op
-        self._last_reply[ent.target] = time.monotonic()
+        self._last_reply[ent.target] = self._clock()
         # backpressure (ISSUE 5): every server reply piggybacks its store
         # occupancy; the congestion windows shrink background lanes first
         occ = msg.payload.get("occupancy") if msg.payload else None

@@ -47,9 +47,9 @@ import os
 import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core import qos, staging
+from repro.core import locktrack, qos, staging
 from repro.core.qos import QoSConfig
 from repro.core.staging import StageConfig
 
@@ -401,11 +401,11 @@ class BBFile:
         self._flush_bypass_report()     # bypassed runs: metadata barrier
         for c in self.fs.clients:
             c.flush_coalesced()
-        deadline = time.monotonic() + timeout
+        deadline = self.fs._clock() + timeout
         failed: List[str] = []
         try:
             for f in self._futures:
-                remaining = max(0.0, deadline - time.monotonic())
+                remaining = max(0.0, deadline - self.fs._clock())
                 exc = f.exception(remaining)   # raises TimeoutError on expiry
                 if exc is not None:
                     failed.append(f.key if f.key is not None else "<gather>")
@@ -569,9 +569,11 @@ class BBFileSystem:
                  pfs_dir: Optional[str] = None, manager: str = "manager",
                  read_fanout: int = 4, stage: Optional[StageConfig] = None,
                  prefetch: bool = False, qos_cfg: Optional[QoSConfig] = None,
-                 lane_default="interactive", control_timeout: float = 1.0):
+                 lane_default="interactive", control_timeout: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic):
         if not clients:
             raise ValueError("BBFileSystem needs at least one client")
+        self._clock = clock
         self.clients = list(clients)
         self.chunk_bytes = chunk_bytes
         self.pfs_dir = pfs_dir
@@ -584,7 +586,8 @@ class BBFileSystem:
         # one knob for every manager/control RPC deadline, mirroring the
         # ISSUE 4 read_timeout cleanup (was a scatter of hardcoded 1.0s)
         self.control_timeout = control_timeout
-        self._pfs_lock = threading.Lock()   # bypass writers share PFS files
+        # bypass writers share PFS files
+        self._pfs_lock = locktrack.lock("BBFileSystem._pfs_lock")
         self.bypass_stats = {"writes": 0, "bytes": 0}
         self._rr = itertools.count()
 
@@ -671,7 +674,7 @@ class BBFileSystem:
             timeout = self.stage_cfg.stage_timeout_s
         hi = -1 if length is None else offset + length
         payload = {"path": path, "lo": offset, "hi": hi}
-        deadline = time.monotonic() + timeout
+        deadline = self._clock() + timeout
         c = self.next_client()
         req_timeout = self.control_timeout if wait \
             else self.control_timeout / 4
@@ -682,12 +685,12 @@ class BBFileSystem:
             if r is not None and r.payload.get("accepted"):
                 epoch = r.payload["epoch"]
                 break
-            if not wait or time.monotonic() >= deadline:
+            if not wait or self._clock() >= deadline:
                 return False     # manager busy (drain/flush in flight)
-            time.sleep(0.01)
+            time.sleep(self.stage_cfg.request_retry_interval)
         if not wait:
             return True
-        while time.monotonic() < deadline:
+        while self._clock() < deadline:
             r = c.transport.request(c.ep, self.manager, "stage_status",
                                     {"epoch": epoch},
                                     timeout=self.control_timeout)
@@ -697,7 +700,7 @@ class BBFileSystem:
                     return True
                 if state in ("aborted", "unknown"):
                     return False
-            time.sleep(0.005)
+            time.sleep(self.stage_cfg.status_poll_interval)
         return False
 
     def truncate(self, path: str):

@@ -20,8 +20,9 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Set
 
+from repro.core import locktrack
 from repro.core.transport import Message, Transport
 
 # drain micro-epochs and stage epochs live in their own id spaces so they
@@ -33,9 +34,17 @@ STAGE_EPOCH_BASE = 2 << 30
 class BBManager(threading.Thread):
     def __init__(self, transport: Transport, expected_servers: int,
                  name: str = "manager",
-                 drain_epoch_timeout: float = 12.0):
+                 drain_epoch_timeout: float = 12.0,
+                 poll_interval: float = 0.05,
+                 flush_poll_interval: float = 0.01,
+                 drain_serialize_poll: float = 0.005,
+                 clock: Callable[[], float] = time.monotonic):
         super().__init__(daemon=True, name=name)
         self.tname = name
+        self._clock = clock
+        self.poll_interval = poll_interval
+        self.flush_poll_interval = flush_poll_interval
+        self.drain_serialize_poll = drain_serialize_poll
         self.transport = transport
         self.ep = transport.register(name)
         self.expected = expected_servers
@@ -59,7 +68,7 @@ class BBManager(threading.Thread):
                             "evicted_keys": 0, "drained_bytes": 0}
         self._drain: Optional[dict] = None
         self._next_drain_epoch = DRAIN_EPOCH_BASE
-        self._flush_lock = threading.Lock()
+        self._flush_lock = locktrack.lock("BBManager._flush_lock")
         self._user_flushes: Dict[int, float] = {}   # epoch -> begin time
         # stage-in coordination (ISSUE 4): one stage epoch at a time,
         # serialized against drain micro-epochs; finished epochs keep a
@@ -80,11 +89,11 @@ class BBManager(threading.Thread):
         return self.flush_done.get(epoch, set()) >= set(self.alive_ring())
 
     def wait_flush(self, epoch: int, timeout: float = 30.0) -> bool:
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
+        deadline = self._clock() + timeout
+        while self._clock() < deadline:
             if self.flush_complete(epoch):
                 return True
-            time.sleep(0.01)
+            time.sleep(self.flush_poll_interval)
         return False
 
     def stop(self):
@@ -93,8 +102,8 @@ class BBManager(threading.Thread):
     # --------------------------------------------------------------- thread
     def run(self):
         while not self._stop.is_set():
-            msg = self.ep.recv(timeout=0.05)
-            now = time.monotonic()
+            msg = self.ep.recv(timeout=self.poll_interval)
+            now = self._clock()
             if self._drain is not None \
                     and now - self._drain["started"] > self.drain_epoch_timeout:
                 self._abort_drain("timeout")
@@ -212,7 +221,7 @@ class BBManager(threading.Thread):
             return
         epoch = self._next_drain_epoch
         self._next_drain_epoch += 1
-        self._drain = {"epoch": epoch, "started": time.monotonic(),
+        self._drain = {"epoch": epoch, "started": self._clock(),
                        "expected": set(self.alive_ring()), "done": set(),
                        "drained": set(), "bytes": 0,
                        "requested_by": msg.payload.get("server")}
@@ -276,7 +285,7 @@ class BBManager(threading.Thread):
         self._next_stage_epoch += 1
         ring = self.alive_ring()
         self._stage = {"epoch": epoch, "path": msg.payload["path"],
-                       "started": time.monotonic(),
+                       "started": self._clock(),
                        "expected": set(ring), "done": set(), "bytes": 0}
         for s in ring:
             self.transport.send(self.tname, s, "stage_begin",
@@ -397,11 +406,11 @@ class BBManager(threading.Thread):
         micro-epochs: overlapping epochs would share server-side shuffle
         buffers and lookup sizes, so wait (bounded) for an in-flight drain
         to finish or abort before broadcasting."""
-        deadline = time.monotonic() + self.drain_epoch_timeout
-        while self._drain is not None and time.monotonic() < deadline:
-            time.sleep(0.005)
+        deadline = self._clock() + self.drain_epoch_timeout
+        while self._drain is not None and self._clock() < deadline:
+            time.sleep(self.drain_serialize_poll)
         with self._flush_lock:
-            self._user_flushes[epoch] = time.monotonic()
+            self._user_flushes[epoch] = self._clock()
         for s in self.alive_ring():
             self.transport.send(self.tname, s, "flush_begin", {"epoch": epoch})
 

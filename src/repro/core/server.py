@@ -31,7 +31,7 @@ from __future__ import annotations
 import os
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core import qos, staging, twophase
 from repro.core.drain import DrainConfig, DrainEngine
@@ -55,20 +55,25 @@ class BBServer(threading.Thread):
                  pfs_dir: str = "/tmp/pfs",
                  replication: int = 2,
                  stabilize_interval: float = 0.25,
+                 poll_interval: float = 0.02,
                  drain: Optional[DrainConfig] = None,
                  stage: Optional[StageConfig] = None,
-                 qos_cfg: Optional[QoSConfig] = None):
+                 qos_cfg: Optional[QoSConfig] = None,
+                 clock: Callable[[], float] = time.monotonic):
         super().__init__(daemon=True, name=name)
         self.tname = name
+        self._clock = clock
         self.transport = transport
         self.ep = transport.register(name)
         self.store = LogStore(dram_capacity, ssd_dir,
                               name=name.replace("/", "_"),
                               ssd_capacity=ssd_capacity,
-                              segment_bytes=segment_bytes)
+                              segment_bytes=segment_bytes,
+                              clock=clock)
         self.pfs_dir = pfs_dir
         self.replication = replication
         self.stabilize_interval = stabilize_interval
+        self.poll_interval = poll_interval
         self.drain_cfg = drain or DrainConfig()
         # QoS (ISSUE 5): lane-priority dequeue of buffered puts, plus ONE
         # background-bandwidth arbiter shared by the drain + stage engines
@@ -129,6 +134,10 @@ class BBServer(threading.Thread):
                       "clean_evictions": 0, "clean_evicted_bytes": 0,
                       "bypass_chunks": 0, "bypass_bytes": 0,
                       "puts_by_lane": [0] * len(qos.LANES)}
+        # unknown-kind messages (protocol black-hole detector, ISSUE 6):
+        # kind -> count; surfaced in drain_pressure and stats_query, and the
+        # first occurrence of each kind is reported as a server_error
+        self.unknown_kinds: Dict[str, int] = {}
         # async stabilization state
         self._inflight_pings: Dict[int, tuple] = {}   # nonce -> (peer, deadline)
         self._ping_misses: Dict[str, int] = {}
@@ -177,7 +186,7 @@ class BBServer(threading.Thread):
             # a checkpoint burst no longer waits behind every background put
             # that happened to arrive first.
             busy = self._laneq is not None and len(self._laneq) > 0
-            msg = self.ep.recv(timeout=0.0 if busy else 0.02)
+            msg = self.ep.recv(timeout=0.0 if busy else self.poll_interval)
             burst = self.qos_cfg.server_recv_burst
             while msg is not None:
                 self._safe_dispatch(msg)
@@ -191,7 +200,7 @@ class BBServer(threading.Thread):
                     if ent is None:
                         break
                     self._safe_dispatch(ent, queued=True)
-            now = time.monotonic()
+            now = self._clock()
             if now - self._last_stab > self.stabilize_interval and self.ring:
                 self._last_stab = now
                 self._stabilize(now)
@@ -241,6 +250,17 @@ class BBServer(threading.Thread):
     def _dispatch(self, msg: Message):
         handler = getattr(self, f"_on_{msg.kind}", None)
         if handler is None:
+            # protocol black-hole detector (ISSUE 6): a typo'd or stale
+            # kind must be distinguishable from server death — count it,
+            # and tell the manager the first time each kind shows up
+            n = self.unknown_kinds.get(msg.kind, 0) + 1
+            self.unknown_kinds[msg.kind] = n
+            if n == 1:
+                self.transport.send(
+                    self.tname, self.manager, "server_error",
+                    {"server": self.tname,
+                     "error": f"unknown message kind {msg.kind!r} "
+                              f"from {msg.src}"})
             return
         handler(msg)
 
@@ -457,10 +477,6 @@ class BBServer(threading.Thread):
                 best, best_free = peer, free
         return best
 
-    def _on_mem_query(self, msg: Message):
-        self.transport.reply(self.tname, msg, "mem_info",
-                             {"free": self.store.dram_free()})
-
     # get path -------------------------------------------------------------
     def _on_get(self, msg: Message):
         key = msg.payload["key"]
@@ -670,7 +686,7 @@ class BBServer(threading.Thread):
     def _on_pong(self, msg: Message):
         self._inflight_pings.pop(msg.payload["nonce"], None)
         self._ping_misses[msg.src] = 0
-        self._last_pong[msg.src] = time.monotonic()
+        self._last_pong[msg.src] = self._clock()
         self._neighbor_free[msg.src] = msg.payload["free"]
         # a pong from a node we thought dead -> it is back (partition healed)
         if not self.alive.get(msg.src, True):
@@ -689,7 +705,7 @@ class BBServer(threading.Thread):
         passes (non-blocking state machine)."""
         suspect = msg.payload["suspect"]
         nonce = self._ping_nonce = getattr(self, "_ping_nonce", 0) + 1
-        now = time.monotonic()
+        now = self._clock()
         self._pending_confirms.append([msg, suspect, now,
                                        now + self.PING_TIMEOUT])
         self.transport.send(self.tname, suspect, "ping",
@@ -948,6 +964,8 @@ class BBServer(threading.Thread):
             self.transport.send(self.tname, self.manager, "drain_pressure",
                                 {"server": self.tname, **occ,
                                  "draining": eng.draining,
+                                 "unknown_kinds": sum(
+                                     self.unknown_kinds.values()),
                                  "ingest_bps": eng.ingest_rate(now)})
         if not self._segments:
             return                  # nothing file-attributed: nothing to drain
@@ -1294,7 +1312,8 @@ class BBServer(threading.Thread):
             "keys": len(self.store.keys()),
             "lookup_files": len(self.lookup_table),
             "occupancy": occ["fraction"],
-            "evicted_keys": len(self._evicted)}
+            "evicted_keys": len(self._evicted),
+            "unknown_kinds": dict(self.unknown_kinds)}
         if self.drainer is not None:
             payload["drain"] = {**self.drainer.stats,
                                 "draining": self.drainer.draining}

@@ -44,6 +44,8 @@ class StageConfig:
     prefetch_window: int = 8 << 20  # read-ahead stage-in window per trigger
     prefetch_min_run: int = 2       # sequential reads before read-ahead fires
     stage_timeout_s: float = 30.0   # fs.stage(wait=True) default deadline
+    request_retry_interval: float = 0.01   # stage_request retry cadence
+    status_poll_interval: float = 0.005    # stage_status poll cadence
 
 
 # ----------------------------------------------------------- interval math

@@ -10,7 +10,6 @@ from __future__ import annotations
 import os
 import shutil
 import tempfile
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -47,6 +46,18 @@ class BBConfig:
     # deadline (hellos, fs namespace ops, stage requests, failure probes)
     control_timeout: float = 1.0
     read_fanout: int = 4
+    # cadence knobs (ISSUE 6): every run-loop poll / retry / scan interval
+    # in core routes through here — bbcheck rule 5 rejects new literals
+    startup_timeout: float = 10.0        # wait_ring bound at start()
+    manager_poll_interval: float = 0.05  # manager run-loop recv timeout
+    server_poll_interval: float = 0.02   # server run-loop idle recv timeout
+    flush_poll_interval: float = 0.01    # manager wait_flush spin
+    drain_serialize_poll: float = 0.005  # begin_flush wait-for-drain spin
+    ack_poll_interval: float = 0.02      # client ACK-ledger event wait
+    ack_scan_interval: float = 0.05      # client deadline-scan cadence
+    client_drain_poll: float = 0.003     # client drain() spin
+    connect_retry_interval: float = 0.05  # client connect() hello retry
+    pump_join_timeout: float = 1.0       # client close() pump-thread join
     # autonomous drain engine (ISSUE 3): watermark-driven background flush
     drain: DrainConfig = field(default_factory=DrainConfig)
     # stage-in engine (ISSUE 4): PFS -> BB bulk re-ingest + read-ahead
@@ -67,7 +78,10 @@ class BurstBufferSystem:
         os.makedirs(self.pfs_dir, exist_ok=True)
 
         self.manager = BBManager(self.transport, cfg.num_servers,
-                                 drain_epoch_timeout=cfg.drain.epoch_timeout_s)
+                                 drain_epoch_timeout=cfg.drain.epoch_timeout_s,
+                                 poll_interval=cfg.manager_poll_interval,
+                                 flush_poll_interval=cfg.flush_poll_interval,
+                                 drain_serialize_poll=cfg.drain_serialize_poll)
         self.servers: Dict[str, BBServer] = {}
         for i in range(cfg.num_servers):
             name = f"server/{i}"
@@ -80,6 +94,7 @@ class BurstBufferSystem:
                 pfs_dir=self.pfs_dir,
                 replication=cfg.replication,
                 stabilize_interval=cfg.stabilize_interval,
+                poll_interval=cfg.server_poll_interval,
                 drain=cfg.drain, stage=cfg.stage, qos_cfg=cfg.qos)
         self.clients: List[BBClient] = [
             BBClient(f"client/{i}", self.transport, client_index=i,
@@ -89,6 +104,11 @@ class BurstBufferSystem:
                      read_fanout=cfg.read_fanout,
                      batch_bytes=cfg.batch_bytes,
                      coalesce_threshold=cfg.coalesce_threshold,
+                     ack_poll_interval=cfg.ack_poll_interval,
+                     ack_scan_interval=cfg.ack_scan_interval,
+                     drain_poll_interval=cfg.client_drain_poll,
+                     connect_retry_interval=cfg.connect_retry_interval,
+                     pump_join_timeout=cfg.pump_join_timeout,
                      qos_cfg=cfg.qos)
             for i in range(cfg.num_clients)]
         self._fs: Optional[BBFileSystem] = None
@@ -99,7 +119,8 @@ class BurstBufferSystem:
         for s in self.servers.values():
             s.start()
             self.transport.send(s.tname, "manager", "register", {})
-        assert self.manager.wait_ring(10.0), "ring init failed"
+        assert self.manager.wait_ring(self.cfg.startup_timeout), \
+            "ring init failed"
         for c in self.clients:
             c.connect()
         return self
@@ -161,6 +182,7 @@ class BurstBufferSystem:
                        pfs_dir=self.pfs_dir,
                        replication=self.cfg.replication,
                        stabilize_interval=self.cfg.stabilize_interval,
+                       poll_interval=self.cfg.server_poll_interval,
                        drain=self.cfg.drain, stage=self.cfg.stage,
                        qos_cfg=self.cfg.qos)
         self.servers[name] = srv
@@ -179,8 +201,9 @@ class BurstBufferSystem:
         for name in self.servers:
             if not self.transport.alive(name):
                 continue
-            r = self.transport.request(probe.ep, name, "stats_query", {},
-                                       timeout=1.0) if probe else None
+            r = self.transport.request(
+                probe.ep, name, "stats_query", {},
+                timeout=self.cfg.control_timeout) if probe else None
             if r is not None:
                 out[name] = r.payload
         return out

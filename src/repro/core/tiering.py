@@ -26,10 +26,11 @@ candidates; a plain rewrite of the key clears the flag.
 from __future__ import annotations
 
 import os
-import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
+
+from . import locktrack
 
 
 @dataclass
@@ -49,7 +50,9 @@ class LogStore:
     def __init__(self, dram_capacity: int, ssd_dir: Optional[str] = None,
                  name: str = "srv", *,
                  ssd_capacity: Optional[int] = None,
-                 segment_bytes: Optional[int] = None):
+                 segment_bytes: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
         self.dram_capacity = dram_capacity
         self.ssd_dir = ssd_dir
         self.name = name
@@ -62,8 +65,8 @@ class LogStore:
         self._ssd_bytes = 0
         self._next_seg = 1
         self._gen = 0
-        self._seg_touched: Dict[int, float] = {0: time.monotonic()}
-        self._lock = threading.RLock()
+        self._seg_touched: Dict[int, float] = {0: clock()}
+        self._lock = locktrack.rlock("LogStore._lock")
         self._ssd_path = None
         if ssd_dir:
             os.makedirs(ssd_dir, exist_ok=True)
@@ -150,7 +153,7 @@ class LogStore:
             seg += value
             self._index[key] = loc
             self._dram_bytes += len(value)
-            self._seg_touched[self._open_seg] = time.monotonic()
+            self._seg_touched[self._open_seg] = self._clock()
             if len(seg) >= self.segment_bytes:
                 self._roll_segment()
             spilled = self._maybe_spill()
@@ -160,7 +163,7 @@ class LogStore:
     def _roll_segment(self):
         self._segments[self._next_seg] = bytearray()
         self._open_seg = self._next_seg
-        self._seg_touched[self._open_seg] = time.monotonic()
+        self._seg_touched[self._open_seg] = self._clock()
         self._next_seg += 1
 
     def _maybe_spill(self) -> bool:
@@ -233,7 +236,7 @@ class LogStore:
         ``clean`` filters by the clean flag (True: only staged/re-ingested
         keys — the free-eviction candidates; False: only dirty keys — the
         ones that need a drain epoch; None: both). Returns [(key, length)]."""
-        now = time.monotonic() if now is None else now
+        now = self._clock() if now is None else now
         with self._lock:
             ssd = sorted((loc.offset, k, loc.length)
                          for k, loc in self._index.items()

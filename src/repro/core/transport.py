@@ -15,10 +15,10 @@ from __future__ import annotations
 
 import itertools
 import queue
-import threading
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, Optional
+
+from . import locktrack
 
 
 @dataclass
@@ -37,7 +37,7 @@ class Endpoint:
         self.transport = transport
         self.inbox: "queue.Queue[Message]" = queue.Queue()
         self._pending: Dict[int, "queue.Queue[Message]"] = {}
-        self._lock = threading.Lock()
+        self._lock = locktrack.lock("Endpoint._lock")
 
     def deliver(self, msg: Message):
         if msg.reply_to is not None:
@@ -63,7 +63,7 @@ class Transport:
         self._endpoints: Dict[str, Endpoint] = {}
         self._dropped: set = set()
         self._ids = itertools.count(1)
-        self._lock = threading.Lock()
+        self._lock = locktrack.lock("Transport._lock")
         self.bytes_sent: Dict[str, int] = {}
 
     def register(self, name: str) -> Endpoint:

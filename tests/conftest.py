@@ -6,5 +6,23 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so the tools/ package (bbcheck) is importable from tests
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 # make the _hypothesis_compat shim importable regardless of invocation dir
 sys.path.insert(0, os.path.dirname(__file__))
+
+import pytest  # noqa: E402
+
+from repro.core import locktrack  # noqa: E402
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lock_order_tracking():
+    """Run the whole suite with instrumented locks (bbcheck rule 2's
+    runtime half): every lock the core creates during the session records
+    real acquisition orders, and any inversion fails the run."""
+    tr = locktrack.enable()
+    yield
+    locktrack.disable()
+    assert not tr.inversions, \
+        f"lock-order inversions recorded during test run: {tr.inversions}"

@@ -1,0 +1,331 @@
+"""bbcheck (ISSUE 6): each rule fires on seeded-violation fixtures, the
+allowlist is shrinking-only, the runtime lock tracker records inversions,
+the server's unknown-kind black-hole detector reports instead of silently
+dropping, and the real core passes every rule with an empty allowlist.
+"""
+import ast
+import textwrap
+import time
+
+import pytest
+
+from repro.core import locktrack
+from repro.core.locktrack import LockOrderTracker, TrackedLock
+from repro.core.system import BBConfig, BurstBufferSystem
+from tools.bbcheck import blocking, clocks, literals, locks, protocol
+from tools.bbcheck.__main__ import DEFAULT_ALLOWLIST, DEFAULT_ROOT, \
+    parse_tree
+from tools.bbcheck.report import Violation, apply_allowlist
+
+
+def trees(**srcs):
+    return {name: ast.parse(textwrap.dedent(src))
+            for name, src in srcs.items()}
+
+
+def rules_of(violations):
+    return {v.rule for v in violations}
+
+
+# ---------------------------------------------------------------- rule 1
+DISPATCHER_SERVER = """
+    class FixServer:
+        def _dispatch(self, msg):
+            handler = getattr(self, f"_on_{msg.kind}", None)
+            if handler:
+                handler(msg)
+
+        def _on_put(self, msg):
+            self.store[msg.payload["key"]] = msg.payload["value"]
+"""
+
+
+def test_protocol_unhandled_kind_fires():
+    vs = protocol.check(trees(**{
+        "server.py": DISPATCHER_SERVER,
+        "client.py": """
+            class FixClient:
+                def go(self, server):
+                    self.transport.send(self.tname, server, "putt",
+                                        {"key": "k", "value": b"v"})
+            """}))
+    assert any(v.ident == "unhandled:putt:server" for v in vs), vs
+
+
+def test_protocol_dead_handler_fires():
+    vs = protocol.check(trees(**{"server.py": DISPATCHER_SERVER}))
+    assert any(v.ident == "dead-handler:server:put" for v in vs), vs
+
+
+def test_protocol_missing_payload_key_fires():
+    vs = protocol.check(trees(**{
+        "server.py": DISPATCHER_SERVER,
+        "client.py": """
+            class FixClient:
+                def go(self, server):
+                    self.transport.send(self.tname, server, "put",
+                                        {"key": "k"})
+            """}))
+    assert any(v.ident == "missing-key:server:put:value" for v in vs), vs
+
+
+def test_protocol_clean_fixture_passes():
+    vs = protocol.check(trees(**{
+        "server.py": DISPATCHER_SERVER,
+        "client.py": """
+            class FixClient:
+                def go(self, server):
+                    self.transport.send(self.tname, server, "put",
+                                        {"key": "k", "value": b"v"})
+            """}))
+    assert vs == []
+
+
+# ---------------------------------------------------------------- rule 2
+def test_lock_cycle_fires():
+    vs = locks.check(trees(**{"m.py": """
+        class A:
+            def f(self):
+                with self._lock:
+                    with self._op_lock:
+                        pass
+
+            def g(self):
+                with self._op_lock:
+                    with self._lock:
+                        pass
+        """}))
+    assert any(v.ident.startswith("cycle:") for v in vs), vs
+
+
+def test_lock_self_nesting_fires():
+    vs = locks.check(trees(**{"m.py": """
+        class A:
+            def f(self):
+                with self._lock:
+                    with self._lock:
+                        pass
+        """}))
+    assert any(v.ident.startswith("self-nest:") for v in vs), vs
+
+
+def test_lock_ordered_nesting_passes():
+    vs = locks.check(trees(**{"m.py": """
+        class A:
+            def f(self):
+                with self._lock:
+                    with self._op_lock:
+                        pass
+
+            def g(self):
+                with self._lock:
+                    with self._op_lock:
+                        pass
+        """}))
+    assert vs == []
+
+
+# ---------------------------------------------------------------- rule 3
+def test_blocking_under_lock_fires():
+    vs = blocking.check(trees(**{"m.py": """
+        import time
+        class A:
+            def f(self):
+                with self._lock:
+                    time.sleep(0.5)
+                    r = self.transport.request(self.ep, "x", "k", {})
+                    m = self.ep.recv(timeout=1.0)
+                    q = self.q.get(timeout=2.0)
+        """}))
+    msgs = [v.message for v in vs]
+    assert len(vs) == 4, msgs
+    assert any("time.sleep" in m for m in msgs)
+    assert any("transport.request" in m for m in msgs)
+    assert any("recv" in m for m in msgs)
+    assert any("queue.get" in m for m in msgs)
+
+
+def test_blocking_outside_lock_passes():
+    vs = blocking.check(trees(**{"m.py": """
+        import time
+        class A:
+            def f(self):
+                with self._lock:
+                    x = self.d.get("key")       # dict lookup: fine
+                    y = self.q.get(timeout=0)   # non-blocking poll: fine
+                time.sleep(0.5)                 # not under the lock
+        """}))
+    assert vs == []
+
+
+# ---------------------------------------------------------------- rule 4
+def test_direct_clock_fires_and_guard_passes():
+    vs = clocks.check(trees(**{"m.py": """
+        import time
+        def bad():
+            return time.monotonic()
+        def also_bad():
+            return time.time()
+        def guarded(now=None):
+            now = time.monotonic() if now is None else now
+            return now
+        def injected(self):
+            return self._clock()
+        """}))
+    assert len(vs) == 2, vs
+    assert {v.ident for v in vs} == {"time.monotonic:bad",
+                                     "time.time:also_bad"}
+
+
+# ---------------------------------------------------------------- rule 5
+def test_literal_intervals_fire():
+    vs = literals.check(trees(**{"m.py": """
+        import time
+        class A:
+            def f(self, busy):
+                self.ep.recv(timeout=0.05)
+                self.ep.recv(timeout=0.0 if busy else 0.02)
+                time.sleep(0.01)
+                self.event.wait(0.25)
+        """}))
+    assert len(vs) == 4, vs
+
+
+def test_configured_intervals_pass():
+    vs = literals.check(trees(**{"m.py": """
+        import time
+        class A:
+            def f(self):
+                self.ep.recv(timeout=self.poll_interval)
+                self.ep.recv(timeout=0)        # non-blocking: fine
+                time.sleep(self.retry_interval)
+
+            def g(self, timeout: float = 2.0):  # signature default: fine
+                pass
+        """}))
+    assert vs == []
+
+
+# ------------------------------------------------------------- allowlist
+def test_allowlist_is_shrinking_only():
+    v = Violation("clocks", "m.py", 3, "time.monotonic:f", "x")
+    new, allowed, stale = apply_allowlist([v], [v.key])
+    assert (new, allowed, stale) == ([], [v], [])
+    new, allowed, stale = apply_allowlist([v], [])
+    assert (new, allowed, stale) == ([v], [], [])
+    # a fixed violation leaves its entry behind -> stale -> must fail
+    new, allowed, stale = apply_allowlist([], [v.key])
+    assert new == [] and stale == [v.key]
+
+
+# ------------------------------------------------------- runtime tracker
+def test_locktrack_records_inversion():
+    tr = LockOrderTracker()
+    a = TrackedLock("A", tr)
+    b = TrackedLock("B", tr)
+    with a:
+        with b:
+            pass
+    assert tr.inversions == []
+    with b:
+        with a:
+            pass
+    assert len(tr.inversions) == 1
+    inv = tr.inversions[0]
+    assert inv["kind"] == "order-inversion"
+    assert "B -> A" in inv["second"]
+
+
+def test_locktrack_same_name_nesting_is_inversion():
+    tr = LockOrderTracker()
+    a1 = TrackedLock("Endpoint._lock", tr)
+    a2 = TrackedLock("Endpoint._lock", tr)
+    with a1:
+        with a2:
+            pass
+    assert tr.inversions and tr.inversions[0]["kind"] == "same-name-nesting"
+
+
+def test_locktrack_reentrant_and_clean_orders():
+    tr = LockOrderTracker()
+    r = TrackedLock("R", tr, reentrant=True)
+    inner = TrackedLock("I", tr)
+    with r:
+        with r:                 # reentrant re-acquire: not a nesting event
+            with inner:
+                pass
+    with r:
+        with inner:
+            pass
+    assert tr.inversions == []
+    assert tr.edges == {"R": {"I": tr.edges["R"]["I"]}}
+
+
+def test_locktrack_disabled_factories_are_plain():
+    import threading
+    assert locktrack.tracker() is not None    # conftest enabled it
+    lk = locktrack.lock("x")
+    assert isinstance(lk, TrackedLock)
+    locktrack.disable()
+    try:
+        assert isinstance(locktrack.lock("x"), type(threading.Lock()))
+    finally:
+        locktrack.enable()
+
+
+# ------------------------------------------- unknown-kind black-hole path
+def test_unknown_kind_is_reported_not_dropped():
+    cfg = BBConfig(num_servers=2, num_clients=1, dram_capacity=1 << 20)
+    with BurstBufferSystem(cfg) as sys_:
+        c = sys_.clients[0]
+        c.transport.send(c.tname, "server/0", "putt_typo", {"key": "k"})
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            if sys_.manager.errors:
+                break
+            time.sleep(0.02)
+        assert any("putt_typo" in e.get("error", "")
+                   for e in sys_.manager.errors), sys_.manager.errors
+        stats = sys_.server_stats()
+        assert stats["server/0"]["unknown_kinds"] == {"putt_typo": 1}
+        # repeated strays bump the counter but report server_error once
+        c.transport.send(c.tname, "server/0", "putt_typo", {"key": "k"})
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            stats = sys_.server_stats()
+            if stats.get("server/0", {}).get("unknown_kinds", {}) \
+                    .get("putt_typo") == 2:
+                break
+            time.sleep(0.02)
+        assert stats["server/0"]["unknown_kinds"] == {"putt_typo": 2}
+        n_errors = sum("putt_typo" in e.get("error", "")
+                       for e in sys_.manager.errors)
+        assert n_errors == 1
+        # aggregate counter rides the drain_pressure report
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            servers = sys_.pressure()["servers"]
+            if servers.get("server/0", {}).get("unknown_kinds") == 2:
+                break
+            time.sleep(0.05)
+        assert sys_.pressure()["servers"]["server/0"]["unknown_kinds"] == 2
+
+
+# ------------------------------------------------------------- real core
+def test_core_is_clean_under_all_rules():
+    """The committed state: every rule passes on src/repro/core with an
+    EMPTY allowlist (the shrinking-only end state)."""
+    import os
+    root = os.path.join(os.path.dirname(__file__), "..", DEFAULT_ROOT)
+    trees_ = parse_tree(root)
+    assert len(trees_) >= 10
+    from tools.bbcheck import ALL_RULES
+    from tools.bbcheck.report import load_allowlist
+    violations = []
+    for rule in ALL_RULES:
+        violations.extend(rule.check(trees_))
+    allow = load_allowlist(DEFAULT_ALLOWLIST)
+    assert allow == [], "allowlist must only ever shrink — and it is empty"
+    new, _allowed, stale = apply_allowlist(violations, allow)
+    assert new == [], "\n".join(str(v) for v in new)
+    assert stale == []

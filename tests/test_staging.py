@@ -404,20 +404,18 @@ def test_mid_stage_server_death_aborts_cleanly_reads_correct():
         with open(os.path.join(sys_.pfs_dir, "pfsonly"), "wb") as f:
             f.write(data)
         caught = threading.Event()
+        # deterministic fault injection: a whole stage epoch spans only a
+        # few milliseconds on a fast PFS, so a polling assassin thread
+        # routinely misses the window. Instead the victim dies on receipt
+        # of its own stage_begin — by then the manager's epoch is in
+        # flight, and the victim can never report stage_done.
+        victim = sorted(sys_.servers)[-1]
 
-        def _assassin():
-            deadline = time.monotonic() + 10.0
-            while time.monotonic() < deadline and not caught.is_set():
-                st = sys_.manager._stage
-                if st is not None:
-                    victim = sorted(st["expected"])[-1]
-                    sys_.kill_server(victim)
-                    caught.set()
-                    return
-        killer = threading.Thread(target=_assassin, daemon=True)
-        killer.start()
+        def _die_on_stage_begin(msg):
+            sys_.kill_server(victim)
+            caught.set()
+        sys_.servers[victim]._on_stage_begin = _die_on_stage_begin
         completed = sys_.fs().stage("pfsonly", timeout=15.0)
-        killer.join(10.0)
         assert caught.is_set(), "no stage epoch was ever in flight"
         if not completed:
             # the abort path: bookkeeping must record it and clear the slot

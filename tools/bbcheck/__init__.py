@@ -1,0 +1,20 @@
+"""bbcheck: AST-based invariant checks for the burst-buffer core.
+
+Five rules, each a module exposing ``check(trees) -> [Violation]`` where
+``trees`` maps a display filename to a parsed ``ast.Module``:
+
+- protocol  -- message kinds sent vs. ``_on_<kind>`` handlers, payload keys
+- locks     -- lexical lock-acquisition graph must be acyclic
+- blocking  -- no recv/request/queue.get(timeout>0)/sleep under a held lock
+- clocks    -- no direct time.time()/time.monotonic() outside the
+               injected-clock guard pattern
+- literals  -- no hardcoded timeout/interval floats; route through BBConfig
+
+Run ``python -m tools.bbcheck`` (see __main__.py) or ``scripts/ci.sh --lint``.
+The committed allowlist (allowlist.json) is shrinking-only: unknown
+violations fail, and so do stale allowlist entries.
+"""
+from . import blocking, clocks, literals, locks, protocol  # noqa: F401
+from .report import Violation, load_allowlist, apply_allowlist  # noqa: F401
+
+ALL_RULES = (protocol, locks, blocking, clocks, literals)

@@ -1,0 +1,61 @@
+"""CLI: ``python -m tools.bbcheck [root] [--allowlist PATH]``.
+
+Exit status is non-zero if any rule reports a violation not covered by
+the allowlist, OR if the allowlist contains stale entries (so the list
+can only ever shrink).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+
+from . import ALL_RULES
+from .report import apply_allowlist, load_allowlist
+
+DEFAULT_ROOT = "src/repro/core"
+DEFAULT_ALLOWLIST = os.path.join(os.path.dirname(__file__), "allowlist.json")
+
+
+def parse_tree(root: str):
+    trees = {}
+    for name in sorted(os.listdir(root)):
+        if not name.endswith(".py"):
+            continue
+        path = os.path.join(root, name)
+        with open(path) as fh:
+            trees[name] = ast.parse(fh.read(), filename=path)
+    return trees
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="bbcheck")
+    ap.add_argument("root", nargs="?", default=DEFAULT_ROOT)
+    ap.add_argument("--allowlist", default=DEFAULT_ALLOWLIST)
+    args = ap.parse_args(argv)
+
+    trees = parse_tree(args.root)
+    violations = []
+    for rule in ALL_RULES:
+        violations.extend(rule.check(trees))
+    violations.sort(key=lambda v: (v.file, v.line, v.rule))
+
+    allow = load_allowlist(args.allowlist)
+    new, allowed, stale = apply_allowlist(violations, allow)
+
+    for v in new:
+        print(f"FAIL {v}")
+    for v in allowed:
+        print(f"allow {v}")
+    for key in stale:
+        print(f"STALE allowlist entry (fixed? remove it): {key}")
+
+    n_mod = len(trees)
+    print(f"bbcheck: {n_mod} modules, {len(new)} new violation(s), "
+          f"{len(allowed)} allowlisted, {len(stale)} stale entries")
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

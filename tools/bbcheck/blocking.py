@@ -1,0 +1,61 @@
+"""Rule 3: no blocking calls lexically inside a held-lock block.
+
+Under any ``with <lock>`` flag:
+- ``<x>.recv(...)`` — inbox wait
+- ``<x>.transport.request(...)`` — blocking RPC (request_async is fine)
+- ``<x>.get(timeout=...)`` with a positive or non-constant timeout —
+  queue waits; plain ``d.get(k)`` dict lookups have no timeout kw
+- ``time.sleep(...)``
+
+These turn a lock into a convoy: every other thread needing it stalls for
+a full network timeout. The transport deliberately calls ``waiter.put``
+and ``ep.deliver`` outside its locks for the same reason.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from .report import Violation
+from .locks import iter_functions, walk_with_stacks
+
+
+def _is_blocking(call: ast.Call) -> str:
+    fn = call.func
+    if not isinstance(fn, ast.Attribute):
+        return ""
+    if fn.attr == "recv":
+        return "recv() (inbox wait)"
+    if fn.attr == "request" and "transport" in ast.unparse(fn.value):
+        return "blocking transport.request()"
+    if fn.attr == "sleep" and isinstance(fn.value, ast.Name) \
+            and fn.value.id == "time":
+        return "time.sleep()"
+    if fn.attr == "get":
+        for kw in call.keywords:
+            if kw.arg == "timeout":
+                v = kw.value
+                if isinstance(v, ast.Constant) \
+                        and isinstance(v.value, (int, float)) \
+                        and v.value <= 0:
+                    return ""
+                return "queue.get(timeout=...)"
+    return ""
+
+
+def check(trees: Dict[str, ast.Module]) -> List[Violation]:
+    violations: List[Violation] = []
+    for fname, tree in trees.items():
+        if fname == "locktrack.py":
+            continue
+        for fn, cls in iter_functions(tree):
+            for node, held in walk_with_stacks(fn, cls):
+                if not held or not isinstance(node, ast.Call):
+                    continue
+                what = _is_blocking(node)
+                if what:
+                    violations.append(Violation(
+                        "blocking", fname, node.lineno,
+                        f"{held[-1]}:{ast.unparse(node.func)}",
+                        f"{what} while holding {held[-1]}"))
+    return violations

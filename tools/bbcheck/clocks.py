@@ -1,0 +1,72 @@
+"""Rule 4: clock injection.
+
+Direct ``time.time()`` / ``time.monotonic()`` calls are banned in core
+modules. Two sanctioned shapes remain:
+
+- the injected-clock guard drain.py/qos.py pioneered::
+
+      now = time.monotonic() if now is None else now
+
+  (recognised as a call inside an IfExp whose test is ``<x> is None``);
+
+- bare attribute references, e.g. a constructor default
+  ``clock: Callable[[], float] = time.monotonic`` — not calls at all.
+
+Everything else must go through the entity's injected ``self._clock`` so
+tests can drive time deterministically. The committed allowlist is
+shrinking-only; the goal state (and current state) is empty.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from .report import Violation
+
+BANNED = {"time", "monotonic"}
+
+
+def _in_none_guard(node: ast.AST) -> bool:
+    cur = getattr(node, "_bb_parent", None)
+    while cur is not None:
+        if isinstance(cur, ast.IfExp) \
+                and isinstance(cur.test, ast.Compare) \
+                and len(cur.test.ops) == 1 \
+                and isinstance(cur.test.ops[0], (ast.Is, ast.IsNot)) \
+                and isinstance(cur.test.comparators[0], ast.Constant) \
+                and cur.test.comparators[0].value is None:
+            return True
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False
+        cur = getattr(cur, "_bb_parent", None)
+    return False
+
+
+def check(trees: Dict[str, ast.Module]) -> List[Violation]:
+    violations: List[Violation] = []
+    for fname, tree in trees.items():
+        if fname == "locktrack.py":
+            continue
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                child._bb_parent = node   # type: ignore[attr-defined]
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in BANNED
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "time"):
+                continue
+            if _in_none_guard(node):
+                continue
+            fn = getattr(node, "_bb_parent", None)
+            while fn is not None and not isinstance(
+                    fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fn = getattr(fn, "_bb_parent", None)
+            where = fn.name if fn is not None else "<module>"
+            violations.append(Violation(
+                "clocks", fname, node.lineno,
+                f"time.{node.func.attr}:{where}",
+                f"direct time.{node.func.attr}() — inject a clock "
+                f"(self._clock) or use the `x if now is None` guard"))
+    return violations

@@ -1,0 +1,63 @@
+"""Rule 5: no hardcoded timeout/interval literals in core call sites.
+
+Flags positive numeric constants appearing as:
+- a ``timeout=`` keyword argument to any call (including inside an IfExp
+  arm, e.g. ``recv(timeout=0.0 if busy else 0.02)``);
+- the first positional argument of ``time.sleep(...)``;
+- the first positional argument of ``<x>.wait(...)`` (event/condition).
+
+Zero is allowed (non-blocking poll, not a tunable). Function-signature
+defaults and dataclass field defaults are intentionally not flagged —
+that is exactly where a tunable belongs (``BBConfig``, ``StageConfig``,
+ctor kwargs); the rule pushes call sites to route through them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List
+
+from .report import Violation
+
+
+def _positive_consts(node: ast.AST) -> Iterable[ast.Constant]:
+    """Positive numeric constants inside a (possibly conditional) expr."""
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, (int, float)) \
+                and not isinstance(node.value, bool) and node.value > 0:
+            yield node
+    elif isinstance(node, ast.IfExp):
+        yield from _positive_consts(node.body)
+        yield from _positive_consts(node.orelse)
+
+
+def check(trees: Dict[str, ast.Module]) -> List[Violation]:
+    violations: List[Violation] = []
+    for fname, tree in trees.items():
+        if fname == "locktrack.py":
+            continue
+        for call in ast.walk(tree):
+            if not isinstance(call, ast.Call):
+                continue
+            hits: List[ast.Constant] = []
+            what = ""
+            for kw in call.keywords:
+                if kw.arg == "timeout":
+                    hits.extend(_positive_consts(kw.value))
+                    what = "timeout="
+            fn = call.func
+            if isinstance(fn, ast.Attribute) and call.args:
+                if fn.attr == "sleep" and isinstance(fn.value, ast.Name) \
+                        and fn.value.id == "time":
+                    hits.extend(_positive_consts(call.args[0]))
+                    what = "time.sleep"
+                elif fn.attr == "wait":
+                    hits.extend(_positive_consts(call.args[0]))
+                    what = ".wait"
+            target = ast.unparse(call.func)
+            for c in hits:
+                violations.append(Violation(
+                    "literals", fname, call.lineno,
+                    f"{what}:{target}:{c.value}",
+                    f"hardcoded interval {c.value} in {target}(...) — "
+                    f"route through BBConfig / a ctor parameter"))
+    return violations

@@ -1,0 +1,135 @@
+"""Rule 2 (static half): lexical lock-acquisition graph must be acyclic.
+
+Walks every function, tracking a stack of ``with <lock-ish expr>`` blocks.
+A lock-ish expression is an attribute or name whose final component
+contains "lock" or "mutex" (``self._lock``, ``src_ep._lock``, ``op.lock``).
+Lock names are canonicalised to ``Class.attr`` where possible so that
+``self._lock`` inside BBClient and inside LogStore become distinct nodes.
+Nested with-blocks add directed edges outer -> inner; any cycle (including
+a same-name self edge, which is unordered same-class nesting) is flagged.
+
+The runtime half lives in ``src/repro/core/locktrack.py`` and catches
+orders this lexical scan cannot see (lock taken in a callee).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .report import Violation
+
+# variable-name -> owning class, for locks reached through a non-self base
+TYPE_HINTS = {"src_ep": "Endpoint", "ep": "Endpoint", "dst_ep": "Endpoint"}
+
+
+def _lock_name(expr: ast.AST, cls: Optional[str]) -> Optional[str]:
+    """Canonical lock node name for a with-item expression, else None."""
+    if isinstance(expr, ast.Attribute):
+        leaf = expr.attr
+        if "lock" not in leaf.lower() and "mutex" not in leaf.lower():
+            return None
+        base = expr.value
+        if isinstance(base, ast.Name):
+            if base.id == "self":
+                return f"{cls or '?'}.{leaf}"
+            owner = TYPE_HINTS.get(base.id, base.id)
+            return f"{owner}.{leaf}"
+        return f"{ast.unparse(base)}.{leaf}"
+    if isinstance(expr, ast.Name):
+        if "lock" in expr.id.lower() or "mutex" in expr.id.lower():
+            return expr.id
+        return None
+    return None
+
+
+def walk_with_stacks(fn: ast.AST, cls: Optional[str]):
+    """Yield (node, held) for every statement/expr in ``fn``, where
+    ``held`` is the ordered tuple of lock names lexically held there.
+    Nested function/lambda bodies are not entered (they run elsewhere)."""
+
+    def visit(node: ast.AST, held: Tuple[str, ...]):
+        yield node, held
+        if isinstance(node, ast.With):
+            inner = held
+            for item in node.items:
+                name = _lock_name(item.context_expr, cls)
+                if name is not None:
+                    inner = inner + (name,)
+                else:
+                    yield item.context_expr, held
+            for stmt in node.body:
+                yield from visit(stmt, inner)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not fn:
+            return
+        for child in ast.iter_child_nodes(node):
+            yield from visit(child, held)
+
+    yield from visit(fn, ())
+
+
+def iter_functions(tree: ast.Module):
+    """Yield (function node, enclosing class name or None)."""
+    def scan(node: ast.AST, cls: Optional[str]):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                yield from scan(child, child.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield child, cls
+                yield from scan(child, cls)
+            else:
+                yield from scan(child, cls)
+    yield from scan(tree, None)
+
+
+def check(trees: Dict[str, ast.Module]) -> List[Violation]:
+    # edge -> first site observed
+    edges: Dict[Tuple[str, str], Tuple[str, int]] = {}
+    violations: List[Violation] = []
+
+    for fname, tree in trees.items():
+        for fn, cls in iter_functions(tree):
+            for node, held in walk_with_stacks(fn, cls):
+                if not (isinstance(node, ast.With) and len(held) >= 1):
+                    continue
+                names = [_lock_name(i.context_expr, cls)
+                         for i in node.items]
+                for inner in filter(None, names):
+                    for outer in held:
+                        if outer == inner:
+                            violations.append(Violation(
+                                "locks", fname, node.lineno,
+                                f"self-nest:{inner}",
+                                f"{inner} lexically nested inside itself "
+                                f"(unordered same-class nesting)"))
+                            continue
+                        edges.setdefault((outer, inner),
+                                         (fname, node.lineno))
+
+    adj: Dict[str, Set[str]] = {}
+    for outer, inner in edges:
+        adj.setdefault(outer, set()).add(inner)
+
+    def reachable(src: str, dst: str) -> bool:
+        seen: Set[str] = set()
+        stack = [src]
+        while stack:
+            n = stack.pop()
+            if n == dst:
+                return True
+            if n in seen:
+                continue
+            seen.add(n)
+            stack.extend(adj.get(n, ()))
+        return False
+
+    for (outer, inner), (fname, line) in sorted(edges.items(),
+                                                key=lambda kv: kv[1]):
+        if reachable(inner, outer):
+            violations.append(Violation(
+                "locks", fname, line, f"cycle:{outer}->{inner}",
+                f"lock-order cycle: {outer} -> {inner} here, but a "
+                f"{inner} -> ... -> {outer} path exists elsewhere"))
+
+    return violations

@@ -1,0 +1,371 @@
+"""Rule 1: protocol completeness.
+
+Cross-checks every transport ``send``/``request``/``request_async``/``reply``
+call site against the ``_on_<kind>`` handler tables of the dispatcher
+classes (manager/server) and the compare-style dispatch the client uses:
+
+- a non-reply kind sent toward a role with no handler there (the silent
+  black-hole: today a typo'd kind just times out);
+- a dead ``_on_<kind>`` handler that nothing in the codebase sends;
+- a payload key a handler requires (``msg.payload["k"]``) that no send
+  site for that kind constructs.
+
+Replies are exempt from the needs-handler check (they are consumed by the
+blocking ``request`` waiter or the async sink, not dispatched), but they
+do count as senders for the dead-handler check. Destination expressions
+are resolved to roles {manager, server, client} heuristically from the
+dst text plus the enclosing for-loop iterable; ``msg.src`` destinations
+mean "whoever sent this" and are satisfied by any role handling the kind.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .report import Violation
+
+SEND_ATTRS = {"send", "request", "request_async", "reply"}
+SKIP_MODULES = {"transport.py", "locktrack.py"}
+
+ROLE_OF_MODULE = {"client.py": "client", "filesystem.py": "client",
+                  "system.py": "client", "manager.py": "manager",
+                  "server.py": "server"}
+
+# kinds broadcast to mixed destination lists the text heuristic can't split
+KIND_DEST_OVERRIDES = {"ring": {"server", "client"},
+                       "ring_update": {"server", "client"}}
+
+SERVER_DST_HINTS = ("server", "ring", "owner", "peer", "nxt", "pred", "succ",
+                    "suspect", "target", "primary", "replica")
+
+
+class SendSite:
+    def __init__(self, file: str, line: int, kind: str, roles: Set[str],
+                 is_reply: bool, payload_keys: Optional[Set[str]]):
+        self.file = file
+        self.line = line
+        self.kind = kind
+        self.roles = roles            # destination roles, may contain "*"
+        self.is_reply = is_reply
+        self.payload_keys = payload_keys   # None = unresolvable payload expr
+
+
+def _attach_parents(tree: ast.AST):
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._bb_parent = node   # type: ignore[attr-defined]
+
+
+def _enclosing(node: ast.AST, *types) -> Optional[ast.AST]:
+    cur = getattr(node, "_bb_parent", None)
+    while cur is not None:
+        if isinstance(cur, types):
+            return cur
+        cur = getattr(cur, "_bb_parent", None)
+    return None
+
+
+def _arg(call: ast.Call, pos: int, kw: str) -> Optional[ast.AST]:
+    if len(call.args) > pos:
+        return call.args[pos]
+    for k in call.keywords:
+        if k.arg == kw:
+            return k.value
+    return None
+
+
+def _const_str(node: Optional[ast.AST]) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def _dict_keys(node: ast.AST) -> Optional[Set[str]]:
+    """Key set of a fully-literal dict expression, else None."""
+    if not isinstance(node, ast.Dict):
+        return None
+    keys: Set[str] = set()
+    for k in node.keys:
+        if k is None:                       # ** expansion: unresolvable
+            return None
+        if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+            return None
+        keys.add(k.value)
+    return keys
+
+
+def _resolve_payload_keys(node: Optional[ast.AST]) -> Optional[Set[str]]:
+    if node is None:
+        return set()                        # payload defaults to None
+    direct = _dict_keys(node)
+    if direct is not None:
+        return direct
+    if isinstance(node, ast.Name):          # single local dict-literal alias
+        fn = _enclosing(node, ast.FunctionDef, ast.AsyncFunctionDef,
+                        ast.Lambda)
+        if fn is None or isinstance(fn, ast.Lambda):
+            return None
+        assigns = [a for a in ast.walk(fn)
+                   if isinstance(a, ast.Assign)
+                   and any(isinstance(t, ast.Name) and t.id == node.id
+                           for t in a.targets)]
+        if len(assigns) == 1:
+            return _dict_keys(assigns[0].value)
+    return None
+
+
+def _dst_roles(call: ast.Call, attr: str, kind: str) -> Set[str]:
+    if kind in KIND_DEST_OVERRIDES:
+        return set(KIND_DEST_OVERRIDES[kind])
+    if attr == "reply":                     # goes back to msg.src
+        return {"*"}
+    dst = _arg(call, 1, "dst")
+    if dst is None:
+        return {"server"}
+    text = ast.unparse(dst)
+    if isinstance(dst, ast.Name):
+        loop = _enclosing(call, ast.For)
+        while loop is not None:
+            tgt = ast.unparse(loop.target)
+            if dst.id in tgt.replace(",", " ").split():
+                text += " " + ast.unparse(loop.iter)
+                break
+            loop = _enclosing(loop, ast.For)
+    roles: Set[str] = set()
+    low = text.lower()
+    if ".src" in low:
+        return {"*"}
+    if "manager" in low:
+        roles.add("manager")
+    if "client" in low:
+        roles.add("client")
+    if any(h in low for h in SERVER_DST_HINTS):
+        roles.add("server")
+    return roles or {"server"}
+
+
+def _collect_wrappers(trees: Dict[str, ast.Module]) -> Dict[str, Tuple[int, int, Set[str]]]:
+    """Functions that forward a parameter as the transport kind argument.
+
+    Returns {func_name: (kind_pos, payload_pos, dst_roles)} with positions
+    as seen by the caller (i.e. with a leading ``self`` already dropped).
+    """
+    out: Dict[str, Tuple[int, int, Set[str]]] = {}
+    for tree in trees.values():
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            params = [a.arg for a in fn.args.args]
+            shift = 1 if params and params[0] == "self" else 0
+            for call in ast.walk(fn):
+                if not (isinstance(call, ast.Call)
+                        and isinstance(call.func, ast.Attribute)
+                        and call.func.attr in SEND_ATTRS
+                        and "transport" in ast.unparse(call.func.value)):
+                    continue
+                kind = _arg(call, 2, "kind")
+                if not (isinstance(kind, ast.Name) and kind.id in params):
+                    continue
+                payload = _arg(call, 3, "payload")
+                if not (isinstance(payload, ast.Name)
+                        and payload.id in params):
+                    continue
+                out[fn.name] = (params.index(kind.id) - shift,
+                                params.index(payload.id) - shift,
+                                _dst_roles(call, call.func.attr, ""))
+    return out
+
+
+def _collect_sites(trees: Dict[str, ast.Module]) -> List[SendSite]:
+    wrappers = _collect_wrappers(trees)
+    sites: List[SendSite] = []
+    for fname, tree in trees.items():
+        for call in ast.walk(tree):
+            if not (isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Attribute)):
+                continue
+            attr = call.func.attr
+            if attr in SEND_ATTRS \
+                    and "transport" in ast.unparse(call.func.value):
+                kind = _const_str(_arg(call, 2, "kind"))
+                if kind is None:
+                    continue                # wrapper-internal, handled below
+                is_reply = attr == "reply" or any(
+                    k.arg == "reply_to" for k in call.keywords)
+                sites.append(SendSite(
+                    fname, call.lineno, kind,
+                    _dst_roles(call, attr, kind), is_reply,
+                    _resolve_payload_keys(_arg(call, 3, "payload"))))
+            elif attr in wrappers:
+                kpos, ppos, roles = wrappers[attr]
+                kind = _const_str(_arg(call, kpos, "kind"))
+                if kind is None:
+                    continue
+                sites.append(SendSite(
+                    fname, call.lineno, kind, set(roles), False,
+                    _resolve_payload_keys(_arg(call, ppos, "payload"))))
+    return sites
+
+
+def _is_dispatcher(cls: ast.ClassDef) -> bool:
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "getattr":
+            for a in node.args:
+                if isinstance(a, ast.JoinedStr) and any(
+                        isinstance(v, ast.Constant) and "_on_" in str(v.value)
+                        for v in a.values):
+                    return True
+    return False
+
+
+def _class_role(cls: ast.ClassDef, fname: str) -> str:
+    for marker, role in (("Manager", "manager"), ("Server", "server"),
+                         ("Client", "client")):
+        if marker in cls.name:
+            return role
+    return ROLE_OF_MODULE.get(fname, "server")
+
+
+def _handler_keys(fn: ast.FunctionDef) -> Tuple[Set[str], int]:
+    """Required payload keys (subscript reads) of a ``_on_*`` handler.
+
+    Only reads of the handler's own message parameter count — other
+    messages in scope (e.g. an original request stashed in pending state)
+    were constructed elsewhere and are checked at their own kind.
+    """
+    params = [a.arg for a in fn.args.args]
+    msg_param = params[1] if len(params) > 1 else None
+    aliases = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) \
+                and isinstance(node.value, ast.Attribute) \
+                and node.value.attr == "payload" \
+                and isinstance(node.value.value, ast.Name) \
+                and node.value.value.id == msg_param \
+                and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            aliases.add(node.targets[0].id)
+    required: Set[str] = set()
+    line = fn.lineno
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.ctx, ast.Load):
+            base = node.value
+            is_payload = (isinstance(base, ast.Attribute)
+                          and base.attr == "payload"
+                          and isinstance(base.value, ast.Name)
+                          and base.value.id == msg_param) \
+                or (isinstance(base, ast.Name) and base.id in aliases)
+            key = _const_str(node.slice)
+            if is_payload and key is not None:
+                required.add(key)
+    return required, line
+
+
+def _compare_handled(trees: Dict[str, ast.Module]) -> Dict[str, Set[str]]:
+    """Kinds consumed via ``x.kind == "lit"`` / ``x.kind in (...)``."""
+    out: Dict[str, Set[str]] = {}
+    for fname, tree in trees.items():
+        role = ROLE_OF_MODULE.get(fname)
+        if role is None:
+            continue
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Compare)
+                    and isinstance(node.left, ast.Attribute)
+                    and node.left.attr == "kind"):
+                continue
+            for cmp in node.comparators:
+                if isinstance(cmp, ast.Constant) \
+                        and isinstance(cmp.value, str):
+                    out.setdefault(role, set()).add(cmp.value)
+                elif isinstance(cmp, (ast.Tuple, ast.List, ast.Set)):
+                    for el in cmp.elts:
+                        s = _const_str(el)
+                        if s is not None:
+                            out.setdefault(role, set()).add(s)
+    return out
+
+
+def check(trees: Dict[str, ast.Module]) -> List[Violation]:
+    trees = {f: t for f, t in trees.items() if f not in SKIP_MODULES}
+    for tree in trees.values():
+        _attach_parents(tree)
+
+    sites = _collect_sites(trees)
+    compare_handled = _compare_handled(trees)
+
+    # role -> {kind: (required payload keys, def line, file)}
+    handlers: Dict[str, Dict[str, Tuple[Set[str], int, str]]] = {}
+    for fname, tree in trees.items():
+        for cls in ast.walk(tree):
+            if not (isinstance(cls, ast.ClassDef) and _is_dispatcher(cls)):
+                continue
+            role = _class_role(cls, fname)
+            table = handlers.setdefault(role, {})
+            for fn in cls.body:
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and fn.name.startswith("_on_"):
+                    keys, line = _handler_keys(fn)
+                    table[fn.name[4:]] = (keys, line, fname)
+
+    violations: List[Violation] = []
+
+    # (a) sent kinds with no handler at any resolved destination role
+    for site in sites:
+        if site.is_reply:
+            continue
+        roles = site.roles
+        all_roles = set(handlers) | set(compare_handled)
+        targets = sorted(all_roles) if "*" in roles else sorted(roles)
+        handled_somewhere = any(
+            site.kind in handlers.get(r, ()) or
+            site.kind in compare_handled.get(r, ())
+            for r in targets)
+        if "*" in roles:
+            if not handled_somewhere:
+                violations.append(Violation(
+                    "protocol", site.file, site.line,
+                    f"unhandled:{site.kind}",
+                    f'kind "{site.kind}" sent to msg.src but no role '
+                    f"handles it"))
+            continue
+        for r in targets:
+            if site.kind not in handlers.get(r, ()) \
+                    and site.kind not in compare_handled.get(r, ()):
+                violations.append(Violation(
+                    "protocol", site.file, site.line,
+                    f"unhandled:{site.kind}:{r}",
+                    f'kind "{site.kind}" sent toward {r} which has no '
+                    f"handler for it (silent black-hole)"))
+
+    # (b) handlers nothing sends (replies count as senders here)
+    sent_kinds = {s.kind for s in sites}
+    for role, table in handlers.items():
+        for kind, (_keys, line, fname) in table.items():
+            if kind not in sent_kinds:
+                violations.append(Violation(
+                    "protocol", fname, line, f"dead-handler:{role}:{kind}",
+                    f"_on_{kind} on {role} is dead: nothing sends "
+                    f'"{kind}"'))
+
+    # (c) payload keys a handler requires that no send site constructs
+    by_kind: Dict[str, List[SendSite]] = {}
+    for s in sites:
+        by_kind.setdefault(s.kind, []).append(s)
+    for role, table in handlers.items():
+        for kind, (keys, line, fname) in table.items():
+            ksites = by_kind.get(kind, [])
+            if not ksites or any(s.payload_keys is None for s in ksites):
+                continue                    # some payload unresolvable: skip
+            constructed: Set[str] = set()
+            for s in ksites:
+                constructed |= s.payload_keys or set()
+            for key in sorted(keys - constructed):
+                violations.append(Violation(
+                    "protocol", fname, line,
+                    f"missing-key:{role}:{kind}:{key}",
+                    f'_on_{kind} on {role} reads payload["{key}"] but no '
+                    f'send site for "{kind}" constructs it'))
+
+    return violations

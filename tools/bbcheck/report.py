@@ -1,0 +1,44 @@
+"""Violation records + shrinking-only allowlist handling."""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str          # "protocol" | "locks" | "blocking" | "clocks" | "literals"
+    file: str
+    line: int
+    ident: str         # stable identity, line-number-free (allowlist key)
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.file}:{self.ident}"
+
+    def __str__(self) -> str:
+        return f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+
+
+def load_allowlist(path: str) -> List[str]:
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except FileNotFoundError:
+        return []
+    if not isinstance(data, list) or not all(isinstance(x, str) for x in data):
+        raise ValueError(f"{path}: allowlist must be a JSON list of strings")
+    return data
+
+
+def apply_allowlist(violations: List[Violation], allow: List[str],
+                    ) -> Tuple[List[Violation], List[Violation], List[str]]:
+    """Split into (new, allowed, stale-allowlist-entries)."""
+    allowset = set(allow)
+    new = [v for v in violations if v.key not in allowset]
+    allowed = [v for v in violations if v.key in allowset]
+    hit = {v.key for v in allowed}
+    stale = sorted(allowset - hit)
+    return new, allowed, stale
