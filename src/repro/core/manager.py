@@ -53,6 +53,7 @@ class BBManager(threading.Thread):
         self.clients: Set[str] = set()
         self.flush_done: Dict[int, Set[str]] = {}
         self.flush_bytes: Dict[int, int] = {}
+        self.flush_ledger_cap = 256     # completed/aborted epochs retained
         self._registered: Set[str] = set()
         self._stop = threading.Event()
         self.ring_ready = threading.Event()
@@ -110,18 +111,20 @@ class BBManager(threading.Thread):
             if self._stage is not None \
                     and now - self._stage["started"] > self.drain_epoch_timeout:
                 self._abort_stage("timeout")
-            with self._flush_lock:
-                # a user epoch wedged past any plausible completion must not
-                # block drain micro-epochs forever
-                stale = now - 4 * self.drain_epoch_timeout
-                for e in [e for e, t in self._user_flushes.items()
-                          if t < stale]:
-                    del self._user_flushes[e]
+            self._sweep_stale_flushes(now)
             if msg is None:
                 continue
             handler = getattr(self, f"_on_{msg.kind}", None)
             if handler is not None:
                 handler(msg)
+
+    def _sweep_stale_flushes(self, now: float):
+        """A user epoch wedged past any plausible completion must not
+        block drain micro-epochs forever."""
+        stale = now - 4 * self.drain_epoch_timeout
+        with self._flush_lock:
+            for e in [e for e, t in self._user_flushes.items() if t < stale]:
+                self._user_flushes.pop(e, None)
 
     # ------------------------------------------------------------- handlers
     def _on_register(self, msg: Message):
@@ -182,6 +185,13 @@ class BBManager(threading.Thread):
         self.flush_done.setdefault(epoch, set()).add(msg.payload["server"])
         self.flush_bytes[epoch] = self.flush_bytes.get(epoch, 0) \
             + msg.payload.get("bytes", 0)
+        # completion ledgers are bounded FIFO caches: epochs that aborted
+        # (their flush_done never reaches quorum) would otherwise leak an
+        # entry forever
+        while len(self.flush_done) > self.flush_ledger_cap:
+            e = next(iter(self.flush_done))
+            self.flush_done.pop(e, None)
+            self.flush_bytes.pop(e, None)
         with self._flush_lock:
             if epoch in self._user_flushes and self.flush_complete(epoch):
                 del self._user_flushes[epoch]
@@ -406,6 +416,10 @@ class BBManager(threading.Thread):
         micro-epochs: overlapping epochs would share server-side shuffle
         buffers and lookup sizes, so wait (bounded) for an in-flight drain
         to finish or abort before broadcasting."""
+        if epoch >= DRAIN_EPOCH_BASE:
+            raise ValueError(
+                f"user flush epoch {epoch} collides with the reserved "
+                f"drain/stage id space (must be < {DRAIN_EPOCH_BASE})")
         deadline = self._clock() + self.drain_epoch_timeout
         while self._drain is not None and self._clock() < deadline:
             time.sleep(self.drain_serialize_poll)
