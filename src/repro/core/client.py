@@ -148,10 +148,17 @@ class BBClient:
         # legacy-shim error snapshot (wait_acks/failed_keys compat)
         self._failed: List[str] = []
         self.last_failed: List[str] = []
+        # counters are bumped from API callers, the ACK pump, and expiry
+        # threads concurrently; a dedicated leaf lock keeps them exact
+        self._stats_lock = locktrack.lock("BBClient._stats_lock")
         self.stats = {"puts": 0, "put_bytes": 0, "redirects": 0,
                       "failovers": 0, "gets": 0, "bb_hits": 0,
                       "async_puts": 0, "batched_puts": 0, "batches": 0,
                       "evicted_reads": 0}
+
+    def _bump(self, stat: str, n: int = 1):
+        with self._stats_lock:
+            self.stats[stat] += n
 
     # ------------------------------------------------------------ membership
     def connect(self, timeout: float = 10.0):
@@ -253,8 +260,8 @@ class BBClient:
         while their lane's congestion window has room — a background flood
         parks client-side instead of stuffing the server's inbox ahead of
         a checkpoint burst."""
-        self.stats["puts"] += 1
-        self.stats["put_bytes"] += len(value)
+        self._bump("puts")
+        self._bump("put_bytes", len(value))
         lane = qos.lane_index(lane)
         fut = BBFuture(key)
         op = WriteOp(key, value, file, offset, fut, lane=lane)
@@ -357,8 +364,8 @@ class BBClient:
     def _issue_locked(self, ops: List[WriteOp], target: str, batch: bool):
         """Fire ops at ``target`` as one message. Caller holds _op_lock."""
         if batch:
-            self.stats["batches"] += 1
-            self.stats["batched_puts"] += len(ops)
+            self._bump("batches")
+            self._bump("batched_puts", len(ops))
             payload = {"items": [{"key": o.key, "value": o.value,
                                   "file": o.file, "offset": o.offset}
                                  for o in ops],
@@ -471,9 +478,11 @@ class BBClient:
     def _on_ack(self, msg: Message):
         with self._op_lock:
             ent = self._pending.pop(msg.reply_to, None)
-        if ent is None:
-            return                          # late reply for a re-issued op
-        self._last_reply[ent.target] = self._clock()
+            if ent is None:
+                return                      # late reply for a re-issued op
+            # written here (pump), read by _check_deadlines — keep both
+            # under _op_lock like the rest of the pipeline state
+            self._last_reply[ent.target] = self._clock()
         # backpressure (ISSUE 5): every server reply piggybacks its store
         # occupancy; the congestion windows shrink background lanes first
         occ = msg.payload.get("occupancy") if msg.payload else None
@@ -491,7 +500,7 @@ class BBClient:
                 op.future._set_result(True)
             return
         if msg.kind == "redirect":
-            self.stats["redirects"] += 1
+            self._bump("redirects")
             target = msg.payload["target"]
             with self._lock:
                 for op in ent.ops:
@@ -567,7 +576,7 @@ class BBClient:
         """Paper §IV-B2: confirm failure via the suspect's predecessor, then
         let the manager broadcast; fail over to the replica successor.
         Returns the failover target, or None when no alive server remains."""
-        self.stats["failovers"] += 1
+        self._bump("failovers")
         with self._lock:
             alive = [s for s in self.ring if s not in self.dead]
         pred = None
@@ -669,7 +678,7 @@ class BBClient:
                   ) -> BBFuture:
         """[compat] Pipelined put; completion is observed via wait_acks()
         (legacy) or the returned future (preferred)."""
-        self.stats["async_puts"] += 1
+        self._bump("async_puts")
         return self.submit(key, value, file=file, offset=offset,
                            coalesce=coalesce)
 
@@ -696,7 +705,7 @@ class BBClient:
         reply carries the chunk's (file, offset, length) residency record,
         and the bytes come back via the post-shuffle lookup table / PFS —
         callers never observe eviction."""
-        self.stats["gets"] += 1
+        self._bump("gets")
         try:
             replicas = self.replica_set(key)
         except RuntimeError:
@@ -706,7 +715,7 @@ class BBClient:
             r = self.transport.request(self.ep, target, "get", {"key": key},
                                        timeout=self.read_timeout)
             if r is not None and r.payload.get("hit"):
-                self.stats["bb_hits"] += 1
+                self._bump("bb_hits")
                 return r.payload["value"]
             if r is not None and evicted is None:
                 evicted = r.payload.get("evicted")
@@ -714,7 +723,7 @@ class BBClient:
             file, offset, length = evicted
             data = self.read_file(file, offset, length)
             if data is not None:
-                self.stats["evicted_reads"] += 1
+                self._bump("evicted_reads")
                 return data
         return None
 
@@ -773,11 +782,11 @@ class BBClient:
     def get_at(self, server: str, key: str) -> Optional[bytes]:
         """Fetch a value from one specific server (manifest-directed read —
         bypasses placement, which only knows where THIS client writes)."""
-        self.stats["gets"] += 1
+        self._bump("gets")
         r = self.transport.request(self.ep, server, "get", {"key": key},
                                    timeout=self.read_timeout)
         if r is not None and r.payload.get("hit"):
-            self.stats["bb_hits"] += 1
+            self._bump("bb_hits")
             return r.payload["value"]
         return None
 
