@@ -370,8 +370,10 @@ class BBFile:
         self._thru_fh.seek(offset)
         self._thru_fh.write(data)
         self._thru_fh.flush()
-        fs.bypass_stats["writes"] += 1
-        fs.bypass_stats["bytes"] += len(data)
+        # many BBFile handles (one per writer thread) share these counters
+        with fs._pfs_lock:
+            fs.bypass_stats["writes"] += 1
+            fs.bypass_stats["bytes"] += len(data)
         hi = offset + len(data)
         if self._thru_run is not None and offset == self._thru_run[1]:
             self._thru_run[1] = hi
