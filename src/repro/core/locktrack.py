@@ -19,8 +19,10 @@ exactly the invariant worth enforcing.
 """
 from __future__ import annotations
 
+import json
 import sys
 import threading
+import traceback
 from typing import Dict, List, Optional
 
 
@@ -83,7 +85,8 @@ class LockOrderTracker:
                         self.inversions.append({
                             "kind": "same-name-nesting", "name": inner,
                             "site": site,
-                            "thread": threading.current_thread().name})
+                            "thread": threading.current_thread().name,
+                            "stack": traceback.format_stack()})
                         continue
                     known = self.edges.setdefault(outer, {})
                     if inner in known:
@@ -94,9 +97,30 @@ class LockOrderTracker:
                             "first": f"{inner} -> {outer} "
                                      f"(seen {self.edges[inner].get(outer)})",
                             "second": f"{outer} -> {inner}", "site": site,
-                            "thread": threading.current_thread().name})
+                            "thread": threading.current_thread().name,
+                            "stack": traceback.format_stack()})
                     known[inner] = site
         held.append([lk, lk.name, 1])
+
+    # ------------------------------------------------------------ artifact
+    def dump(self, path: str) -> str:
+        """Write the acquisition digraph, every recorded inversion (with
+        the stack captured when it was recorded), and a snapshot of each
+        live thread's current stack to a JSON artifact — enough to
+        reconstruct the interleaving post-mortem without re-running."""
+        frames = sys._current_frames()
+        threads = {}
+        for t in threading.enumerate():
+            f = frames.get(t.ident)
+            threads[t.name] = traceback.format_stack(f) if f is not None \
+                else []
+        with self._mu:
+            report = {"edges": self.edges,
+                      "inversions": self.inversions,
+                      "threads": threads}
+            with open(path, "w") as fh:
+                json.dump(report, fh, indent=2, sort_keys=True)
+        return path
 
     def on_released(self, lk: "TrackedLock"):
         held = self._held()

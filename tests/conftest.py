@@ -1,5 +1,6 @@
 import os
 import sys
+import tempfile
 
 # Tests run on the single real CPU device (the dry-run sets its own
 # XLA_FLAGS in a separate process). Multi-device tests spawn subprocesses.
@@ -24,5 +25,14 @@ def _lock_order_tracking():
     tr = locktrack.enable()
     yield
     locktrack.disable()
-    assert not tr.inversions, \
-        f"lock-order inversions recorded during test run: {tr.inversions}"
+    if tr.inversions:
+        # post-mortem artifact: acquisition digraph, inversion stacks,
+        # and every live thread's current stack
+        path = os.environ.get(
+            "BB_LOCK_ARTIFACT",
+            os.path.join(tempfile.gettempdir(), "bb-lock-inversions.json"))
+        tr.dump(path)
+        pytest.fail(
+            f"lock-order inversions recorded during test run "
+            f"(digraph + thread stacks dumped to {path}): "
+            f"{[{k: v for k, v in inv.items() if k != 'stack'} for inv in tr.inversions]}")
