@@ -6,9 +6,16 @@
 #   scripts/ci.sh --lint         # bbcheck static analysis over the core:
 #                                # protocol completeness, lock-order graph,
 #                                # no blocking under lock, clock injection,
-#                                # no hardcoded interval literals. Fails on
-#                                # any violation not in the (shrinking-only)
-#                                # committed allowlist
+#                                # no hardcoded interval literals, payload
+#                                # schema agreement, epoch-table lifecycles,
+#                                # thread-ownership races. Fails on any
+#                                # violation not in the (shrinking-only)
+#                                # committed allowlist, on docs/PROTOCOL.md
+#                                # drifting from the code, or on the lint
+#                                # pass blowing its 10s wall-clock budget.
+#                                # Machine-readable report lands at
+#                                # $BBCHECK_JSON (default
+#                                # /tmp/bbcheck-report.json)
 #   scripts/ci.sh --bench-smoke  # tiny ingest benchmark through the
 #                                # BBFileSystem API (fails on zero
 #                                # bandwidth), then a capped over-capacity
@@ -41,7 +48,18 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--lint" ]]; then
     shift
-    exec timeout "${CI_TIMEOUT:-120}" python -m tools.bbcheck "$@"
+    report="${BBCHECK_JSON:-/tmp/bbcheck-report.json}"
+    SECONDS=0
+    timeout "${CI_TIMEOUT:-120}" python -m tools.bbcheck \
+        --json "$report" --check-protocol docs/PROTOCOL.md "$@"
+    # the whole point of a pre-test lint is that it is effectively free:
+    # all eight AST passes plus the registry render must stay under 10s
+    if (( SECONDS >= 10 )); then
+        echo "ci: bbcheck blew its 10s budget (took ${SECONDS}s)" >&2
+        exit 1
+    fi
+    echo "ci: bbcheck report at $report (took ${SECONDS}s)"
+    exit 0
 fi
 
 if [[ "${1:-}" == "--bench-smoke" ]]; then

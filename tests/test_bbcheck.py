@@ -1,9 +1,13 @@
-"""bbcheck (ISSUE 6): each rule fires on seeded-violation fixtures, the
-allowlist is shrinking-only, the runtime lock tracker records inversions,
-the server's unknown-kind black-hole detector reports instead of silently
-dropping, and the real core passes every rule with an empty allowlist.
+"""bbcheck (ISSUE 6 + 7): each rule fires on seeded-violation fixtures,
+the allowlist is shrinking-only, the runtime lock tracker records
+inversions (and dumps a post-mortem artifact), the server's unknown-kind
+black-hole detector reports instead of silently dropping, the generated
+protocol registry regenerates byte-identical, and the real core passes
+every rule with an empty allowlist.
 """
 import ast
+import json
+import os
 import textwrap
 import time
 
@@ -12,15 +16,21 @@ import pytest
 from repro.core import locktrack
 from repro.core.locktrack import LockOrderTracker, TrackedLock
 from repro.core.system import BBConfig, BurstBufferSystem
-from tools.bbcheck import blocking, clocks, literals, locks, protocol
+from tools.bbcheck import blocking, clocks, epochs, literals, locks, \
+    ownership, protocol, schema
 from tools.bbcheck.__main__ import DEFAULT_ALLOWLIST, DEFAULT_ROOT, \
     parse_tree
 from tools.bbcheck.report import Violation, apply_allowlist
 
 
 def trees(**srcs):
-    return {name: ast.parse(textwrap.dedent(src))
-            for name, src in srcs.items()}
+    out = {}
+    for name, src in srcs.items():
+        src = textwrap.dedent(src)
+        tree = ast.parse(src)
+        tree._bb_source = src       # ownership reads markers off the tree
+        out[name] = tree
+    return out
 
 
 def rules_of(violations):
@@ -309,6 +319,391 @@ def test_unknown_kind_is_reported_not_dropped():
                 break
             time.sleep(0.05)
         assert sys_.pressure()["servers"]["server/0"]["unknown_kinds"] == 2
+
+
+# ---------------------------------------------------------------- rule 6
+def test_schema_typo_key_fires():
+    vs = schema.check(trees(**{
+        "server.py": """
+            class FixServer:
+                def _dispatch(self, msg):
+                    handler = getattr(self, f"_on_{msg.kind}", None)
+
+                def _on_put(self, msg):
+                    v = msg.payload["value"]
+                    lane = msg.payload.get("lane_idx")
+            """,
+        "client.py": """
+            class FixClient:
+                def go(self, server):
+                    self.transport.send(self.tname, server, "put",
+                                        {"value": b"v", "lane": 0})
+            """}))
+    assert any(v.ident == "typo:server:put:lane_idx" for v in vs), vs
+
+
+def test_schema_injected_key_is_not_a_typo():
+    vs = schema.check(trees(**{
+        "server.py": """
+            class FixServer:
+                def _dispatch(self, msg):
+                    handler = getattr(self, f"_on_{msg.kind}", None)
+
+                def _on_put(self, msg):
+                    if msg.payload.get("_stale"):
+                        return
+                    v = msg.payload["value"]
+
+                def truncate(self):
+                    for queued in self._laneq.entries():
+                        queued.payload["_stale"] = True
+            """,
+        "client.py": """
+            class FixClient:
+                def go(self, server):
+                    self.transport.send(self.tname, server, "put",
+                                        {"value": b"v"})
+            """}))
+    assert vs == []
+
+
+def test_schema_required_read_of_optional_key_fires():
+    vs = schema.check(trees(**{
+        "server.py": """
+            class FixServer:
+                def _dispatch(self, msg):
+                    handler = getattr(self, f"_on_{msg.kind}", None)
+
+                def _on_put(self, msg):
+                    f = msg.payload["file"]
+            """,
+        "client.py": """
+            class FixClient:
+                def go(self, server):
+                    self.transport.send(self.tname, server, "put",
+                                        {"value": b"v", "file": "f"})
+                    self.transport.send(self.tname, server, "put",
+                                        {"value": b"v"})
+            """}))
+    assert any(v.ident == "optional:server:put:file" for v in vs), vs
+    # .get with a default is the sanctioned escape
+    vs = schema.check(trees(**{
+        "server.py": """
+            class FixServer:
+                def _dispatch(self, msg):
+                    handler = getattr(self, f"_on_{msg.kind}", None)
+
+                def _on_put(self, msg):
+                    f = msg.payload.get("file", None)
+            """,
+        "client.py": """
+            class FixClient:
+                def go(self, server):
+                    self.transport.send(self.tname, server, "put",
+                                        {"value": b"v", "file": "f"})
+                    self.transport.send(self.tname, server, "put",
+                                        {"value": b"v"})
+            """}))
+    assert not any(v.ident.startswith("optional:") for v in vs), vs
+
+
+def test_schema_type_conflict_fires():
+    vs = schema.check(trees(**{"client.py": """
+        class FixClient:
+            def a(self, server):
+                self.transport.send(self.tname, server, "flush_begin",
+                                    {"epoch": 1})
+
+            def b(self, server):
+                self.transport.send(self.tname, server, "flush_begin",
+                                    {"epoch": "one"})
+        """}))
+    assert any(v.ident == "type:flush_begin:epoch" for v in vs), vs
+
+
+def test_schema_clean_fixture_passes():
+    vs = schema.check(trees(**{
+        "server.py": """
+            class FixServer:
+                def _dispatch(self, msg):
+                    handler = getattr(self, f"_on_{msg.kind}", None)
+
+                def _on_put(self, msg):
+                    k, v = msg.payload["key"], msg.payload["value"]
+            """,
+        "client.py": """
+            class FixClient:
+                def go(self, server):
+                    self.transport.send(self.tname, server, "put",
+                                        {"key": "k", "value": b"v"})
+            """}))
+    assert vs == []
+
+
+# ---------------------------------------------------------------- rule 7
+def test_epochs_zombie_table_fires():
+    vs = epochs.check(trees(**{"m.py": """
+        class Coord:
+            def _on_flush_begin(self, msg):
+                self._flush_epochs[msg.payload["epoch"]] = {"acked": set()}
+        """}))
+    assert any(v.ident == "zombie:Coord._flush_epochs" for v in vs), vs
+
+
+def test_epochs_abort_path_makes_table_clean():
+    vs = epochs.check(trees(**{"m.py": """
+        class Coord:
+            def _on_flush_begin(self, msg):
+                self._flush_epochs[msg.payload["epoch"]] = {"acked": set()}
+
+            def _on_flush_abort(self, msg):
+                self._flush_epochs.pop(msg.payload["epoch"], None)
+        """}))
+    assert vs == []
+
+
+def test_epochs_unguarded_abort_delete_fires():
+    vs = epochs.check(trees(**{"m.py": """
+        class Coord:
+            def _on_flush_begin(self, msg):
+                self._flush_epochs[msg.payload["epoch"]] = {"acked": set()}
+
+            def _on_flush_abort(self, msg):
+                del self._flush_epochs[msg.payload["epoch"]]
+        """}))
+    assert any(v.ident ==
+               "abort-unguarded:Coord._flush_epochs:_on_flush_abort"
+               for v in vs), vs
+
+
+def test_epochs_create_unreachable_fires():
+    vs = epochs.check(trees(**{"m.py": """
+        class Coord:
+            def tick(self):
+                self._flush_epochs[1] = {"acked": set()}
+
+            def _on_flush_abort(self, msg):
+                self._flush_epochs.pop(msg.payload["epoch"], None)
+        """}))
+    assert any(v.ident == "create-unreachable:Coord._flush_epochs:tick"
+               for v in vs), vs
+
+
+def test_epochs_singleton_swap_abort_is_clean():
+    """The swap-and-check idiom ``d, self._drain = self._drain, None`` is
+    an idempotent abort-path delete, not a zombie."""
+    vs = epochs.check(trees(**{"m.py": """
+        class Coord:
+            def _on_drain_request(self, msg):
+                self._drain = {"epoch": 1, "done": set()}
+
+            def _abort_drain(self, reason):
+                d, self._drain = self._drain, None
+                if d is None:
+                    return
+        """}))
+    assert vs == []
+
+
+def test_epochs_id_space_checks_fire():
+    vs = epochs.check(trees(**{"m.py": """
+        LOW_EPOCH_BASE = 1 << 20
+        DUP_EPOCH_BASE = 1 << 30
+        ALSO_DUP_EPOCH_BASE = 1 << 30
+
+        class Coord:
+            def __init__(self):
+                self._next_drain_epoch = DUP_EPOCH_BASE
+                self._next_stage_epoch = DUP_EPOCH_BASE
+        """}))
+    idents = {v.ident for v in vs}
+    assert "id-low:LOW_EPOCH_BASE" in idents, vs
+    assert "id-overlap:ALSO_DUP_EPOCH_BASE:DUP_EPOCH_BASE" in idents, vs
+    assert "id-shared-base:Coord._next_stage_epoch" in idents, vs
+
+
+def test_epochs_user_space_guard():
+    bad = """
+        DRAIN_EPOCH_BASE = 1 << 30
+
+        class Coord:
+            def begin_flush(self, epoch):
+                self._user_flushes[epoch] = 1.0
+        """
+    vs = epochs.check(trees(**{"m.py": bad}))
+    assert any(v.ident == "user-space-unchecked:Coord.begin_flush"
+               for v in vs), vs
+    good = """
+        DRAIN_EPOCH_BASE = 1 << 30
+
+        class Coord:
+            def begin_flush(self, epoch):
+                if epoch >= DRAIN_EPOCH_BASE:
+                    raise ValueError(epoch)
+                self._user_flushes[epoch] = 1.0
+
+            def _on_flush_timeout(self, msg):
+                self._user_flushes.pop(msg.payload["epoch"], None)
+        """
+    vs = epochs.check(trees(**{"m.py": good}))
+    assert not any(v.ident.startswith("user-space-unchecked")
+                   for v in vs), vs
+
+
+# ---------------------------------------------------------------- rule 8
+def test_ownership_multi_context_unguarded_fires():
+    vs = ownership.check(trees(**{"m.py": """
+        class Pump:
+            def __init__(self):
+                self._buf = []
+
+            def run(self):
+                self._buf.append(1)
+
+            def push(self, x):
+                self._buf.append(x)
+        """}))
+    assert any(v.ident == "unguarded:Pump._buf" for v in vs), vs
+
+
+def test_ownership_common_lock_is_clean():
+    vs = ownership.check(trees(**{"m.py": """
+        class Pump:
+            def __init__(self):
+                self._lock = locktrack.lock("Pump._lock")
+                self._buf = []
+
+            def run(self):
+                with self._lock:
+                    self._buf.append(1)
+
+            def push(self, x):
+                with self._lock:
+                    self._buf.append(x)
+        """}))
+    assert vs == []
+
+
+def test_ownership_caller_held_lock_is_inferred():
+    """A ``*_locked`` helper every call site enters with the lock held
+    inherits it — the convention the client pipeline is built on."""
+    vs = ownership.check(trees(**{"m.py": """
+        class Pump:
+            def __init__(self):
+                self._lock = locktrack.lock("Pump._lock")
+                self._buf = []
+
+            def run(self):
+                with self._lock:
+                    self._add_locked(1)
+
+            def push(self, x):
+                with self._lock:
+                    self._add_locked(x)
+
+            def _add_locked(self, x):
+                self._buf.append(x)
+        """}))
+    assert vs == []
+
+
+def test_ownership_one_unlocked_call_site_defeats_inference():
+    vs = ownership.check(trees(**{"m.py": """
+        class Pump:
+            def __init__(self):
+                self._lock = locktrack.lock("Pump._lock")
+                self._buf = []
+
+            def run(self):
+                with self._lock:
+                    self._add_locked(1)
+
+            def push(self, x):
+                self._add_locked(x)
+
+            def _add_locked(self, x):
+                self._buf.append(x)
+        """}))
+    assert any(v.ident == "unguarded:Pump._buf" for v in vs), vs
+
+
+def test_ownership_gil_annotation_is_honored():
+    vs = ownership.check(trees(**{"m.py": """
+        class Pump:
+            def __init__(self):
+                self._hits = 0   # bbcheck: shared=gil
+
+            def run(self):
+                self._hits = 1
+
+            def poke(self):
+                self._hits = 2
+        """}))
+    assert vs == []
+
+
+def test_ownership_bad_annotation_fires():
+    vs = ownership.check(trees(**{"m.py": """
+        class Pump:
+            def __init__(self):
+                self._hits = 0   # bbcheck: shared=_no_such_lock
+
+            def run(self):
+                self._hits = 1
+
+            def poke(self):
+                self._hits = 2
+        """}))
+    assert any(v.ident == "bad-annotation:Pump._hits" for v in vs), vs
+
+
+def test_ownership_stale_annotation_fires():
+    vs = ownership.check(trees(**{"m.py": """
+        class Pump:
+            def __init__(self):
+                self._hits = 0   # bbcheck: shared=gil
+
+            def poke(self):
+                self._hits = 2
+        """}))
+    assert any(v.ident == "stale-annotation:Pump._hits" for v in vs), vs
+
+
+# --------------------------------------------------- locktrack artifact
+def test_locktrack_dump_writes_postmortem_artifact(tmp_path):
+    tr = LockOrderTracker()
+    a = TrackedLock("A", tr)
+    b = TrackedLock("B", tr)
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    path = tr.dump(str(tmp_path / "inversions.json"))
+    with open(path) as fh:
+        report = json.load(fh)
+    assert report["edges"]["A"]["B"]
+    assert len(report["inversions"]) == 1
+    inv = report["inversions"][0]
+    assert inv["kind"] == "order-inversion"
+    assert inv["stack"], "inversion must carry the recording stack"
+    assert "MainThread" in report["threads"]
+
+
+# --------------------------------------------------- generated registry
+def test_protocol_md_regenerates_byte_identical():
+    """docs/PROTOCOL.md is generated; CI fails when it drifts. This is
+    the same comparison scripts/ci.sh --lint makes."""
+    here = os.path.dirname(__file__)
+    committed_path = os.path.join(here, "..", "docs", "PROTOCOL.md")
+    with open(committed_path) as fh:
+        committed = fh.read()
+    regenerated = schema.render(parse_tree(os.path.join(here, "..",
+                                                        DEFAULT_ROOT)))
+    assert regenerated == committed, \
+        "docs/PROTOCOL.md drifted — regenerate with " \
+        "`python -m tools.bbcheck --emit-protocol docs/PROTOCOL.md`"
 
 
 # ------------------------------------------------------------- real core

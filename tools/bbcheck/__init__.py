@@ -1,6 +1,6 @@
 """bbcheck: AST-based invariant checks for the burst-buffer core.
 
-Five rules, each a module exposing ``check(trees) -> [Violation]`` where
+Eight rules, each a module exposing ``check(trees) -> [Violation]`` where
 ``trees`` maps a display filename to a parsed ``ast.Module``:
 
 - protocol  -- message kinds sent vs. ``_on_<kind>`` handlers, payload keys
@@ -9,12 +9,23 @@ Five rules, each a module exposing ``check(trees) -> [Violation]`` where
 - clocks    -- no direct time.time()/time.monotonic() outside the
                injected-clock guard pattern
 - literals  -- no hardcoded timeout/interval floats; route through BBConfig
+- schema    -- senders and handlers agree on payload shape (key sets +
+               coarse value types); also generates docs/PROTOCOL.md
+- epochs    -- epoch-table lifecycles: begin-reachable creation, an
+               abort/timeout delete path (no zombies), idempotent aborts,
+               disjoint drain/stage/user epoch-id spaces
+- ownership -- no field mutated from two execution contexts (run loop,
+               ACK pump, fan-out workers, API callers) without one
+               consistent lock; ``# bbcheck: shared=<lock>`` markers are
+               verified and must not go stale
 
 Run ``python -m tools.bbcheck`` (see __main__.py) or ``scripts/ci.sh --lint``.
 The committed allowlist (allowlist.json) is shrinking-only: unknown
 violations fail, and so do stale allowlist entries.
 """
-from . import blocking, clocks, literals, locks, protocol  # noqa: F401
+from . import (blocking, clocks, epochs, literals, locks, ownership,  # noqa: F401
+               protocol, schema)
 from .report import Violation, load_allowlist, apply_allowlist  # noqa: F401
 
-ALL_RULES = (protocol, locks, blocking, clocks, literals)
+ALL_RULES = (protocol, locks, blocking, clocks, literals,
+             schema, epochs, ownership)

@@ -1,21 +1,31 @@
-"""CLI: ``python -m tools.bbcheck [root] [--allowlist PATH]``.
+"""CLI: ``python -m tools.bbcheck [root] [options]``.
 
 Exit status is non-zero if any rule reports a violation not covered by
 the allowlist, OR if the allowlist contains stale entries (so the list
-can only ever shrink).
+can only ever shrink), OR if ``--check-protocol`` finds the committed
+``docs/PROTOCOL.md`` drifted from the code.
+
+Options:
+  --rule NAME            run only this rule (repeatable; default: all)
+  --json [PATH]          machine-readable report to PATH ("-" = stdout)
+  --emit-protocol PATH   (re)generate the inferred protocol registry
+  --check-protocol PATH  fail if PATH differs from the regenerated registry
 """
 from __future__ import annotations
 
 import argparse
 import ast
+import json
 import os
 import sys
 
 from . import ALL_RULES
+from . import schema as schema_rule
 from .report import apply_allowlist, load_allowlist
 
 DEFAULT_ROOT = "src/repro/core"
 DEFAULT_ALLOWLIST = os.path.join(os.path.dirname(__file__), "allowlist.json")
+RULE_NAMES = {r.__name__.rsplit(".", 1)[-1]: r for r in ALL_RULES}
 
 
 def parse_tree(root: str):
@@ -25,7 +35,12 @@ def parse_tree(root: str):
             continue
         path = os.path.join(root, name)
         with open(path) as fh:
-            trees[name] = ast.parse(fh.read(), filename=path)
+            src = fh.read()
+        tree = ast.parse(src, filename=path)
+        # rules that need comments (ownership's shared= markers) read the
+        # raw source off the tree; fixture trees may omit it
+        tree._bb_source = src               # type: ignore[attr-defined]
+        trees[name] = tree
     return trees
 
 
@@ -33,11 +48,21 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="bbcheck")
     ap.add_argument("root", nargs="?", default=DEFAULT_ROOT)
     ap.add_argument("--allowlist", default=DEFAULT_ALLOWLIST)
+    ap.add_argument("--rule", action="append", choices=sorted(RULE_NAMES),
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH", help="machine-readable report")
+    ap.add_argument("--emit-protocol", metavar="PATH",
+                    help="write the inferred protocol registry markdown")
+    ap.add_argument("--check-protocol", metavar="PATH",
+                    help="fail if PATH drifted from the inferred registry")
     args = ap.parse_args(argv)
 
     trees = parse_tree(args.root)
+    rules = [RULE_NAMES[n] for n in args.rule] if args.rule \
+        else list(ALL_RULES)
     violations = []
-    for rule in ALL_RULES:
+    for rule in rules:
         violations.extend(rule.check(trees))
     violations.sort(key=lambda v: (v.file, v.line, v.rule))
 
@@ -51,10 +76,51 @@ def main(argv=None) -> int:
     for key in stale:
         print(f"STALE allowlist entry (fixed? remove it): {key}")
 
+    drifted = False
+    registry = None
+    if args.emit_protocol or args.check_protocol:
+        registry = schema_rule.render(trees)
+    if args.emit_protocol:
+        with open(args.emit_protocol, "w") as fh:
+            fh.write(registry)
+        print(f"bbcheck: wrote {args.emit_protocol}")
+    if args.check_protocol:
+        try:
+            with open(args.check_protocol) as fh:
+                committed = fh.read()
+        except FileNotFoundError:
+            committed = None
+        if committed != registry:
+            drifted = True
+            print(f"DRIFT {args.check_protocol} is stale — regenerate with "
+                  f"`python -m tools.bbcheck --emit-protocol "
+                  f"{args.check_protocol}`")
+
     n_mod = len(trees)
-    print(f"bbcheck: {n_mod} modules, {len(new)} new violation(s), "
+    rule_names = [r.__name__.rsplit(".", 1)[-1] for r in rules]
+    print(f"bbcheck: {n_mod} modules, {len(rules)} rules, "
+          f"{len(new)} new violation(s), "
           f"{len(allowed)} allowlisted, {len(stale)} stale entries")
-    return 1 if (new or stale) else 0
+
+    if args.json is not None:
+        def vdict(v):
+            return {"rule": v.rule, "file": v.file, "line": v.line,
+                    "ident": v.ident, "key": v.key, "message": v.message}
+        report = {"root": args.root, "modules": n_mod, "rules": rule_names,
+                  "new": [vdict(v) for v in new],
+                  "allowed": [vdict(v) for v in allowed],
+                  "stale_allowlist": stale,
+                  "protocol_drift": drifted,
+                  "ok": not (new or stale or drifted)}
+        payload = json.dumps(report, indent=2, sort_keys=True)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w") as fh:
+                fh.write(payload + "\n")
+            print(f"bbcheck: report at {args.json}")
+
+    return 1 if (new or stale or drifted) else 0
 
 
 if __name__ == "__main__":

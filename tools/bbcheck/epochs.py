@@ -1,0 +1,364 @@
+"""Rule 7: epoch state-machine verification.
+
+The flush / drain / stage coordinators track multi-step epochs in plain
+dict tables (``Server._flush`` / ``_drain_epochs`` / ``_stage_epochs``,
+the manager's ``_user_flushes`` and the ``_drain`` / ``_stage``
+singletons). A zombie entry — created but never deleted on the failure
+path — wedges the coordinator forever (the exact hazard the hand-written
+comment above ``BBServer._closed_epochs`` worries about). This rule
+extracts each table's lifecycle from its mutation sites and verifies:
+
+- **creation reachability**: every site that creates an entry
+  (``self.T[k] = ...`` / ``self.T.setdefault(k, ...)`` / dict-literal
+  assignment to a singleton slot) is reachable, through the intra-class
+  call graph, from a ``*begin*`` / ``*request*`` function — epochs only
+  start at an explicit begin;
+- **no zombies**: every table has at least one deletion site
+  (``pop`` / ``del`` / ``None``-assignment) reachable from an
+  ``abort`` / ``timeout`` / ``expire`` / ``sweep`` / ``fail`` path;
+- **idempotent aborts**: deletion sites on an ``abort`` path must be
+  membership-guarded — ``pop(k, default)``, an assignment to ``None``
+  (inherently idempotent, incl. the swap-and-check idiom), or a ``del``
+  under an ``if`` that tests the table — so a late duplicate abort is a
+  no-op, not a KeyError;
+- **disjoint id spaces**: ``*_EPOCH_BASE`` constants must be pairwise
+  distinct and ``>= 1 << 30`` (user flush epochs own the low space), no
+  two ``self._next_*`` allocation counters may share a base, and the
+  user-facing ``begin*``-function that creates a user-epoch entry must
+  range-check the caller's epoch against the lowest base.
+
+Tables are discovered, not configured: any ``self.<attr>`` whose name
+mentions epoch/flush/drain/stage and is keyed-created (or swings between
+a dict literal and ``None`` for singleton slots) is tracked. A table
+whose creating function also bounds it (deletes in the same function) is
+a results cache, not a lifecycle table, and is exempt.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .report import Violation
+
+NAME_RE = re.compile(r"epoch|flush|drain|stage", re.I)
+BEGIN_RE = re.compile(r"begin|request", re.I)
+ABORT_RE = re.compile(r"abort|timeout|expire|sweep|fail", re.I)
+SKIP_MODULES = {"locktrack.py"}
+
+
+def _const_int(node: ast.AST) -> Optional[int]:
+    """Constant-fold an int expression (handles ``1 << 30`` etc.)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.BinOp):
+        left, right = _const_int(node.left), _const_int(node.right)
+        if left is None or right is None:
+            return None
+        try:
+            if isinstance(node.op, ast.LShift):
+                return left << right
+            if isinstance(node.op, ast.Add):
+                return left + right
+            if isinstance(node.op, ast.Sub):
+                return left - right
+            if isinstance(node.op, ast.Mult):
+                return left * right
+            if isinstance(node.op, ast.Pow):
+                return left ** right
+        except Exception:                    # pragma: no cover
+            return None
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = _const_int(node.operand)
+        return None if inner is None else -inner
+    return None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """Attr name if ``node`` is ``self.<attr>``, else None."""
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+class Site:
+    __slots__ = ("fn", "line", "guarded")
+
+    def __init__(self, fn: str, line: int, guarded: bool = True):
+        self.fn = fn          # enclosing method name
+        self.line = line
+        self.guarded = guarded
+
+
+class Table:
+    def __init__(self, cls: str, attr: str, fname: str):
+        self.cls = cls
+        self.attr = attr
+        self.fname = fname
+        self.creates: List[Site] = []
+        self.deletes: List[Site] = []
+        self.singleton = False
+
+
+def _class_methods(cls: ast.ClassDef) -> Dict[str, ast.FunctionDef]:
+    return {fn.name: fn for fn in cls.body
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _call_graph(methods: Dict[str, ast.FunctionDef]) -> Dict[str, Set[str]]:
+    graph: Dict[str, Set[str]] = {}
+    for name, fn in methods.items():
+        callees: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                callee = _self_attr(node.func)
+                if callee is not None and callee in methods:
+                    callees.add(callee)
+        graph[name] = callees
+    return graph
+
+
+def _reachable_from(graph: Dict[str, Set[str]], pattern: re.Pattern,
+                    ) -> Set[str]:
+    """Methods reachable (incl. transitively) from any pattern-matching
+    method — the matching methods themselves included."""
+    roots = {m for m in graph if pattern.search(m)}
+    seen = set(roots)
+    stack = list(roots)
+    while stack:
+        for callee in graph.get(stack.pop(), ()):
+            if callee not in seen:
+                seen.add(callee)
+                stack.append(callee)
+    return seen
+
+
+def _has_membership_guard(node: ast.AST, attr: str,
+                          fn: ast.FunctionDef) -> bool:
+    """True if ``node`` (a del/pop site) sits under or after an ``if``
+    whose test mentions ``self.<attr>`` inside ``fn``."""
+    for test in (n.test for n in ast.walk(fn) if isinstance(n, ast.If)):
+        if test.lineno <= node.lineno \
+                and f"self.{attr}" in ast.unparse(test):
+            return True
+    return False
+
+
+def _collect_tables(cls: ast.ClassDef, fname: str) -> List[Table]:
+    methods = _class_methods(cls)
+    tables: Dict[str, Table] = {}
+
+    def table(attr: str) -> Table:
+        return tables.setdefault(attr, Table(cls.name, attr, fname))
+
+    for mname, fn in methods.items():
+        for node in ast.walk(fn):
+            # -- keyed creation: self.T[k] = v / self.T.setdefault(k, ...)
+            if isinstance(node, ast.Assign):
+                # pair tuple-unpack targets with their values so the
+                # swap-and-check idiom ``d, self._drain = self._drain,
+                # None`` registers as a None-assignment delete
+                pairs: List[Tuple[ast.AST, ast.AST]] = []
+                for tgt in node.targets:
+                    if isinstance(tgt, (ast.Tuple, ast.List)) \
+                            and isinstance(node.value,
+                                           (ast.Tuple, ast.List)) \
+                            and len(tgt.elts) == len(node.value.elts):
+                        pairs.extend(zip(tgt.elts, node.value.elts))
+                    else:
+                        pairs.append((tgt, node.value))
+                for tgt, val in pairs:
+                    if isinstance(tgt, ast.Subscript):
+                        attr = _self_attr(tgt.value)
+                        if attr and NAME_RE.search(attr) \
+                                and mname != "__init__":
+                            table(attr).creates.append(
+                                Site(mname, node.lineno))
+                    else:
+                        attr = _self_attr(tgt)
+                        if attr and NAME_RE.search(attr) \
+                                and mname != "__init__":
+                            # singleton slot: a non-empty dict-literal
+                            # state blob <-> None swings ({} resets are
+                            # not epoch creations)
+                            if isinstance(val, ast.Dict) and val.keys:
+                                t = table(attr)
+                                t.singleton = True
+                                t.creates.append(Site(mname, node.lineno))
+                            elif isinstance(val, ast.Constant) \
+                                    and val.value is None:
+                                t = tables.get(attr)
+                                if t is None:
+                                    t = table(attr)
+                                # None-assignment is idempotent by nature
+                                t.deletes.append(
+                                    Site(mname, node.lineno, guarded=True))
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute):
+                base = _self_attr(node.func.value)
+                if base and NAME_RE.search(base) and mname != "__init__":
+                    if node.func.attr == "setdefault":
+                        table(base).creates.append(Site(mname, node.lineno))
+                    elif node.func.attr == "pop":
+                        guarded = len(node.args) >= 2 or bool(node.keywords) \
+                            or _has_membership_guard(
+                                node, base, methods[mname])
+                        table(base).deletes.append(
+                            Site(mname, node.lineno, guarded))
+            elif isinstance(node, ast.Delete):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Subscript):
+                        attr = _self_attr(tgt.value)
+                        if attr and NAME_RE.search(attr):
+                            guarded = _has_membership_guard(
+                                node, attr, methods[mname])
+                            table(attr).deletes.append(
+                                Site(mname, node.lineno, guarded))
+
+    # only lifecycle tables: must actually be created somewhere; a table
+    # whose every delete lives in its own creating function is a
+    # self-bounded results cache, not an epoch lifecycle
+    out = []
+    for t in tables.values():
+        if not t.creates:
+            continue
+        if not t.singleton and t.deletes:
+            create_fns = {s.fn for s in t.creates}
+            if {d.fn for d in t.deletes} <= create_fns:
+                continue
+        out.append(t)
+    return out
+
+
+def _check_id_spaces(fname: str, tree: ast.Module,
+                     violations: List[Violation]):
+    bases: Dict[str, Tuple[int, int]] = {}   # name -> (value, line)
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id.endswith("_EPOCH_BASE"):
+            val = _const_int(node.value)
+            if val is not None:
+                bases[node.targets[0].id] = (val, node.lineno)
+
+    names = sorted(bases)
+    for i, a in enumerate(names):
+        va, la = bases[a]
+        if va < (1 << 30):
+            violations.append(Violation(
+                "epochs", fname, la, f"id-low:{a}",
+                f"{a} = {va} overlaps the user flush epoch space "
+                f"(bases must be >= 1<<30)"))
+        for b in names[i + 1:]:
+            vb, _lb = bases[b]
+            if va == vb:
+                violations.append(Violation(
+                    "epochs", fname, la, f"id-overlap:{a}:{b}",
+                    f"{a} and {b} share value {va}: drain/stage/flush "
+                    f"epoch-id spaces must be disjoint"))
+
+    # allocation counters must not share a base expression
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        init = _class_methods(cls).get("__init__")
+        if init is None:
+            continue
+        counters: Dict[str, Tuple[str, int]] = {}
+        for node in ast.walk(init):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                attr = _self_attr(node.targets[0])
+                if attr and attr.startswith("_next_") \
+                        and NAME_RE.search(attr):
+                    counters[attr] = (ast.unparse(node.value), node.lineno)
+        seen: Dict[str, str] = {}
+        for attr, (expr, line) in sorted(counters.items()):
+            if expr in seen:
+                violations.append(Violation(
+                    "epochs", fname, line,
+                    f"id-shared-base:{cls.name}.{attr}",
+                    f"{cls.name}.{attr} and {cls.name}.{seen[expr]} "
+                    f"allocate from the same base ({expr}): their epoch-id "
+                    f"spaces collide"))
+            else:
+                seen[expr] = attr
+
+    return bases
+
+
+def _check_user_space_guard(fname: str, tree: ast.Module, bases: Dict,
+                            tables: List[Table],
+                            violations: List[Violation]):
+    """The ``begin*`` function that admits caller-chosen epoch ids into a
+    table must range-check them against the lowest reserved base."""
+    if not bases:
+        return
+    low_base = min(bases, key=lambda n: bases[n][0])
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        methods = _class_methods(cls)
+        cls_tables = {t.attr: t for t in tables if t.cls == cls.name}
+        for mname, fn in methods.items():
+            if not BEGIN_RE.search(mname) or mname.startswith("_on_"):
+                continue
+            creates_here = any(
+                any(s.fn == mname for s in t.creates)
+                for t in cls_tables.values() if not t.singleton)
+            if not creates_here:
+                continue
+            src = ast.unparse(fn)
+            if low_base not in src:
+                violations.append(Violation(
+                    "epochs", fname, fn.lineno,
+                    f"user-space-unchecked:{cls.name}.{mname}",
+                    f"{cls.name}.{mname} admits caller-chosen epoch ids "
+                    f"but never checks them against {low_base}: a user "
+                    f"epoch >= 1<<30 would collide with reserved spaces"))
+
+
+def check(trees: Dict[str, ast.Module]) -> List[Violation]:
+    violations: List[Violation] = []
+    for fname, tree in sorted(trees.items()):
+        if fname in SKIP_MODULES:
+            continue
+        bases = _check_id_spaces(fname, tree, violations)
+        all_tables: List[Table] = []
+        for cls in ast.walk(tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            tables = _collect_tables(cls, fname)
+            all_tables.extend(tables)
+            methods = _class_methods(cls)
+            graph = _call_graph(methods)
+            from_begin = _reachable_from(graph, BEGIN_RE)
+            from_abort = _reachable_from(graph, ABORT_RE)
+            for t in sorted(tables, key=lambda t: t.attr):
+                for s in t.creates:
+                    if s.fn not in from_begin:
+                        violations.append(Violation(
+                            "epochs", fname, s.line,
+                            f"create-unreachable:{t.cls}.{t.attr}:{s.fn}",
+                            f"{t.cls}.{t.attr} entry created in {s.fn} "
+                            f"which is not reachable from any "
+                            f"*begin*/*request* handler"))
+                abort_deletes = [d for d in t.deletes if d.fn in from_abort]
+                if not abort_deletes:
+                    violations.append(Violation(
+                        "epochs", fname, t.creates[0].line,
+                        f"zombie:{t.cls}.{t.attr}",
+                        f"{t.cls}.{t.attr} has no abort/timeout path that "
+                        f"deletes entries: a failed epoch wedges the "
+                        f"table forever"))
+                for d in abort_deletes:
+                    if not d.guarded:
+                        violations.append(Violation(
+                            "epochs", fname, d.line,
+                            f"abort-unguarded:{t.cls}.{t.attr}:{d.fn}",
+                            f"abort-path delete of {t.cls}.{t.attr} in "
+                            f"{d.fn} is not membership-guarded: a "
+                            f"duplicate abort raises instead of no-op"))
+        _check_user_space_guard(fname, tree, bases, all_tables, violations)
+    return violations

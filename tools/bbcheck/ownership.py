@@ -1,0 +1,395 @@
+"""Rule 8: static thread-ownership race detection.
+
+Every ``self.<field>`` mutation in core is classified by the *execution
+contexts* that can reach it:
+
+- ``run-loop`` — the entity's ``run`` method and, for getattr-dispatched
+  classes, its ``_on_*`` handlers;
+- ``thread:<m>`` / ``worker:<m>`` — methods used as
+  ``threading.Thread(target=...)`` targets or ``parallel_map`` fan-out
+  bodies anywhere in core (lambda bodies are scanned for
+  ``self``-rooted calls, so ``Thread(target=lambda: self._expire(e))``
+  marks ``_expire``);
+- ``api`` — public methods (external callers), plus private methods not
+  reachable from any other entry (they must be driven cross-class).
+
+Contexts propagate through the intra-class call graph (lambda bodies are
+not attributed to their enclosing method — they run in their own
+context). The guarding lock at each mutation site is inferred from
+enclosing ``with`` statements via the same walker as the lock-order rule,
+*plus* caller-held locks: a private helper that every visible intra-class
+call site invokes with a lock held (the ``*_locked`` naming convention)
+inherits the intersection of its callers' locks. Entry-point methods —
+``run``, thread/worker targets, dispatched handlers, the public API —
+can be called with nothing held and never inherit.
+
+A field mutated from **two or more contexts without one lock common to
+every mutation site** is flagged. Fields holding synchronization
+primitives (locks, Events, Queues, ...) are exempt; ``__init__``
+assignments are construction, not mutation. ``del``/``pop``/``+=``/
+``.append`` and friends all count as mutations, including through one
+subscript level (``self.stats["k"] += 1``).
+
+The sanctioned escape is a structured marker on the field's declaration
+(or any mutation site):  ``# bbcheck: shared=<lock>``  where ``<lock>``
+names a lock attribute of the class — or the literal ``gil`` for fields
+that deliberately rely on single-bytecode atomicity. The marker is
+verified: naming a lock the class does not own fails, and a marker on a
+field the pass would *not* flag is stale and fails too — annotations can
+only shrink, like the allowlist.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .locks import walk_with_stacks
+from .report import Violation
+
+SKIP_MODULES = {"locktrack.py"}
+
+ANNOT_RE = re.compile(r"#\s*bbcheck:\s*shared=([A-Za-z_][\w]*)")
+
+# mutating method names on containers (one call = one mutation)
+MUTATORS = {"append", "appendleft", "add", "update", "clear", "pop",
+            "popleft", "popitem", "discard", "remove", "setdefault",
+            "extend", "insert", "sort", "reverse"}
+
+# constructor calls whose results are internally synchronized (or
+# construction-only): fields holding these are exempt
+PRIMITIVE_FACTORIES = {"lock", "rlock", "Lock", "RLock", "Event",
+                       "Condition", "Semaphore", "BoundedSemaphore",
+                       "Barrier", "Queue", "SimpleQueue", "LifoQueue",
+                       "PriorityQueue", "local", "count"}
+
+LOCK_FACTORIES = {"lock", "rlock", "Lock", "RLock"}
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _field_of_target(node: ast.AST) -> Optional[str]:
+    """Field name if ``node`` is ``self.X`` or ``self.X[...]...`` —
+    i.e. the mutated object hangs directly off self. ``self.a.b`` mutates
+    another object's state and is out of scope here."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    return _self_attr(node)
+
+
+def _mutation_targets(node: ast.AST) -> List[Tuple[str, int]]:
+    """(field, line) pairs mutated by a statement node."""
+    out: List[Tuple[str, int]] = []
+
+    def targets_of(tgt: ast.AST):
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            for el in tgt.elts:
+                targets_of(el)
+            return
+        field = _field_of_target(tgt)
+        if field is not None:
+            out.append((field, tgt.lineno))
+
+    if isinstance(node, ast.Assign):
+        for tgt in node.targets:
+            targets_of(tgt)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        if not (isinstance(node, ast.AnnAssign) and node.value is None):
+            targets_of(node.target)
+    elif isinstance(node, ast.Delete):
+        for tgt in node.targets:
+            targets_of(tgt)
+    elif isinstance(node, ast.Call) \
+            and isinstance(node.func, ast.Attribute) \
+            and node.func.attr in MUTATORS:
+        field = _field_of_target(node.func.value)
+        if field is not None:
+            out.append((field, node.lineno))
+    return out
+
+
+def _thread_and_worker_targets(trees: Dict[str, ast.Module]
+                               ) -> Tuple[Set[str], Set[str]]:
+    """Method names used as Thread targets / parallel_map bodies anywhere
+    (self-rooted only: ``self.run``, ``self.fs.stage``,
+    ``lambda: self._expire(e)``)."""
+
+    def self_rooted_calls(expr: ast.AST) -> Set[str]:
+        names: Set[str] = set()
+        if isinstance(expr, ast.Attribute) and _root_name(expr) == "self":
+            names.add(expr.attr)
+        elif isinstance(expr, ast.Lambda):
+            for node in ast.walk(expr.body):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and _root_name(node.func) == "self":
+                    names.add(node.func.attr)
+        return names
+
+    threads: Set[str] = set()
+    workers: Set[str] = set()
+    for tree in trees.values():
+        for call in ast.walk(tree):
+            if not isinstance(call, ast.Call):
+                continue
+            func_txt = ast.unparse(call.func)
+            if func_txt.endswith("Thread"):
+                for kw in call.keywords:
+                    if kw.arg == "target":
+                        threads |= self_rooted_calls(kw.value)
+            elif func_txt.endswith("parallel_map") and call.args:
+                workers |= self_rooted_calls(call.args[0])
+    return threads, workers
+
+
+def _is_dispatcher(cls: ast.ClassDef) -> bool:
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "getattr":
+            for a in node.args:
+                if isinstance(a, ast.JoinedStr) and any(
+                        isinstance(v, ast.Constant) and "_on_" in str(v.value)
+                        for v in a.values):
+                    return True
+    return False
+
+
+def _callees(fn: ast.AST, methods: Dict[str, ast.AST]) -> Set[str]:
+    """Direct ``self.m()`` callees — lambda/nested-def bodies excluded
+    (they run in their own context, discovered as thread targets)."""
+    out: Set[str] = set()
+
+    def visit(node: ast.AST):
+        if isinstance(node, ast.Lambda):
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            return
+        if isinstance(node, ast.Call):
+            callee = _self_attr(node.func)
+            if callee in methods:
+                out.add(callee)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(fn)
+    return out
+
+
+class _ClassInfo:
+    def __init__(self, cls: ast.ClassDef, fname: str,
+                 threads: Set[str], workers: Set[str]):
+        self.cls = cls
+        self.fname = fname
+        self.methods: Dict[str, ast.AST] = {
+            fn.name: fn for fn in cls.body
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        self.dispatcher = _is_dispatcher(cls)
+        self.entry_points: Set[str] = set()
+        self.ctx = self._contexts(threads, workers)
+        self.entry_locks = self._caller_locks()
+        self.exempt, self.lock_fields, self.decl_lines = self._init_fields()
+
+    def _contexts(self, threads: Set[str],
+                  workers: Set[str]) -> Dict[str, Set[str]]:
+        entry: Dict[str, Set[str]] = {}
+        for m in self.methods:
+            ctxs: Set[str] = set()
+            if m == "run":
+                ctxs.add("run-loop")
+            else:
+                if m in threads:
+                    ctxs.add(f"thread:{m}")
+                if m in workers:
+                    ctxs.add(f"worker:{m}")
+            if not ctxs:
+                if self.dispatcher and m.startswith("_on_"):
+                    ctxs.add("run-loop")
+                elif not m.startswith("_") \
+                        or (m.startswith("__") and m.endswith("__")):
+                    ctxs.add("api")
+            entry[m] = ctxs
+        self.entry_points = {m for m, c in entry.items() if c}
+
+        calls = {m: _callees(fn, self.methods)
+                 for m, fn in self.methods.items()}
+        ctx = {m: set(s) for m, s in entry.items()}
+
+        def propagate():
+            changed = True
+            while changed:
+                changed = False
+                for m, callees in calls.items():
+                    for c in callees:
+                        if not ctx[m] <= ctx[c]:
+                            ctx[c] |= ctx[m]
+                            changed = True
+        propagate()
+        # private methods no entry reaches are driven cross-class: api
+        for m in ctx:
+            if not ctx[m]:
+                ctx[m].add("api")
+        propagate()
+        return ctx
+
+    def _caller_locks(self) -> Dict[str, Set[str]]:
+        """Locks guaranteed held at *entry* to each method: the
+        intersection over every visible ``self.m()`` call site of
+        (locks lexically held at the site, plus the caller's own entry
+        locks). Formalizes the ``*_locked`` convention where the caller
+        acquires the lock. Entry-point methods are forced empty — an
+        external caller holds nothing. Pessimistic start, so the
+        fixpoint only ever grows and never over-claims."""
+        # callee -> [(caller, locks lexically held at the call site)]
+        sites: Dict[str, List[Tuple[str, frozenset]]] = {}
+        for m, fn in self.methods.items():
+            for node, held in walk_with_stacks(fn, self.cls.name):
+                if isinstance(node, ast.Call):
+                    callee = _self_attr(node.func)
+                    if callee in self.methods:
+                        sites.setdefault(callee, []).append(
+                            (m, frozenset(held)))
+
+        locks: Dict[str, Set[str]] = {m: set() for m in self.methods}
+        changed = True
+        while changed:
+            changed = False
+            for m in self.methods:
+                if m in self.entry_points or not sites.get(m):
+                    continue
+                new: Optional[Set[str]] = None
+                for caller, held in sites[m]:
+                    eff = set(held) | locks[caller]
+                    new = eff if new is None else new & eff
+                if new != locks[m]:
+                    locks[m] = new or set()
+                    changed = True
+        return locks
+
+    def _init_fields(self):
+        """(exempt primitive-holding fields, lock fields, decl lines)."""
+        exempt: Set[str] = set()
+        lock_fields: Set[str] = set()
+        decl_lines: Dict[str, List[int]] = {}
+        init = self.methods.get("__init__")
+        nodes = list(ast.walk(init)) if init is not None else []
+        for stmt in self.cls.body:                  # class-level attrs too
+            nodes.append(stmt)
+        for node in nodes:
+            if not isinstance(node, ast.Assign):
+                continue
+            for tgt in node.targets:
+                field = _self_attr(tgt)
+                if field is None and isinstance(tgt, ast.Name):
+                    field = tgt.id                  # class-level attribute
+                if field is None:
+                    continue
+                decl_lines.setdefault(field, []).append(node.lineno)
+                v = node.value
+                if isinstance(v, ast.Call):
+                    callee = v.func.attr if isinstance(v.func, ast.Attribute) \
+                        else (v.func.id if isinstance(v.func, ast.Name)
+                              else None)
+                    if callee in PRIMITIVE_FACTORIES:
+                        exempt.add(field)
+                    if callee in LOCK_FACTORIES:
+                        lock_fields.add(field)
+        return exempt, lock_fields, decl_lines
+
+
+def check(trees: Dict[str, ast.Module]) -> List[Violation]:
+    trees = {f: t for f, t in trees.items() if f not in SKIP_MODULES}
+    threads, workers = _thread_and_worker_targets(trees)
+    violations: List[Violation] = []
+
+    for fname, tree in sorted(trees.items()):
+        source = getattr(tree, "_bb_source", None)
+        src_lines = source.splitlines() if source is not None else None
+
+        for cls in ast.walk(tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            info = _ClassInfo(cls, fname, threads, workers)
+
+            # field -> [(ctxs, locks, line, method)]
+            muts: Dict[str, List[Tuple[Set[str], frozenset, int, str]]] = {}
+            for m, fn in info.methods.items():
+                if m == "__init__":
+                    continue
+                ctxs = info.ctx[m]
+                inherited = info.entry_locks.get(m, set())
+                for node, held in walk_with_stacks(fn, cls.name):
+                    for field, line in _mutation_targets(node):
+                        if field in info.exempt:
+                            continue
+                        muts.setdefault(field, []).append(
+                            (ctxs, frozenset(set(held) | inherited),
+                             line, m))
+
+            def annotation(field: str) -> Tuple[Optional[str], Optional[int]]:
+                if src_lines is None:
+                    return None, None
+                lines = list(info.decl_lines.get(field, []))
+                lines += [ln for _c, _l, ln, _m in muts.get(field, [])]
+                for ln in lines:
+                    if 1 <= ln <= len(src_lines):
+                        hit = ANNOT_RE.search(src_lines[ln - 1])
+                        if hit:
+                            return hit.group(1), ln
+                return None, None
+
+            flagged: Set[str] = set()
+            for field, sites in sorted(muts.items()):
+                all_ctxs: Set[str] = set().union(*[s[0] for s in sites])
+                if len(all_ctxs) < 2:
+                    continue
+                common = set.intersection(*[set(s[1]) for s in sites])
+                if common:
+                    continue
+                flagged.add(field)
+                marker, _mline = annotation(field)
+                if marker is None:
+                    first = min(sites, key=lambda s: s[2])
+                    ctx_txt = ", ".join(sorted(all_ctxs))
+                    where = sorted({f"{m}:{ln}" for _c, _l, ln, m in sites})
+                    violations.append(Violation(
+                        "ownership", fname, first[2],
+                        f"unguarded:{cls.name}.{field}",
+                        f"{cls.name}.{field} is mutated from contexts "
+                        f"[{ctx_txt}] with no common lock "
+                        f"(sites: {', '.join(where)}) — guard every "
+                        f"mutation with one lock or annotate the field "
+                        f"`# bbcheck: shared=<lock>`"))
+                elif marker != "gil" and marker not in info.lock_fields:
+                    violations.append(Violation(
+                        "ownership", fname, _mline or 0,
+                        f"bad-annotation:{cls.name}.{field}",
+                        f'{cls.name}.{field} is annotated shared={marker} '
+                        f"but {cls.name} owns no lock attribute named "
+                        f'"{marker}" (or use shared=gil)'))
+
+            # stale markers: annotation on a field the pass would not flag
+            if src_lines is not None:
+                candidates = set(info.decl_lines) | set(muts)
+                for field in sorted(candidates - flagged):
+                    marker, mline = annotation(field)
+                    if marker is not None:
+                        violations.append(Violation(
+                            "ownership", fname, mline or 0,
+                            f"stale-annotation:{cls.name}.{field}",
+                            f"{cls.name}.{field} carries a "
+                            f"`bbcheck: shared={marker}` marker but is not "
+                            f"multi-context-mutated (fixed? remove the "
+                            f"marker)"))
+    return violations

@@ -1,0 +1,408 @@
+"""Rule 6: payload schema inference.
+
+Rule 1 (protocol) checks that every sent kind has a handler and that
+required payload keys exist *somewhere*; this rule checks that senders and
+handlers agree on the payload *shape*. At every ``send`` / ``request`` /
+``request_async`` / ``reply`` site the payload dict literal is resolved to
+a per-kind schema — key set plus a coarse value type (int / str / bytes /
+list / dict / None; anything dynamic is ``?`` and never conflicts). At
+every ``_on_<kind>`` handler the ``msg.payload[...]`` subscripts and
+``msg.payload.get(...)`` calls are collected. Three things are flagged:
+
+- a handler read of a key no send site for that kind constructs (a typo'd
+  field name — today it would raise KeyError or silently return None).
+  Keys *injected* into an existing payload after construction — subscript
+  assignment (``it["_stale"] = True`` marking parked puts stale) or an
+  extension literal (``{**p, "chain": rest}`` re-forwarding down the
+  replica chain) — travel the wire without appearing in any from-scratch
+  payload literal and are exempted from this check (a genuinely typo'd
+  read matches no assignment anywhere, so the check still bites);
+- a *required* read (``payload["k"]``) of a key some send site omits —
+  ``.get`` with a default is the sanctioned escape for optional fields;
+- cross-site type conflicts: two send sites giving the same key of the
+  same kind different concrete coarse types (``None`` marks a nullable
+  field and does not conflict).
+
+Kinds whose payload is not a dict literal (or a single local dict-literal
+alias) at even one site are skipped entirely — no guessing.
+
+``render(trees)`` emits the inferred registry as ``docs/PROTOCOL.md``
+(see ``--emit-protocol`` / ``--check-protocol`` in ``__main__``); CI
+fails when the committed doc drifts from the code.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .report import Violation
+from .protocol import (SEND_ATTRS, SKIP_MODULES, _arg, _attach_parents,
+                       _class_role, _collect_wrappers, _const_str,
+                       _dst_roles, _enclosing)
+
+# builtin calls whose coarse result type is knowable without inference
+_CALL_TYPES = {"len": "int", "int": "int", "sum": "int", "min": "int",
+               "max": "int", "bool": "int", "float": "int", "abs": "int",
+               "str": "str", "repr": "str", "bytes": "bytes",
+               "sorted": "list", "list": "list", "tuple": "list",
+               "set": "list", "dict": "dict"}
+
+
+def _coarse_type(node: ast.AST) -> str:
+    """Coarse value type of a payload dict value expression."""
+    if isinstance(node, ast.Constant):
+        v = node.value
+        if v is None:
+            return "None"
+        if isinstance(v, (bool, int, float)):
+            return "int"
+        if isinstance(v, str):
+            return "str"
+        if isinstance(v, bytes):
+            return "bytes"
+        return "?"
+    if isinstance(node, (ast.List, ast.Tuple, ast.Set, ast.ListComp,
+                         ast.SetComp, ast.GeneratorExp)):
+        return "list"
+    if isinstance(node, (ast.Dict, ast.DictComp)):
+        return "dict"
+    if isinstance(node, ast.JoinedStr):
+        return "str"
+    if isinstance(node, ast.UnaryOp):
+        return _coarse_type(node.operand)
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return _CALL_TYPES.get(node.func.id, "?")
+    if isinstance(node, ast.IfExp):
+        a, b = _coarse_type(node.body), _coarse_type(node.orelse)
+        if a == b:
+            return a
+        if "None" in (a, b):                # nullable field: base type wins
+            return a if b == "None" else b
+        return "?"
+    return "?"
+
+
+def _dict_schema(node: ast.AST) -> Optional[Dict[str, str]]:
+    """{key: coarse type} of a fully-literal-keyed dict expr, else None."""
+    if not isinstance(node, ast.Dict):
+        return None
+    out: Dict[str, str] = {}
+    for k, v in zip(node.keys, node.values):
+        if k is None:                       # ** expansion: unresolvable
+            return None
+        if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+            return None
+        out[k.value] = _coarse_type(v)
+    return out
+
+
+def _resolve_payload_schema(node: Optional[ast.AST]) -> Optional[Dict[str, str]]:
+    if node is None:
+        return {}                           # payload defaults to None
+    direct = _dict_schema(node)
+    if direct is not None:
+        return direct
+    if isinstance(node, ast.Name):          # single local dict-literal alias
+        fn = _enclosing(node, ast.FunctionDef, ast.AsyncFunctionDef,
+                        ast.Lambda)
+        if fn is None or isinstance(fn, ast.Lambda):
+            return None
+        assigns = [a for a in ast.walk(fn)
+                   if isinstance(a, ast.Assign)
+                   and any(isinstance(t, ast.Name) and t.id == node.id
+                           for t in a.targets)]
+        if len(assigns) == 1:
+            return _dict_schema(assigns[0].value)
+    return None
+
+
+class SchemaSite:
+    __slots__ = ("file", "line", "kind", "roles", "is_reply", "schema")
+
+    def __init__(self, file: str, line: int, kind: str, roles: Set[str],
+                 is_reply: bool, schema: Optional[Dict[str, str]]):
+        self.file = file
+        self.line = line
+        self.kind = kind
+        self.roles = roles
+        self.is_reply = is_reply
+        self.schema = schema                # None = unresolvable payload
+
+
+def _collect_schema_sites(trees: Dict[str, ast.Module]) -> List[SchemaSite]:
+    wrappers = _collect_wrappers(trees)
+    sites: List[SchemaSite] = []
+    for fname, tree in trees.items():
+        for call in ast.walk(tree):
+            if not (isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Attribute)):
+                continue
+            attr = call.func.attr
+            if attr in SEND_ATTRS \
+                    and "transport" in ast.unparse(call.func.value):
+                kind = _const_str(_arg(call, 2, "kind"))
+                if kind is None:
+                    continue                # wrapper-internal, handled below
+                is_reply = attr == "reply" or any(
+                    k.arg == "reply_to" for k in call.keywords)
+                sites.append(SchemaSite(
+                    fname, call.lineno, kind,
+                    _dst_roles(call, attr, kind), is_reply,
+                    _resolve_payload_schema(_arg(call, 3, "payload"))))
+            elif attr in wrappers:
+                kpos, ppos, roles = wrappers[attr]
+                kind = _const_str(_arg(call, kpos, "kind"))
+                if kind is None:
+                    continue
+                sites.append(SchemaSite(
+                    fname, call.lineno, kind, set(roles), False,
+                    _resolve_payload_schema(_arg(call, ppos, "payload"))))
+    return sites
+
+
+def _handler_accesses(fn: ast.FunctionDef) -> Dict[str, dict]:
+    """{key: {"required", "get", "default", "line"}} for a ``_on_*``
+    handler's reads of its own message's payload (aliases included)."""
+    params = [a.arg for a in fn.args.args]
+    msg_param = params[1] if len(params) > 1 else None
+    aliases: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) \
+                and isinstance(node.value, ast.Attribute) \
+                and node.value.attr == "payload" \
+                and isinstance(node.value.value, ast.Name) \
+                and node.value.value.id == msg_param \
+                and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            aliases.add(node.targets[0].id)
+
+    def is_payload(base: ast.AST) -> bool:
+        return (isinstance(base, ast.Attribute)
+                and base.attr == "payload"
+                and isinstance(base.value, ast.Name)
+                and base.value.id == msg_param) \
+            or (isinstance(base, ast.Name) and base.id in aliases)
+
+    out: Dict[str, dict] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.ctx, ast.Load) \
+                and is_payload(node.value):
+            key = _const_str(node.slice)
+            if key is not None:
+                acc = out.setdefault(key, {"required": False, "get": False,
+                                           "default": False,
+                                           "line": node.lineno})
+                acc["required"] = True
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "get" \
+                and is_payload(node.func.value):
+            key = _const_str(node.args[0]) if node.args else None
+            if key is not None:
+                acc = out.setdefault(key, {"required": False, "get": False,
+                                           "default": False,
+                                           "line": node.lineno})
+                acc["get"] = True
+                if len(node.args) > 1 or node.keywords:
+                    acc["default"] = True
+    return out
+
+
+def _injected_keys(trees: Dict[str, ast.Module]) -> Set[str]:
+    """String keys added to an already-built dict anywhere in the scanned
+    modules: ``x["k"] = v`` subscript assignment, or a dict extension
+    literal ``{**base, "k": v}``. Used only to *suppress* typo findings —
+    never widens a schema."""
+    keys: Set[str] = set()
+    for tree in trees.values():
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Subscript):
+                        k = _const_str(tgt.slice)
+                        if k is not None:
+                            keys.add(k)
+            elif isinstance(node, ast.Dict) and None in node.keys:
+                for k in node.keys:
+                    if isinstance(k, ast.Constant) \
+                            and isinstance(k.value, str):
+                        keys.add(k.value)
+    return keys
+
+
+def _collect_handlers(trees: Dict[str, ast.Module]):
+    """[(role, kind, fname, line, accesses)] for every ``_on_*`` method."""
+    handlers = []
+    for fname, tree in sorted(trees.items()):
+        for cls in ast.walk(tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            role = _class_role(cls, fname)
+            for fn in cls.body:
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and fn.name.startswith("_on_"):
+                    handlers.append((role, fn.name[4:], fname, fn.lineno,
+                                     _handler_accesses(fn)))
+    return handlers
+
+
+def _prep(trees: Dict[str, ast.Module]):
+    trees = {f: t for f, t in trees.items() if f not in SKIP_MODULES}
+    for tree in trees.values():
+        _attach_parents(tree)
+    sites = _collect_schema_sites(trees)
+    by_kind: Dict[str, List[SchemaSite]] = {}
+    for s in sites:
+        by_kind.setdefault(s.kind, []).append(s)
+    for ksites in by_kind.values():
+        ksites.sort(key=lambda s: (s.file, s.line))
+    return by_kind, _collect_handlers(trees), _injected_keys(trees)
+
+
+def check(trees: Dict[str, ast.Module]) -> List[Violation]:
+    by_kind, handlers, injected = _prep(trees)
+    violations: List[Violation] = []
+
+    for role, kind, fname, _hline, accesses in handlers:
+        ksites = by_kind.get(kind, [])
+        if not ksites or any(s.schema is None for s in ksites):
+            continue                        # no data / unresolvable payload
+        keysets = [set(s.schema) for s in ksites]
+        constructed = set().union(*keysets)
+        always = set.intersection(*keysets)
+        for key, acc in sorted(accesses.items()):
+            if key not in constructed and key not in injected:
+                violations.append(Violation(
+                    "schema", fname, acc["line"],
+                    f"typo:{role}:{kind}:{key}",
+                    f'_on_{kind} on {role} reads payload key "{key}" which '
+                    f'no send site for "{kind}" constructs (typo?)'))
+            elif acc["required"] and key not in always:
+                n_omit = sum(1 for s in ksites if key not in s.schema)
+                violations.append(Violation(
+                    "schema", fname, acc["line"],
+                    f"optional:{role}:{kind}:{key}",
+                    f'_on_{kind} on {role} requires payload["{key}"] but '
+                    f'{n_omit} of {len(ksites)} send site(s) omit it — '
+                    f'use .get with a default'))
+
+    for kind, ksites in sorted(by_kind.items()):
+        if any(s.schema is None for s in ksites):
+            continue
+        types_by_key: Dict[str, Set[str]] = {}
+        first_site: Dict[Tuple[str, str], Tuple[str, int]] = {}
+        for s in ksites:
+            for k, t in s.schema.items():
+                types_by_key.setdefault(k, set()).add(t)
+                first_site.setdefault((k, t), (s.file, s.line))
+        for k, ts in sorted(types_by_key.items()):
+            concrete = sorted(ts - {"?", "None"})
+            if len(concrete) >= 2:
+                f, line = first_site[(k, concrete[0])]
+                violations.append(Violation(
+                    "schema", f, line, f"type:{kind}:{k}",
+                    f'payload key "{k}" of kind "{kind}" has conflicting '
+                    f'types across send sites: {"/".join(concrete)}'))
+    return violations
+
+
+# ------------------------------------------------------- PROTOCOL.md
+def _access_cell(acc: Optional[dict]) -> str:
+    if acc is None:
+        return "—"
+    parts = []
+    if acc["required"]:
+        parts.append("required")
+    if acc["get"]:
+        parts.append(".get(default)" if acc["default"] else ".get")
+    return " + ".join(parts) if parts else "—"
+
+
+def render(trees: Dict[str, ast.Module]) -> str:
+    """Deterministic markdown registry of the inferred wire protocol."""
+    by_kind, handlers, injected = _prep(trees)
+    handlers_by_kind: Dict[str, list] = {}
+    for role, kind, fname, line, accesses in handlers:
+        handlers_by_kind.setdefault(kind, []).append((role, fname, accesses))
+    n_sites = sum(len(v) for v in by_kind.values())
+
+    out: List[str] = [
+        "# Burst-buffer message protocol",
+        "",
+        "<!-- GENERATED by `python -m tools.bbcheck --emit-protocol"
+        " docs/PROTOCOL.md` -->",
+        "<!-- Do not edit by hand: `scripts/ci.sh --lint` fails when this"
+        " file drifts from the code. -->",
+        "",
+        f"Inferred from `src/repro/core`: **{len(by_kind)} message kinds** "
+        f"across {n_sites} send/request/reply sites. Coarse value types: "
+        "`int` / `str` / `bytes` / `list` / `dict`; `None` marks a "
+        "nullable field, `?` a dynamic expression the checker does not "
+        "type. *required* means the handler subscripts the key "
+        "(`payload[k]`); `.get` reads tolerate absence.",
+        "",
+    ]
+    for kind in sorted(by_kind):
+        ksites = by_kind[kind]
+        out.append(f"## `{kind}`")
+        out.append("")
+        by_file: Dict[str, int] = {}
+        for s in ksites:
+            by_file[s.file] = by_file.get(s.file, 0) + 1
+        senders = ", ".join(f"`{f}` ×{n}" if n > 1 else f"`{f}`"
+                            for f, n in sorted(by_file.items()))
+        roles = sorted(set().union(*[s.roles for s in ksites]))
+        roles_txt = ", ".join("reply-to-sender" if r == "*" else r
+                              for r in roles)
+        reply_note = " (reply)" if all(s.is_reply for s in ksites) else ""
+        out.append(f"- sent from: {senders} — toward {roles_txt}{reply_note}")
+        hs = sorted(handlers_by_kind.get(kind, []))
+        if hs:
+            htxt = ", ".join(f"{role} `_on_{kind}` (`{fname}`)"
+                             for role, fname, _a in hs)
+            out.append(f"- handled by: {htxt}")
+        elif all(s.is_reply for s in ksites):
+            out.append("- handled by: request waiters / async reply sinks")
+        unresolved = sum(1 for s in ksites if s.schema is None)
+        resolved = [s for s in ksites if s.schema is not None]
+        if unresolved:
+            out.append(f"- payload: dynamic expression at {unresolved} "
+                       f"site(s) — not inferred")
+        if resolved:
+            keysets = [set(s.schema) for s in resolved]
+            always = set.intersection(*keysets)
+            allkeys = sorted(set().union(*keysets))
+            if allkeys:
+                out.append("")
+                header = "| key | type | sent by |"
+                sep = "|---|---|---|"
+                acc_cols = [f"{role} access" for role, _f, _a in hs]
+                header += "".join(f" {c} |" for c in acc_cols)
+                sep += "---|" * len(acc_cols)
+                out.append(header)
+                out.append(sep)
+                for k in allkeys:
+                    ts = sorted({s.schema[k] for s in resolved
+                                 if k in s.schema})
+                    sent = "all sites" if k in always else \
+                        f"{sum(1 for s in resolved if k in s.schema)}" \
+                        f"/{len(resolved)} sites"
+                    row = f"| `{k}` | {'/'.join(ts)} | {sent} |"
+                    for _role, _f, accesses in hs:
+                        row += f" {_access_cell(accesses.get(k))} |"
+                    out.append(row)
+            elif not unresolved:
+                out.append("- payload: none")
+            accessed = set()
+            for _role, _f, accesses in hs:
+                accessed |= set(accesses)
+            extra = sorted(k for k in accessed - set().union(*keysets)
+                           if k in injected)
+            if extra:
+                out.append("")
+                out.append("- in-flight keys (injected into queued or "
+                           "re-forwarded payloads after construction): "
+                           + ", ".join(f"`{k}`" for k in extra))
+        out.append("")
+    return "\n".join(out).rstrip() + "\n"
