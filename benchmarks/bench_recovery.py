@@ -1,0 +1,141 @@
+"""ISSUE 8: whole-cluster crash recovery from the SSD logs.
+
+The paper's case for SSD log-structuring (§V, Fig 6) is that the SSD tier
+is durable local media — so a full-cluster restart must be a recovery, not
+a wipe. This bench measures exactly that promise:
+
+  1. A checkpoint is written through a BBFileSystem handle into a cluster
+     with ``dram_capacity=0`` and the drain engine off, so every acked byte
+     is SSD-resident (spilled + fsynced into the per-server record logs)
+     and NONE of it reaches the PFS — the only durable copy is the logs.
+  2. The whole cluster is torn down. Only the SSD directory (record logs +
+     manager journal) survives, exactly what a node reboot leaves behind.
+  3. A cold cluster starts over the surviving directory and is timed to
+     first-readable-byte (construction + log replay + manifest rebuild +
+     ring formation + one chunk read) and to a full byte-exact readback.
+
+``ok`` requires byte-exact reads (first chunk and whole file), a non-zero
+recovered-key count from the server stats, and the manager journal having
+rebuilt the namespace entry (path known, synced, right size). ``--smoke``
+runs a capped version for CI; ``--json`` feeds benchmarks.compare against
+the committed BENCH_recovery baseline (headline: recovered_mbps).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import BBConfig, BurstBufferSystem
+
+
+def _cfg(n_servers: int, seg: int, ssd_dir: str, pfs_dir: str) -> BBConfig:
+    cfg = BBConfig(num_servers=n_servers, num_clients=n_servers,
+                   dram_capacity=0,          # every acked byte spills to SSD
+                   ssd_capacity=4 << 30,     # soft cap: keep occupancy low
+                   ssd_dir=ssd_dir, pfs_dir=pfs_dir,
+                   chunk_bytes=seg)
+    cfg.drain.enabled = False                # nothing drains to the PFS:
+    return cfg                               # the logs are the only copy
+
+
+def run_recovery(total_mb=16, seg_kb=64, n_servers=4) -> dict:
+    base = tempfile.mkdtemp(prefix="bbrec_")
+    ssd_dir = os.path.join(base, "ssd")
+    pfs_dir = os.path.join(base, "pfs")
+    total, seg = total_mb << 20, seg_kb << 10
+    rng = np.random.default_rng(2)
+    data = rng.integers(0, 256, total, dtype=np.uint8).tobytes()
+    out = {"total_mb": total_mb, "seg_kb": seg_kb, "servers": n_servers}
+
+    sys_ = BurstBufferSystem(_cfg(n_servers, seg, ssd_dir, pfs_dir)).start()
+    try:
+        fs = sys_.fs()
+        t0 = time.perf_counter()
+        with fs.open("ckpt", "w", policy="batched", chunk_bytes=seg) as f:
+            f.pwrite(data, 0)
+        out["write_s"] = time.perf_counter() - t0
+        st = fs.stat("ckpt")
+        out["pre_dram"] = st["residency"]["dram"]
+        out["pre_ssd"] = st["residency"]["ssd"]
+    finally:
+        # the "crash": every thread dies; the system tmpdir is wiped; only
+        # the explicit ssd_dir (record logs + manager journal) and pfs_dir
+        # survive — what a real reboot leaves on local media
+        sys_.stop()
+
+    t0 = time.perf_counter()
+    sys2 = BurstBufferSystem(_cfg(n_servers, seg, ssd_dir, pfs_dir)).start()
+    try:
+        fs2 = sys2.fs()
+        r = fs2.open("ckpt", "r")
+        first = r.pread(0, seg)
+        out["first_byte_s"] = time.perf_counter() - t0
+        got = r.pread(0, total)
+        out["recover_s"] = time.perf_counter() - t0
+        out["first_exact"] = first == data[:seg]
+        out["exact"] = got == data
+        ns = sys2.manager.namespace.get("ckpt", {})
+        out["ns_known"] = bool(ns.get("synced"))
+        out["ns_size"] = ns.get("size", 0)
+        stats = sys2.server_stats()
+        out["recovered_keys"] = sum(s.get("recovered_keys", 0)
+                                    for s in stats.values())
+        out["recovered_mb"] = sum(s.get("recovered_bytes", 0)
+                                  for s in stats.values()) / 1e6
+        out["server_errors"] = len(sys2.manager.errors)
+        out["recovered_mbps"] = total / out["recover_s"] / 1e6
+        out["ok"] = (out["exact"] and out["first_exact"]
+                     and out["recovered_keys"] > 0
+                     and out["ns_known"] and out["ns_size"] == total
+                     and out["server_errors"] == 0)
+    finally:
+        sys2.stop()
+        shutil.rmtree(base, ignore_errors=True)
+    return out
+
+
+def main():
+    res = run_recovery()
+    total = res["total_mb"] << 20
+    return [
+        ("recovery_first_byte", res["first_byte_s"] * 1e6,
+         f"cold restart -> first chunk in {res['first_byte_s']:.3f}s"),
+        ("recovery_full_readback", res["recover_s"] * 1e6,
+         f"{res['recovered_mbps']:.0f} MB/s over {total >> 20} MB "
+         f"({res['recovered_keys']} keys replayed)"),
+    ], res
+
+
+if __name__ == "__main__":
+    from benchmarks import jsonout
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="capped CI run: fails unless the cold restart "
+                         "recovers every acked SSD-resident byte byte-exact")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results to PATH")
+    args = ap.parse_args()
+    if args.smoke:
+        res = run_recovery(total_mb=8, seg_kb=64, n_servers=2)
+        for k, v in res.items():
+            print(f"{k:>16}: {v:.2f}" if isinstance(v, float)
+                  else f"{k:>16}: {v}")
+        jsonout.dump(args.json, "bench_recovery", res)
+        if not res["ok"]:
+            print("bench_recovery: FAILED (see fields above)",
+                  file=sys.stderr)
+            raise SystemExit(1)
+        print(f"bench_smoke_recovery,0.0,"
+              f"{res['recovered_mbps']:.0f}MB/s OK")
+    else:
+        rows, res = main()
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        jsonout.dump(args.json, "bench_recovery", res)

@@ -21,6 +21,7 @@ METRICS = {
     "bench_drain": ["sustained_mbps", "readback_mbps"],
     "bench_restart": ["speedup"],
     "bench_qos": ["p99_speedup"],
+    "bench_recovery": ["recovered_mbps"],
 }
 
 

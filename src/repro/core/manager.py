@@ -15,9 +15,22 @@ never thrash the same segments — broadcasting stage_begin to the ring
 snapshot; the epoch completes when every participant reports stage_done,
 and aborts (harmlessly: staged bytes are clean copies of durable data) on
 death or timeout. Clients poll stage_status for the outcome.
-Collocated with a server on a real deployment."""
+Collocated with a server on a real deployment.
+
+Crash recovery (ISSUE 8): the manager keeps an append-only JSON-lines
+journal of its durable state — the fs namespace registry, the global lookup
+table (file -> flushed size, learned from flush_done reports), and the
+drain/stage epoch counters — each record fsynced before the triggering
+request is acked. A restarted manager replays the journal before its first
+message (truncating a torn tail at the first unparsable line), so manager
+death is a failover, not a metadata outage: stat/list answer for files
+synced before the crash, range reads find their lookup sizes (re-seeded to
+servers and through ring bootstrap), and re-allocated epoch ids can never
+collide with pre-crash ones."""
 from __future__ import annotations
 
+import json
+import os
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Set
@@ -38,6 +51,7 @@ class BBManager(threading.Thread):
                  poll_interval: float = 0.05,
                  flush_poll_interval: float = 0.01,
                  drain_serialize_poll: float = 0.005,
+                 journal_path: Optional[str] = None,
                  clock: Callable[[], float] = time.monotonic):
         super().__init__(daemon=True, name=name)
         self.tname = name
@@ -60,6 +74,12 @@ class BBManager(threading.Thread):
         self.errors: List[dict] = []
         # file-session namespace (BBFileSystem): path -> metadata
         self.namespace: Dict[str, dict] = {}
+        # global lookup table (file -> flushed size), max-merged from
+        # flush_done reports; journaled and re-seeded to servers via ring
+        # messages so range reads survive a whole-cluster restart (ISSUE 8)
+        self.lookup: Dict[str, int] = {}
+        self.journal_path = journal_path
+        self._journal_fh = None
         # drain coordination: per-server pressure reports + one in-flight
         # micro-epoch at a time (overlapping epochs share server-side
         # shuffle buffers; serializing them keeps eviction decisions sound)
@@ -71,6 +91,10 @@ class BBManager(threading.Thread):
         self._next_drain_epoch = DRAIN_EPOCH_BASE
         self._flush_lock = locktrack.lock("BBManager._flush_lock")
         self._user_flushes: Dict[int, float] = {}   # epoch -> begin time
+        # participant snapshot per user flush epoch, taken at begin_flush:
+        # completion is judged against it, never against an empty ring
+        # (ISSUE 8 satellite — set() >= set() was vacuously True)
+        self._flush_expected: Dict[int, Set[str]] = {}
         # stage-in coordination (ISSUE 4): one stage epoch at a time,
         # serialized against drain micro-epochs; finished epochs keep a
         # bounded result record for stage_status polling
@@ -87,7 +111,18 @@ class BBManager(threading.Thread):
         return self.ring_ready.wait(timeout)
 
     def flush_complete(self, epoch: int) -> bool:
-        return self.flush_done.get(epoch, set()) >= set(self.alive_ring())
+        """True once every PARTICIPANT — the alive ring snapshotted at
+        begin_flush — reported flush_done, excusing mid-epoch deaths. The
+        empty set is never a quorum: before any server registers, or after
+        the whole snapshot died, this is False (the old comparison against
+        the live ring made ``set() >= set()`` vacuously True). Reads the
+        snapshot without _flush_lock — _on_flush_done calls in holding it,
+        and dict reads are atomic under the GIL."""
+        expected = self._flush_expected.get(epoch)
+        if expected is None:
+            expected = set(self.alive_ring())
+        live = expected - self.dead
+        return bool(live) and self.flush_done.get(epoch, set()) >= live
 
     def wait_flush(self, epoch: int, timeout: float = 30.0) -> bool:
         deadline = self._clock() + timeout
@@ -102,6 +137,9 @@ class BBManager(threading.Thread):
 
     # --------------------------------------------------------------- thread
     def run(self):
+        # replay the journal before the first message: handlers must never
+        # observe (or journal over) a half-recovered namespace
+        self._replay_journal()
         while not self._stop.is_set():
             msg = self.ep.recv(timeout=self.poll_interval)
             now = self._clock()
@@ -117,6 +155,76 @@ class BBManager(threading.Thread):
             handler = getattr(self, f"_on_{msg.kind}", None)
             if handler is not None:
                 handler(msg)
+        # close in the owning thread, after the last handler could write
+        fh, self._journal_fh = self._journal_fh, None
+        if fh is not None:
+            fh.close()
+
+    # ------------------------------------------------- recovery journal
+    def _journal(self, rec: dict):
+        """Append one journal record, durable before return: the ack a
+        handler sends after this is a promise the metadata survives."""
+        if not self.journal_path:
+            return
+        if self._journal_fh is None:
+            self._journal_fh = open(self.journal_path, "ab")
+        self._journal_fh.write(json.dumps(rec, sort_keys=True).encode()
+                               + b"\n")
+        self._journal_fh.flush()
+        os.fsync(self._journal_fh.fileno())
+
+    def _journal_ns(self, path: str):
+        ent = self.namespace.get(path)
+        if ent is not None:
+            self._journal({"op": "ns", "path": path,
+                           "size": ent["size"], "synced": ent["synced"]})
+
+    def _replay_journal(self):
+        """Rebuild namespace/lookup/epoch counters from the journal. Stops
+        at the first unparsable or incomplete line (a torn tail from a
+        mid-append crash) and truncates it away so the append-only
+        invariant holds for the new incarnation."""
+        if not self.journal_path or not os.path.exists(self.journal_path):
+            return
+        good = 0
+        with open(self.journal_path, "rb") as fh:
+            for line in fh:
+                if not line.endswith(b"\n"):
+                    break
+                try:
+                    self._apply_journal(json.loads(line))
+                except (ValueError, KeyError, TypeError):
+                    break
+                good += len(line)
+        if good < os.path.getsize(self.journal_path):
+            with open(self.journal_path, "r+b") as fh:
+                fh.truncate(good)
+                fh.flush()
+                os.fsync(fh.fileno())
+
+    def _apply_journal(self, rec: dict):
+        op = rec["op"]
+        if op == "ns":
+            self.namespace[rec["path"]] = {
+                "size": int(rec["size"]), "synced": bool(rec["synced"]),
+                "opened_by": set()}   # sessions do not survive a restart
+        elif op == "ns_del":
+            self.namespace.pop(rec["path"], None)
+        elif op == "lookup":
+            for f, sz in rec["sizes"].items():
+                if int(sz) > self.lookup.get(f, -1):
+                    self.lookup[f] = int(sz)
+        elif op == "lookup_del":
+            self.lookup.pop(rec["path"], None)
+        elif op == "epoch":
+            # re-allocated ids must never collide with pre-crash ones
+            if "drain" in rec:
+                self._next_drain_epoch = max(self._next_drain_epoch,
+                                             int(rec["drain"]) + 1)
+            if "stage" in rec:
+                self._next_stage_epoch = max(self._next_stage_epoch,
+                                             int(rec["stage"]) + 1)
+        # unknown ops from a newer incarnation are ignored, not fatal
 
     def _sweep_stale_flushes(self, now: float):
         """A user epoch wedged past any plausible completion must not
@@ -144,8 +252,13 @@ class BBManager(threading.Thread):
                                   "dead": sorted(self.dead)})
 
     def _broadcast_ring(self):
+        # the lookup table rides along so a recovered manager re-seeds
+        # flushed-file sizes into every server at ring formation (ISSUE 8)
         for dst in list(self.ring) + sorted(self.clients):
-            self.transport.send(self.tname, dst, "ring", {"ring": self.ring})
+            self.transport.send(self.tname, dst, "ring",
+                                {"ring": self.ring,
+                                 "dead": sorted(self.dead),
+                                 "lookup": dict(self.lookup)})
 
     def _on_failure_report(self, msg: Message):
         dead = msg.payload["dead"]
@@ -179,12 +292,26 @@ class BBManager(threading.Thread):
         for dst in self.alive_ring() + sorted(self.clients):
             self.transport.send(self.tname, dst, "ring_update",
                                 {"joined": [server], "pred": pred})
+        # the joiner itself gets the authoritative membership + lookup
+        # table directly — a crash-restarted server rejoins with an empty
+        # lookup and must relearn flushed-file sizes for range reads
+        self.transport.send(self.tname, server, "ring",
+                            {"ring": self.ring, "dead": sorted(self.dead),
+                             "lookup": dict(self.lookup)})
 
     def _on_flush_done(self, msg: Message):
         epoch = msg.payload["epoch"]
         self.flush_done.setdefault(epoch, set()).add(msg.payload["server"])
         self.flush_bytes[epoch] = self.flush_bytes.get(epoch, 0) \
             + msg.payload.get("bytes", 0)
+        # learn flushed-file sizes (max-merge, like the servers' own
+        # lookup tables) and journal only what actually grew
+        grown = {f: int(sz)
+                 for f, sz in msg.payload.get("sizes", {}).items()
+                 if int(sz) > self.lookup.get(f, -1)}
+        if grown:
+            self.lookup.update(grown)
+            self._journal({"op": "lookup", "sizes": grown})
         # completion ledgers are bounded FIFO caches: epochs that aborted
         # (their flush_done never reaches quorum) would otherwise leak an
         # entry forever
@@ -231,6 +358,7 @@ class BBManager(threading.Thread):
             return
         epoch = self._next_drain_epoch
         self._next_drain_epoch += 1
+        self._journal({"op": "epoch", "drain": epoch})
         self._drain = {"epoch": epoch, "started": self._clock(),
                        "expected": set(self.alive_ring()), "done": set(),
                        "drained": set(), "bytes": 0,
@@ -293,6 +421,7 @@ class BBManager(threading.Thread):
             return
         epoch = self._next_stage_epoch
         self._next_stage_epoch += 1
+        self._journal({"op": "epoch", "stage": epoch})
         ring = self.alive_ring()
         self._stage = {"epoch": epoch, "path": msg.payload["path"],
                        "started": self._clock(),
@@ -361,6 +490,7 @@ class BBManager(threading.Thread):
         if msg.payload.get("mode") == "w":
             ent["size"] = 0
             ent["synced"] = False
+        self._journal_ns(path)
         self.transport.reply(self.tname, msg, "fs_open_ack",
                              {"path": path, "existed": existed,
                               "size": ent["size"]})
@@ -372,6 +502,9 @@ class BBManager(threading.Thread):
             path, {"size": 0, "synced": False, "opened_by": set()})
         ent["size"] = max(ent["size"], msg.payload.get("size", 0))
         ent["synced"] = True
+        # journaled BEFORE the ack: once the app's sync() returns, the
+        # path's existence and size survive a manager crash
+        self._journal_ns(path)
         self.transport.reply(self.tname, msg, "fs_sync_ack", {"path": path})
 
     def _on_fs_stat(self, msg: Message):
@@ -397,6 +530,10 @@ class BBManager(threading.Thread):
         if ent is not None:
             ent["size"] = 0
             ent["synced"] = False
+            self._journal_ns(path)
+        if path in self.lookup:
+            self.lookup.pop(path, None)
+            self._journal({"op": "lookup_del", "path": path})
         self.transport.reply(self.tname, msg, "fs_truncate_ack",
                              {"path": path})
 
@@ -405,7 +542,11 @@ class BBManager(threading.Thread):
         server. Uses the exact-match file_truncate message, NOT prefix
         eviction — unlinking "run" must not destroy "run_info.txt"."""
         path = msg.payload["path"]
-        self.namespace.pop(path, None)
+        if self.namespace.pop(path, None) is not None:
+            self._journal({"op": "ns_del", "path": path})
+        if path in self.lookup:
+            self.lookup.pop(path, None)
+            self._journal({"op": "lookup_del", "path": path})
         for s in self.alive_ring():
             self.transport.send(self.tname, s, "file_truncate",
                                 {"file": path})
@@ -425,6 +566,11 @@ class BBManager(threading.Thread):
             time.sleep(self.drain_serialize_poll)
         with self._flush_lock:
             self._user_flushes[epoch] = self._clock()
+            # participant snapshot for flush_complete(); bounded FIFO like
+            # the done/bytes ledgers (aborted epochs never clean up)
+            self._flush_expected[epoch] = set(self.alive_ring())
+            while len(self._flush_expected) > self.flush_ledger_cap:
+                self._flush_expected.pop(next(iter(self._flush_expected)))
         for s in self.alive_ring():
             self.transport.send(self.tname, s, "flush_begin", {"epoch": epoch})
 

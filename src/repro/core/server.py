@@ -133,6 +133,7 @@ class BBServer(threading.Thread):
                       "stage_epochs": 0, "staged_bytes": 0,
                       "clean_evictions": 0, "clean_evicted_bytes": 0,
                       "bypass_chunks": 0, "bypass_bytes": 0,
+                      "recovered_keys": 0, "recovered_bytes": 0,
                       "puts_by_lane": [0] * len(qos.LANES)}
         # unknown-kind messages (protocol black-hole detector, ISSUE 6):
         # kind -> count; surfaced in drain_pressure and stats_query, and the
@@ -178,6 +179,11 @@ class BBServer(threading.Thread):
 
     # ---------------------------------------------------------------- thread
     def run(self):
+        # Crash recovery (ISSUE 8): if the LogStore came up over a surviving
+        # SSD log, rebuild the chunk manifests from the recovered keys
+        # before touching the inbox — messages just queue up meanwhile, so
+        # no read can observe a half-rebuilt manifest.
+        self._recover_manifests()
         while not self._stop.is_set():
             # With QoS enabled, the inbox is drained in bursts: control
             # messages dispatch immediately (reads and pings stay responsive
@@ -264,10 +270,36 @@ class BBServer(threading.Thread):
             return
         handler(msg)
 
+    def _recover_manifests(self):
+        """Rebuild per-file chunk manifests from keys a LogStore recovery
+        brought back (ISSUE 8). Chunk keys are ``{path}:{offset}``; anything
+        else (no separator, non-numeric offset) is kept readable by key but
+        cannot join a file manifest."""
+        keys = self.store.recovered_keys
+        if not keys:
+            return
+        lengths = self.store.items_bytes()
+        nbytes = 0
+        for key in keys:
+            length = lengths.get(key)
+            if length is None:
+                continue
+            file, sep, off = key.rpartition(":")
+            if sep and file and off.isdigit():
+                self._record_segment(key, file, int(off), length)
+            nbytes += length
+        self.stats["recovered_keys"] = len(keys)
+        self.stats["recovered_bytes"] = nbytes
+
     # ring bootstrap / updates -------------------------------------------
     def _on_ring(self, msg: Message):
         self.ring = list(msg.payload["ring"])
-        self.alive = {s: True for s in self.ring}
+        dead = set(msg.payload.get("dead", []))
+        self.alive = {s: s not in dead for s in self.ring}
+        # a manager journal replay re-seeds the lookup table through the
+        # ring bootstrap, so range reads of flushed files survive a
+        # whole-cluster restart (ISSUE 8)
+        self._merge_lookup(msg.payload.get("lookup", {}))
 
     def _on_ring_update(self, msg: Message):
         dead = msg.payload.get("dead", [])
@@ -594,6 +626,8 @@ class BBServer(threading.Thread):
         for off, (key, _ln) in self._evicted_files.pop(f, {}).items():
             self.store.delete(key)      # clears the tombstone too
             self._evicted.pop(key, None)
+        # a replay must not resurrect chunks of the truncated file
+        self.store.sync()
         self.lookup_table.pop(f, None)
         self._domain_data.pop(f, None)
         self.transport.reply(self.tname, msg, "file_truncate_ack",
@@ -628,6 +662,10 @@ class BBServer(threading.Thread):
                 self._evicted[key] = (f, c_off, c_ln)
                 self._evicted_files.setdefault(f, {})[c_off] = (key, c_ln)
                 self._drop_segment(key)
+        # harden the tombstones NOW: here (unlike a drain evict) the PFS
+        # copy is NEWER than the buffered bytes, so a replay resurrecting
+        # them would serve stale data
+        self.store.sync()
         for s_off, s_ln, owner in p.get("chunks", ()):
             if owner != self.tname:
                 continue
@@ -948,6 +986,7 @@ class BBServer(threading.Thread):
         self.transport.send(self.tname, self.manager, "flush_done",
                             {"epoch": epoch, "server": self.tname,
                              "bytes": written,
+                             "sizes": dict(st["epoch_sizes"] or {}),
                              "drained": dr["keys"] if dr else []})
 
     # autonomous drain engine (ISSUE 3) --------------------------------------

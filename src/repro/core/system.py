@@ -81,21 +81,13 @@ class BurstBufferSystem:
                                  drain_epoch_timeout=cfg.drain.epoch_timeout_s,
                                  poll_interval=cfg.manager_poll_interval,
                                  flush_poll_interval=cfg.flush_poll_interval,
-                                 drain_serialize_poll=cfg.drain_serialize_poll)
+                                 drain_serialize_poll=cfg.drain_serialize_poll,
+                                 journal_path=os.path.join(
+                                     self.ssd_dir, "manager.journal"))
         self.servers: Dict[str, BBServer] = {}
         for i in range(cfg.num_servers):
             name = f"server/{i}"
-            self.servers[name] = BBServer(
-                name, self.transport,
-                dram_capacity=cfg.dram_capacity,
-                ssd_dir=self.ssd_dir,
-                ssd_capacity=cfg.ssd_capacity,
-                segment_bytes=cfg.segment_bytes,
-                pfs_dir=self.pfs_dir,
-                replication=cfg.replication,
-                stabilize_interval=cfg.stabilize_interval,
-                poll_interval=cfg.server_poll_interval,
-                drain=cfg.drain, stage=cfg.stage, qos_cfg=cfg.qos)
+            self.servers[name] = self._make_server(name)
         self.clients: List[BBClient] = [
             BBClient(f"client/{i}", self.transport, client_index=i,
                      placement=cfg.placement, replication=cfg.replication,
@@ -112,6 +104,22 @@ class BurstBufferSystem:
                      qos_cfg=cfg.qos)
             for i in range(cfg.num_clients)]
         self._fs: Optional[BBFileSystem] = None
+
+    def _make_server(self, name: str) -> BBServer:
+        """One construction path for initial, joining AND crash-restarted
+        servers — a restarted server MUST come up with the same ssd_dir so
+        its LogStore recovers the previous incarnation's log (ISSUE 8)."""
+        cfg = self.cfg
+        return BBServer(name, self.transport,
+                        dram_capacity=cfg.dram_capacity,
+                        ssd_dir=self.ssd_dir,
+                        ssd_capacity=cfg.ssd_capacity,
+                        segment_bytes=cfg.segment_bytes,
+                        pfs_dir=self.pfs_dir,
+                        replication=cfg.replication,
+                        stabilize_interval=cfg.stabilize_interval,
+                        poll_interval=cfg.server_poll_interval,
+                        drain=cfg.drain, stage=cfg.stage, qos_cfg=cfg.qos)
 
     # ---------------------------------------------------------------- launch
     def start(self):
@@ -174,17 +182,7 @@ class BurstBufferSystem:
     def join_server(self, pred: Optional[str] = None) -> str:
         i = len(self.servers)
         name = f"server/{i}"
-        srv = BBServer(name, self.transport,
-                       dram_capacity=self.cfg.dram_capacity,
-                       ssd_dir=self.ssd_dir,
-                       ssd_capacity=self.cfg.ssd_capacity,
-                       segment_bytes=self.cfg.segment_bytes,
-                       pfs_dir=self.pfs_dir,
-                       replication=self.cfg.replication,
-                       stabilize_interval=self.cfg.stabilize_interval,
-                       poll_interval=self.cfg.server_poll_interval,
-                       drain=self.cfg.drain, stage=self.cfg.stage,
-                       qos_cfg=self.cfg.qos)
+        srv = self._make_server(name)
         self.servers[name] = srv
         srv.start()
         # the joining server knows the ring via the manager's ring_update;
@@ -194,6 +192,23 @@ class BurstBufferSystem:
         self.transport.send(name, "manager", "join_request",
                             {"server": name, "pred": pred})
         return name
+
+    def restart_server(self, name: str, pred: Optional[str] = None) -> BBServer:
+        """Crash-recovery restart (ISSUE 8): bring a killed server back over
+        its surviving SSD log. The new incarnation's LogStore replays the
+        log (last-gen-wins, torn tail truncated), the server rebuilds its
+        chunk manifests from the recovered keys, re-registers its transport
+        endpoint (un-black-holing it), and rejoins the ring through the
+        existing join_request path — the manager un-marks it dead and sends
+        it the authoritative ring + lookup table."""
+        srv = self._make_server(name)
+        self.servers[name] = srv
+        srv.start()
+        srv.ring = self.manager.alive_ring() + [name]
+        srv.alive = {s: True for s in srv.ring}
+        self.transport.send(name, "manager", "join_request",
+                            {"server": name, "pred": pred})
+        return srv
 
     def server_stats(self) -> Dict[str, dict]:
         out = {}

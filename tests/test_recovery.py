@@ -1,0 +1,371 @@
+"""ISSUE 8: whole-cluster crash recovery from the SSD logs.
+
+LogStore-level: the self-describing record log replays last-gen-wins with
+torn tails truncated, tombstones converge deletes/evicts, the clean flag
+survives, and the cached read handle survives compaction races.
+Manager-level: flush_complete is no longer vacuously True on an empty ring,
+and the append-only journal replays namespace/lookup/epoch counters.
+System-level: a killed server restarts over its surviving log and rejoins
+the ring byte-exact; a whole-cluster restart recovers acked SSD-resident
+data end to end.
+"""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BBConfig, BBManager, BurstBufferSystem, Transport
+from repro.core.manager import DRAIN_EPOCH_BASE, STAGE_EPOCH_BASE
+from repro.core.tiering import LogStore
+
+
+def _ssd_store(tmp_path, name="r0", **kw):
+    kw.setdefault("ssd_capacity", 1 << 30)
+    return LogStore(0, str(tmp_path), name=name, **kw)
+
+
+# --------------------------------------------------- LogStore log replay
+
+def test_recover_rebuilds_index_byte_exact(tmp_path):
+    store = _ssd_store(tmp_path)
+    data = {f"f:{i * 100}": os.urandom(3000 + i) for i in range(30)}
+    for k, v in data.items():
+        store.put(k, v)                     # dram_capacity=0: all spill
+    assert all(store.tier_of(k) == "ssd" for k in data)
+    restarted = _ssd_store(tmp_path)        # same dir: recover, not wipe
+    assert sorted(restarted.recovered_keys) == sorted(data)
+    assert restarted.ssd_used == store.ssd_used
+    for k, v in data.items():
+        assert restarted.get(k) == v, k
+    # generation counter resumes past every replayed record: the next put
+    # must outrank anything already in the log
+    restarted.put("f:0", b"newer")
+    assert restarted.gen_of("f:0") > store.gen_of("f:2900")
+
+
+def test_recover_truncates_torn_tail(tmp_path):
+    store = _ssd_store(tmp_path)
+    for i in range(10):
+        store.put(f"k:{i}", bytes([i]) * 2000)
+    good_size = os.path.getsize(store._ssd_path)
+    with open(store._ssd_path, "ab") as fh:
+        fh.write(b"BBR1" + os.urandom(40))  # torn record: magic, no CRC
+    restarted = _ssd_store(tmp_path)
+    assert len(restarted.recovered_keys) == 10
+    assert os.path.getsize(restarted._ssd_path) == good_size, \
+        "torn tail must be truncated away"
+    for i in range(10):
+        assert restarted.get(f"k:{i}") == bytes([i]) * 2000
+    # the truncated log appends cleanly (the invariant the truncation buys)
+    restarted.put("k:10", b"after-torn-tail" * 100)
+    again = _ssd_store(tmp_path)
+    assert again.get("k:10") == b"after-torn-tail" * 100
+
+
+def test_recover_mid_record_crash_truncates(tmp_path):
+    """A crash mid-append leaves a half-written record: CRC catches it."""
+    store = _ssd_store(tmp_path)
+    for i in range(8):
+        store.put(f"k:{i}", b"v" * 4096)
+    size = os.path.getsize(store._ssd_path)
+    with open(store._ssd_path, "r+b") as fh:
+        fh.truncate(size - 1000)            # tear the LAST record
+    restarted = _ssd_store(tmp_path)
+    assert len(restarted.recovered_keys) == 7
+    for i in range(7):
+        assert restarted.get(f"k:{i}") == b"v" * 4096
+    assert restarted.get("k:7") is None
+
+
+def test_recover_last_gen_wins_over_rewrites(tmp_path):
+    """Rewrites leave multiple records per key; compact() may then reorder
+    them (it rewrites in offset order, not gen order) — replay must compare
+    generations, never trust file order."""
+    store = _ssd_store(tmp_path)
+    for ver in range(3):
+        for i in range(6):
+            store.put(f"k:{i}", f"v{ver}-{i}".encode() * 50)
+    restarted = _ssd_store(tmp_path)
+    for i in range(6):
+        assert restarted.get(f"k:{i}") == f"v2-{i}".encode() * 50, \
+            "replay resurrected a stale generation"
+    # now compact (drops dead records, reorders survivors) and re-recover
+    restarted.delete("k:0")
+    restarted.compact()
+    again = _ssd_store(tmp_path)
+    assert again.get("k:0") is None
+    for i in range(1, 6):
+        assert again.get(f"k:{i}") == f"v2-{i}".encode() * 50
+
+
+def test_tombstone_replay_of_evicted_and_deleted_keys(tmp_path):
+    store = _ssd_store(tmp_path)
+    for i in range(10):
+        store.put(f"k:{i}", b"e" * 1024)
+    store.evict("k:3")                      # drained: PFS copy is truth
+    store.delete("k:4")                     # unlinked outright
+    restarted = _ssd_store(tmp_path)
+    assert restarted.get("k:3") is None
+    assert restarted.get("k:4") is None
+    assert "k:3" not in restarted.recovered_keys
+    assert "k:4" not in restarted.recovered_keys
+    assert len(restarted.recovered_keys) == 8
+
+
+def test_clean_flag_survives_restart(tmp_path):
+    store = _ssd_store(tmp_path)
+    store.put("c:0", b"staged" * 100, clean=True)
+    store.put("d:0", b"dirty" * 100)
+    assert store.is_clean("c:0") and not store.is_clean("d:0")
+    restarted = _ssd_store(tmp_path)
+    assert restarted.is_clean("c:0"), \
+        "clean flag lost: recovered staged bytes would need a flush epoch"
+    assert not restarted.is_clean("d:0")
+
+
+def test_spill_is_fsynced_before_index_publishes(tmp_path):
+    """The index may only say tier 'ssd' once the bytes are recoverable:
+    a restart immediately after a spill must read every spilled key."""
+    store = _ssd_store(tmp_path)
+    store.put("k:0", b"z" * 8192)           # spill happens inside put()
+    assert store.tier_of("k:0") == "ssd"
+    restarted = _ssd_store(tmp_path)        # no close(), no extra flush
+    assert restarted.get("k:0") == b"z" * 8192
+
+
+# ------------------------------------- cached read handle (ISSUE 8 sat. 3)
+
+def test_ssd_reads_reuse_cached_handle_and_survive_compact(tmp_path):
+    store = LogStore(32 << 10, str(tmp_path), name="h0",
+                     segment_bytes=8 << 10)
+    data = {f"k:{i}": os.urandom(4 << 10) for i in range(32)}
+    for k, v in data.items():
+        store.put(k, v)
+    ssd_keys = [k for k in data if store.tier_of(k) == "ssd"]
+    assert ssd_keys
+    assert store.get(ssd_keys[0]) == data[ssd_keys[0]]
+    fh = store._read_fh
+    assert fh is not None, "SSD read must cache its handle"
+    assert store.get(ssd_keys[-1]) == data[ssd_keys[-1]]
+    assert store._read_fh is fh, "handle must be reused across reads"
+
+    stop = threading.Event()
+    errors = []
+
+    def _reader():
+        while not stop.is_set():
+            for k, v in data.items():
+                got = store.get(k)
+                if got is not None and got != v:
+                    errors.append(k)
+                    return
+
+    threads = [threading.Thread(target=_reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for k in ssd_keys[::2]:                 # force repeated log rewrites
+        store.delete(k)
+        store.compact()
+    stop.set()
+    for t in threads:
+        t.join(10.0)
+    assert not errors, f"stale handle served wrong bytes: {errors[:3]}"
+    assert store._read_fh is not fh, "compact must invalidate the handle"
+    for k in ssd_keys[1::2]:
+        assert store.get(k) == data[k]
+
+
+# ------------------------------------------- manager: flush completion fix
+
+def test_flush_complete_not_vacuous_on_empty_ring():
+    m = BBManager(Transport(), expected_servers=2)
+    # seed PR 8 regression: set() >= set() made this True before any
+    # server ever registered
+    assert not m.flush_complete(5)
+    m.ring = ["s0", "s1"]
+    assert not m.flush_complete(5)
+    m.flush_done[5] = {"s0"}
+    assert not m.flush_complete(5)
+    m.flush_done[5] = {"s0", "s1"}
+    assert m.flush_complete(5)
+
+
+def test_flush_complete_against_participant_snapshot():
+    m = BBManager(Transport(), expected_servers=2)
+    m.ring = ["s0", "s1"]
+    m._flush_expected[7] = {"s0", "s1"}
+    m.flush_done[7] = {"s0"}
+    assert not m.flush_complete(7)
+    m.dead.add("s1")                        # mid-epoch death is excused
+    assert m.flush_complete(7)
+    m.dead.add("s0")                        # whole snapshot dead: never
+    assert not m.flush_complete(7), \
+        "an all-dead snapshot must not report success"
+
+
+# --------------------------------------------- manager: journal replay
+
+def test_manager_journal_replay(tmp_path):
+    jpath = str(tmp_path / "manager.journal")
+    records = [
+        {"op": "ns", "path": "a", "size": 100, "synced": True},
+        {"op": "ns", "path": "b", "size": 7, "synced": True},
+        {"op": "lookup", "sizes": {"a": 100}},
+        {"op": "epoch", "drain": DRAIN_EPOCH_BASE + 6},
+        {"op": "epoch", "stage": STAGE_EPOCH_BASE + 12},
+        {"op": "ns_del", "path": "b"},
+        {"op": "lookup_del", "path": "zzz"},
+    ]
+    with open(jpath, "wb") as fh:
+        for rec in records:
+            fh.write(json.dumps(rec).encode() + b"\n")
+        good = fh.tell()
+        fh.write(b'{"op":"ns","pa')        # torn tail from a mid-append crash
+    m = BBManager(Transport(), expected_servers=1, journal_path=jpath)
+    m._replay_journal()
+    assert m.namespace == {"a": {"size": 100, "synced": True,
+                                 "opened_by": set()}}
+    assert m.lookup == {"a": 100}
+    # re-allocated epoch ids can never collide with pre-crash ones
+    assert m._next_drain_epoch == DRAIN_EPOCH_BASE + 7
+    assert m._next_stage_epoch == STAGE_EPOCH_BASE + 13
+    assert os.path.getsize(jpath) == good, "torn tail must be truncated"
+
+
+def test_manager_journal_round_trip(tmp_path):
+    """What one manager journals, its successor replays — driven through
+    the real handlers, not hand-written records."""
+    from repro.core.transport import Message
+    jpath = str(tmp_path / "manager.journal")
+    tr = Transport()
+    probe = tr.register("probe")
+    m1 = BBManager(tr, expected_servers=1, journal_path=jpath)
+    m1.ring = ["s0"]
+    m1._on_fs_open(Message("fs_open", "probe", "manager",
+                           {"path": "ckpt", "mode": "w"}, msg_id=1))
+    m1._on_fs_sync(Message("fs_sync", "probe", "manager",
+                           {"path": "ckpt", "size": 4096}, msg_id=2))
+    m1._on_flush_done(Message("flush_done", "s0", "manager",
+                              {"epoch": 1, "server": "s0", "bytes": 4096,
+                               "sizes": {"ckpt": 4096}}, msg_id=3))
+    while probe.recv(timeout=0) is not None:
+        pass                                # drain the acks
+    m2 = BBManager(tr, expected_servers=1, name="manager2",
+                   journal_path=jpath)
+    m2._replay_journal()
+    assert m2.namespace["ckpt"]["size"] == 4096
+    assert m2.namespace["ckpt"]["synced"] is True
+    assert m2.lookup == {"ckpt": 4096}
+
+
+# ---------------------------------------------------- system-level restart
+
+def _recovery_cfg(ssd_dir, pfs_dir, replication=1):
+    cfg = BBConfig(num_servers=2, num_clients=2, replication=replication,
+                   dram_capacity=0,         # every acked byte is SSD-resident
+                   ssd_capacity=1 << 30,
+                   ssd_dir=str(ssd_dir), pfs_dir=str(pfs_dir),
+                   chunk_bytes=32 << 10)
+    cfg.drain.enabled = False               # the logs stay the only copy
+    return cfg
+
+
+def test_single_server_kill_and_restart_rejoins_byte_exact(tmp_path):
+    """replication=1: the killed server's chunks exist nowhere else, so a
+    byte-exact read after restart proves log recovery, not replica reads."""
+    cfg = _recovery_cfg(tmp_path / "ssd", tmp_path / "pfs")
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 256, 512 << 10, dtype=np.uint8).tobytes()
+    with BurstBufferSystem(cfg) as sys_:
+        fs = sys_.fs()
+        with fs.open("ckpt", "w", policy="batched",
+                     chunk_bytes=32 << 10) as f:
+            f.pwrite(data, 0)
+        victim = "server/0"
+        sys_.kill_server(victim)
+        deadline = time.monotonic() + 6
+        while time.monotonic() < deadline \
+                and victim not in sys_.manager.dead:
+            time.sleep(0.05)
+        assert victim in sys_.manager.dead, "failure detection missed"
+
+        srv = sys_.restart_server(victim)
+        deadline = time.monotonic() + 6
+        while time.monotonic() < deadline and victim in sys_.manager.dead:
+            time.sleep(0.05)
+        assert victim not in sys_.manager.dead, "rejoin not processed"
+        assert srv.stats["recovered_keys"] > 0, \
+            "restart did not replay the SSD log"
+        # reads need the clients to have digested the rejoin: poll briefly
+        r = sys_.fs().open("ckpt", "r")
+        deadline = time.monotonic() + 6
+        got = None
+        while time.monotonic() < deadline:
+            got = r.pread(0, len(data))
+            if got == data:
+                break
+            time.sleep(0.1)
+        assert got == data, "restarted server did not serve its bytes back"
+
+
+def test_whole_cluster_restart_recovers_acked_bytes(tmp_path):
+    """The tentpole end to end: nothing was flushed to the PFS, the whole
+    cluster dies, and a cold start over the surviving SSD directory serves
+    every acked byte byte-exact with the namespace rebuilt."""
+    cfg = _recovery_cfg(tmp_path / "ssd", tmp_path / "pfs", replication=2)
+    rng = np.random.default_rng(4)
+    data = rng.integers(0, 256, 768 << 10, dtype=np.uint8).tobytes()
+    with BurstBufferSystem(cfg) as sys_:
+        fs = sys_.fs()
+        with fs.open("ckpt", "w", policy="batched",
+                     chunk_bytes=32 << 10) as f:
+            f.pwrite(data, 0)
+        st = fs.stat("ckpt")
+        assert st["residency"]["dram"] == 0
+        assert st["residency"]["ssd"] >= len(data)
+        assert not os.path.exists(str(tmp_path / "pfs" / "ckpt")), \
+            "test premise broken: bytes reached the PFS"
+
+    with BurstBufferSystem(cfg) as sys2:
+        fs2 = sys2.fs()
+        st = fs2.stat("ckpt")               # manager journal: ns rebuilt
+        assert st["size"] == len(data)
+        assert "ckpt" in fs2.listdir()
+        got = fs2.open("ckpt", "r").pread(0, len(data))
+        assert got == data, "cold-cluster restart lost acked bytes"
+        stats = sys2.server_stats()
+        assert sum(s.get("recovered_keys", 0) for s in stats.values()) > 0
+
+
+def test_restart_lookup_table_reseeded_from_journal(tmp_path):
+    """A FLUSHED file's lookup size must survive a whole-cluster restart:
+    the manager journals it and re-seeds servers via the ring broadcast,
+    so post-restart range reads still find the PFS-resident bytes."""
+    cfg = _recovery_cfg(tmp_path / "ssd", tmp_path / "pfs", replication=2)
+    rng = np.random.default_rng(5)
+    data = rng.integers(0, 256, 256 << 10, dtype=np.uint8).tobytes()
+    with BurstBufferSystem(cfg) as sys_:
+        fs = sys_.fs()
+        with fs.open("flushed", "w", policy="batched",
+                     chunk_bytes=32 << 10) as f:
+            f.pwrite(data, 0)
+        assert sys_.flush(epoch=1, timeout=30)
+        assert sys_.manager.lookup.get("flushed") == len(data)
+
+    with BurstBufferSystem(cfg) as sys2:
+        assert sys2.manager.lookup.get("flushed") == len(data)
+        # ring bootstrap re-seeded every server's lookup table
+        deadline = time.monotonic() + 6
+        seeded = False
+        while time.monotonic() < deadline and not seeded:
+            seeded = all(
+                srv.lookup_table.get("flushed") == len(data)
+                for srv in sys2.servers.values())
+            if not seeded:
+                time.sleep(0.05)
+        assert seeded, "servers did not relearn the lookup table"
+        got = sys2.fs().open("flushed", "r").pread(0, len(data))
+        assert got == data
