@@ -1,0 +1,55 @@
+"""Append bench ``--json`` records to a cumulative JSONL history.
+
+Usage: ``python -m benchmarks.history OUT/*.json``
+
+Each input is one ``benchmarks.jsonout`` document (``{"bench",
+"generated", "results"}``). The current commit hash is attached and the
+document appended as one line to ``benchmarks/history/BENCH_history.jsonl``
+— ``scripts/ci.sh --bench-smoke`` calls this after every smoke run, so the
+headline numbers accrete into a greppable per-commit time series instead
+of evaporating with the run's tempdir.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+HISTORY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "history", "BENCH_history.jsonl")
+
+
+def commit_hash() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True,
+                             cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or "unknown" if out.returncode == 0 \
+            else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def main(argv=None) -> int:
+    paths = list(argv) if argv is not None else sys.argv[1:]
+    if not paths:
+        print("usage: python -m benchmarks.history BENCH.json "
+              "[BENCH.json ...]")
+        return 2
+    commit = commit_hash()
+    os.makedirs(os.path.dirname(HISTORY), exist_ok=True)
+    n = 0
+    with open(HISTORY, "a") as fh:
+        for p in sorted(paths):
+            with open(p) as src:
+                doc = json.load(src)
+            doc["commit"] = commit
+            fh.write(json.dumps(doc, sort_keys=True) + "\n")
+            n += 1
+    print(f"history: appended {n} record(s) to {HISTORY}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -56,7 +56,8 @@ if [[ "${1:-}" == "--lint" ]]; then
     report="${BBCHECK_JSON:-/tmp/bbcheck-report.json}"
     SECONDS=0
     timeout "${CI_TIMEOUT:-120}" python -m tools.bbcheck \
-        --json "$report" --check-protocol docs/PROTOCOL.md "$@"
+        --json "$report" --check-protocol docs/PROTOCOL.md \
+        --check-metrics docs/METRICS.md "$@"
     # the whole point of a pre-test lint is that it is effectively free:
     # all eight AST passes plus the registry render must stay under 10s
     if (( SECONDS >= 10 )); then
@@ -71,7 +72,8 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     shift
     out="$(mktemp -d)"
     trap 'rm -rf "$out"' EXIT
-    timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_ingress --smoke "$@"
+    timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_ingress --smoke \
+        --json "$out/ingress.json" "$@"
     # each bench emits --json and is held to its committed BENCH_* baseline
     # (lenient 0.5x floor: catches collapses, tolerates machine variance)
     # NOTE: the drain baseline was re-pinned when spills became durable
@@ -99,8 +101,12 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     # this machine, so in-bench it only has to beat FIFO at all
     timeout "${CI_TIMEOUT:-300}" python -m benchmarks.bench_qos --smoke \
         --min-speedup=1.2 --json "$out/qos.json"
-    exec python -m benchmarks.compare "$out/qos.json" \
+    python -m benchmarks.compare "$out/qos.json" \
         benchmarks/baselines/BENCH_qos.json
+    # telemetry PR (ISSUE 9): every smoke record accretes — with the commit
+    # hash — into benchmarks/history/BENCH_history.jsonl for trend-spotting
+    python -m benchmarks.history "$out"/*.json
+    exit 0
 fi
 
 exec timeout "${CI_TIMEOUT:-1800}" python -m pytest -q -m "not slow" "$@"

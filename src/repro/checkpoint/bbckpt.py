@@ -37,9 +37,10 @@ from __future__ import annotations
 import os
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.checkpoint import serializer as ser
+from repro.core import telemetry
 from repro.core.system import BurstBufferSystem
 
 
@@ -49,16 +50,23 @@ class BBCheckpointManager:
                  retention: int = 2,
                  chunk_bytes: int = 4 << 20,
                  io_mode: str = "async",
-                 ack_timeout: float = 60.0):
+                 ack_timeout: float = 60.0,
+                 clock: Callable[[], float] = time.perf_counter):
         self.system = system
         self.quantize = quantize
         self.retention = retention
         self.chunk_bytes = chunk_bytes
         self.io_mode = io_mode          # "async" | "batched" | "sync"
         self.ack_timeout = ack_timeout
+        self._clock = clock
         self.saved_steps: List[int] = []
         self._flush_threads: List[threading.Thread] = []
         self.metrics: Dict[int, dict] = {}
+        # telemetry (ISSUE 9): save/restore latency histograms; save() and
+        # restore() also open trace roots, so one checkpoint becomes a span
+        # tree across client -> server -> replica -> manager
+        self._m_save = telemetry.histogram("ckpt.save_s")
+        self._m_restore = telemetry.histogram("ckpt.restore_s")
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state, *, blocking_flush: bool = False,
@@ -70,7 +78,7 @@ class BBCheckpointManager:
         barrier and raises if any chunk failed to achieve a replicated ACK.
         """
         mode = io_mode or self.io_mode
-        t0 = time.perf_counter()
+        t0 = self._clock()
         policy = ser.default_quant_policy if self.quantize else None
         payloads, manifest = ser.serialize_tree(state, policy)
         fname = f"ckpt_{step:08d}"
@@ -78,24 +86,28 @@ class BBCheckpointManager:
 
         # checkpoint-lane writes (ISSUE 5): the highest QoS priority — a
         # concurrent background stream can no longer queue ahead of the
-        # burst on either the client dispatch queue or the server put path
+        # burst on either the client dispatch queue or the server put path.
+        # The trace root spans the whole ingest, so every chunk put, replica
+        # hop and fs RPC below parents back to this one checkpoint.
         fs = self.system.fs()
-        f = fs.open(fname, "w", policy=mode, chunk_bytes=self.chunk_bytes,
-                    lane="checkpoint")
-        for name, data in payloads.items():
-            f.pwrite(data, offset_of[name])
-        mf = fs.open(f"{fname}.manifest", "w", policy=mode,
-                     lane="checkpoint")
-        mf.write(ser.manifest_bytes(manifest))
-        # barrier: both handles' write pipelines must drain before the
-        # checkpoint counts as ingested (paper Fig 4 thread-2); the manifest
-        # barrier must run even when the data barrier raises, or its failed
-        # ops would leak into the next save's drain cycle
-        try:
-            f.close(self.ack_timeout)
-        finally:
-            mf.close(self.ack_timeout)
-        ingest_s = time.perf_counter() - t0
+        with telemetry.span("ckpt.save", "checkpoint", step=step):
+            f = fs.open(fname, "w", policy=mode,
+                        chunk_bytes=self.chunk_bytes, lane="checkpoint")
+            for name, data in payloads.items():
+                f.pwrite(data, offset_of[name])
+            mf = fs.open(f"{fname}.manifest", "w", policy=mode,
+                         lane="checkpoint")
+            mf.write(ser.manifest_bytes(manifest))
+            # barrier: both handles' write pipelines must drain before the
+            # checkpoint counts as ingested (paper Fig 4 thread-2); the
+            # manifest barrier must run even when the data barrier raises,
+            # or its failed ops would leak into the next save's drain cycle
+            try:
+                f.close(self.ack_timeout)
+            finally:
+                mf.close(self.ack_timeout)
+        ingest_s = self._clock() - t0
+        self._m_save.observe(ingest_s)
 
         self.saved_steps.append(step)
         self.metrics[step] = {"ingest_s": ingest_s,
@@ -114,9 +126,10 @@ class BBCheckpointManager:
         return ingest_s
 
     def _flush_async(self, epoch: int, step: int):
-        t0 = time.perf_counter()
-        self.system.flush(epoch)
-        self.metrics[step]["flush_s"] = time.perf_counter() - t0
+        t0 = self._clock()
+        with telemetry.span("ckpt.flush", "checkpoint", step=step):
+            self.system.flush(epoch)
+        self.metrics[step]["flush_s"] = self._clock() - t0
         self._retire(step)
 
     def _retire(self, step: int):
@@ -163,17 +176,22 @@ class BBCheckpointManager:
             raise FileNotFoundError("no checkpoint found")
         fname = f"ckpt_{step:08d}"
         fs = self.system.fs()
-        if stage:
-            # short deadline: a manager busy draining (likely, if pressure
-            # is why the checkpoint was evicted) must not stall the restart
-            # — the fallback chain reads byte-exact without the stage
-            fs.stage(fname, timeout=5.0)
+        t0 = self._clock()
+        with telemetry.span("ckpt.restore", "checkpoint", step=step):
+            if stage:
+                # short deadline: a manager busy draining (likely, if
+                # pressure is why the checkpoint was evicted) must not stall
+                # the restart — the fallback chain reads byte-exact without
+                # the stage
+                fs.stage(fname, timeout=5.0)
 
-        with fs.open(f"{fname}.manifest", "r") as mf:
-            manifest = ser.manifest_from_bytes(mf.read())
-        payloads: Dict[str, bytes] = {}
-        with fs.open(fname, "r", prefetch=True) as f:
-            for meta in manifest["leaves"]:
-                payloads[meta["name"]] = f.pread(meta["offset"],
-                                                 meta["nbytes"])
-        return ser.deserialize_tree(target_state, payloads, manifest), step
+            with fs.open(f"{fname}.manifest", "r") as mf:
+                manifest = ser.manifest_from_bytes(mf.read())
+            payloads: Dict[str, bytes] = {}
+            with fs.open(fname, "r", prefetch=True) as f:
+                for meta in manifest["leaves"]:
+                    payloads[meta["name"]] = f.pread(meta["offset"],
+                                                     meta["nbytes"])
+            out = ser.deserialize_tree(target_state, payloads, manifest)
+        self._m_restore.observe(self._clock() - t0)
+        return out, step

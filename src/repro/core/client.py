@@ -37,7 +37,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.core import locktrack, qos, staging
+from repro.core import locktrack, qos, staging, telemetry
 from repro.core.filesystem import BBFuture, BBWriteError, WriteOp
 from repro.core.hashing import IsoPlacement, KetamaRing, RendezvousHash
 from repro.core.qos import QoSConfig
@@ -123,7 +123,7 @@ class BBClient:
             self._laneq: Optional[qos.LaneQueue] = qos.LaneQueue(
                 self.qos_cfg.lane_weights, self.qos_cfg.quantum_bytes)
             self._cwnd: Optional[qos.CongestionWindows] = \
-                qos.CongestionWindows(self.qos_cfg)
+                qos.CongestionWindows(self.qos_cfg, owner=name)
         else:
             self._laneq = None
             self._cwnd = None
@@ -155,10 +155,22 @@ class BBClient:
                       "failovers": 0, "gets": 0, "bb_hits": 0,
                       "async_puts": 0, "batched_puts": 0, "batches": 0,
                       "evicted_reads": 0}
+        # telemetry (ISSUE 9): per-lane latency histograms bind once here
+        # (shared no-ops when disabled — _tele guards the clock stamps so
+        # the hot path pays nothing); the registry polls the legacy
+        # counters under _stats_lock only when someone scrapes
+        self._tele = telemetry.enabled()
+        self._m_lane_wait = telemetry.histogram("client.lane_wait_s")
+        self._m_dispatch = telemetry.histogram("client.dispatch_s")
+        telemetry.poll("client.ops", self._stats_snapshot, label=name)
 
     def _bump(self, stat: str, n: int = 1):
         with self._stats_lock:
             self.stats[stat] += n
+
+    def _stats_snapshot(self) -> dict:
+        with self._stats_lock:
+            return dict(self.stats)
 
     # ------------------------------------------------------------ membership
     def connect(self, timeout: float = 10.0):
@@ -285,6 +297,8 @@ class BBClient:
             elif self._laneq is None:
                 self._issue_locked([op], target, batch=False)
             else:
+                if self._tele:
+                    op.parked_at = self._clock()
                 self._laneq.push(lane, [[op], target, False], len(value))
                 self._dispatch_locked()
         return fut
@@ -355,7 +369,15 @@ class BBClient:
                 sink.event.wait(self.ack_poll_interval)
             sink.event.clear()             # clear-then-drain: a concurrent
             while sink.items:              # append re-signals for next pass
-                self._on_ack(sink.items.popleft())
+                msg = sink.items.popleft()
+                if self._tele:
+                    # re-parent under the server's reply span so the ACK
+                    # leg shows up in the same trace as the put it answers
+                    with telemetry.msg_span("client." + msg.kind,
+                                            self.tname, msg.payload):
+                        self._on_ack(msg)
+                else:
+                    self._on_ack(msg)
             now = self._clock()
             if now >= next_scan:
                 self._check_deadlines(now)
@@ -382,6 +404,15 @@ class BBClient:
                  # to avoid ping-pong on stale free-memory gossip
                  "redirectable": op.redirects < 2},
                 sink=self._acks)
+        if self._tele:
+            now = self._clock()
+            lane_name = qos.LANES[ops[0].lane]
+            for op in ops:
+                if op.parked_at:       # parked in the lane queue until now
+                    self._m_lane_wait.observe(now - op.parked_at,
+                                              label=lane_name)
+                    op.parked_at = 0.0
+                op.issued_at = now
         for op in ops:
             op.msg_id = msg_id
             if not op.counted:      # window accounting (re-issues stay held)
@@ -399,6 +430,10 @@ class BBClient:
         if self._laneq is None:
             self._issue_locked(ops, target, batch=True)
         else:
+            if self._tele:
+                now = self._clock()
+                for op in ops:
+                    op.parked_at = now
             self._laneq.push(lane, [ops, target, True],
                              sum(len(o.value) for o in ops))
             self._dispatch_locked()
@@ -496,12 +531,20 @@ class BBClient:
                     self._uncount_locked(op)
                 if self._laneq is not None:
                     self._dispatch_locked()   # window space just freed
+            if self._tele:
+                now = self._clock()
+                for op in ent.ops:
+                    if op.issued_at:
+                        self._m_dispatch.observe(now - op.issued_at,
+                                                 label=qos.LANES[op.lane])
             for op in ent.ops:
                 op.future._set_result(True)
             return
         if msg.kind == "redirect":
             self._bump("redirects")
             target = msg.payload["target"]
+            telemetry.record(self.tname, "redirect", target=target,
+                             n_ops=len(ent.ops))
             with self._lock:
                 for op in ent.ops:
                     self._overrides[op.key] = target
@@ -542,6 +585,8 @@ class BBClient:
         """An in-flight message timed out: confirm the suspect's failure via
         its predecessor, then re-issue survivors to their failover owners
         (regrouping batches, since placement may split them)."""
+        telemetry.record(self.tname, "put_timeout", target=ent.target,
+                         n_ops=len(ent.ops))
         retryable = [op for op in ent.ops
                      if op.attempts + 1 < self.MAX_ATTEMPTS]
         exhausted = [op for op in ent.ops if op not in retryable]
@@ -577,6 +622,7 @@ class BBClient:
         let the manager broadcast; fail over to the replica successor.
         Returns the failover target, or None when no alive server remains."""
         self._bump("failovers")
+        telemetry.record(self.tname, "failover", suspect=target, key=key)
         with self._lock:
             alive = [s for s in self.ring if s not in self.dead]
         pred = None

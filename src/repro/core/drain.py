@@ -107,6 +107,11 @@ class DrainEngine:
         self._last_request = time.monotonic() if now is None else now
         self.stats["requests"] += 1
 
+    def snapshot(self) -> dict:
+        """Engine state for stats_query / the telemetry poll (ISSUE 9):
+        the counters plus the hysteresis flag, as one plain dict."""
+        return {**self.stats, "draining": self.draining}
+
     def note_scan(self, now: Optional[float] = None):
         """Rate-limit the next candidate scan without counting a request —
         a scan that found nothing drainable costs as much as one that did,

@@ -49,7 +49,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core import locktrack, qos, staging
+from repro.core import locktrack, qos, staging, telemetry
 from repro.core.qos import QoSConfig
 from repro.core.staging import StageConfig
 
@@ -199,6 +199,9 @@ class WriteOp:
     attempts: int = 0
     msg_id: Optional[int] = None     # current in-flight message, if any
     counted: bool = False            # held against the lane window right now
+    # telemetry stamps (ISSUE 9), set only while telemetry is enabled:
+    parked_at: float = 0.0           # when the op entered the lane queue
+    issued_at: float = 0.0           # when it last went on the wire
 
 
 class BBFile:
@@ -592,6 +595,14 @@ class BBFileSystem:
         self._pfs_lock = locktrack.lock("BBFileSystem._pfs_lock")
         self.bypass_stats = {"writes": 0, "bytes": 0}
         self._rr = itertools.count()
+        # telemetry (ISSUE 9): the registry polls the bypass counters —
+        # under our own lock, only when someone scrapes — instead of the
+        # hot bypass path pushing per-write updates
+        telemetry.poll("fs.bypass", self._bypass_snapshot)
+
+    def _bypass_snapshot(self) -> dict:
+        with self._pfs_lock:
+            return dict(self.bypass_stats)
 
     def next_client(self):
         """Round-robin over the system's clients. Every read-side RPC used

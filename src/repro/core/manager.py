@@ -35,7 +35,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Set
 
-from repro.core import locktrack
+from repro.core import locktrack, telemetry
 from repro.core.transport import Message, Transport
 
 # drain micro-epochs and stage epochs live in their own id spaces so they
@@ -102,6 +102,13 @@ class BBManager(threading.Thread):
         self._stage: Optional[dict] = None
         self._next_stage_epoch = STAGE_EPOCH_BASE
         self._stage_results: Dict[int, dict] = {}
+        # telemetry (ISSUE 9): epoch-duration histograms + abort-cause
+        # counter; _tele captured once so the disabled path stays free
+        self._tele = telemetry.enabled()
+        self._m_drain_s = telemetry.histogram("manager.drain_epoch_s")
+        self._m_stage_s = telemetry.histogram("manager.stage_epoch_s")
+        self._m_aborts = telemetry.counter("manager.epoch_aborts")
+        telemetry.poll("manager.ops", self._ops_snapshot)
 
     # ------------------------------------------------------------------ api
     def alive_ring(self) -> List[str]:
@@ -154,7 +161,12 @@ class BBManager(threading.Thread):
                 continue
             handler = getattr(self, f"_on_{msg.kind}", None)
             if handler is not None:
-                handler(msg)
+                if self._tele:
+                    with telemetry.msg_span("manager." + msg.kind,
+                                            self.tname, msg.payload):
+                        handler(msg)
+                else:
+                    handler(msg)
         # close in the owning thread, after the last handler could write
         fh, self._journal_fh = self._journal_fh, None
         if fh is not None:
@@ -265,6 +277,8 @@ class BBManager(threading.Thread):
         if dead in self.dead or dead not in self.ring:
             return
         self.dead.add(dead)
+        telemetry.record(self.tname, "server_dead", server=dead,
+                         reported_by=msg.src)
         # a death mid-drain invalidates the epoch's domain plan (the dead
         # server's owned domains may never reach the PFS) — abort before
         # anything can be evicted; the chunks re-drain from replicas later.
@@ -335,6 +349,10 @@ class BBManager(threading.Thread):
                 self.drain_stats["epochs"] += 1
                 self.drain_stats["evicted_keys"] += len(d["drained"])
                 self.drain_stats["drained_bytes"] += d["bytes"]
+                if self._tele:
+                    self._m_drain_s.observe(self._clock() - d["started"])
+                telemetry.record(self.tname, "drain_complete", epoch=epoch,
+                                 keys=len(d["drained"]), nbytes=d["bytes"])
                 keys = sorted(d["drained"])
                 for s in self.alive_ring():
                     self.transport.send(self.tname, s, "drain_evict",
@@ -363,6 +381,8 @@ class BBManager(threading.Thread):
                        "expected": set(self.alive_ring()), "done": set(),
                        "drained": set(), "bytes": 0,
                        "requested_by": msg.payload.get("server")}
+        telemetry.record(self.tname, "drain_begin", epoch=epoch,
+                         requested_by=msg.payload.get("server"))
         for s in self.alive_ring():
             self.transport.send(self.tname, s, "flush_begin",
                                 {"epoch": epoch, "drain": True})
@@ -372,12 +392,25 @@ class BBManager(threading.Thread):
         if d is None:
             return
         self.drain_stats["aborts"] += 1
+        # cause label keeps the cardinality bounded: "server failure: s2"
+        # collapses to "drain/server failure"
+        self._m_aborts.inc(label="drain/" + reason.split(":")[0])
+        telemetry.record(self.tname, "drain_abort", epoch=d["epoch"],
+                         reason=reason)
         # notify every epoch PARTICIPANT, not just the currently-alive ring:
         # a falsely-dead server is still running and must refund its token
         # budget and drop its epoch snapshot (really-dead ones black-hole)
         for s in sorted(set(self.alive_ring()) | d["expected"]):
             self.transport.send(self.tname, s, "flush_abort",
                                 {"epoch": d["epoch"], "reason": reason})
+
+    def _ops_snapshot(self) -> dict:
+        """Telemetry poll callback (ISSUE 9): epoch counters + membership
+        summary. Own-thread-mutated dicts of GIL-atomic ints — copies are
+        coherent without a lock."""
+        return {"drain": dict(self.drain_stats),
+                "stage": dict(self.stage_stats),
+                "dead": sorted(self.dead), "errors": len(self.errors)}
 
     def pressure_report(self) -> dict:
         """Cluster pressure view: per-server occupancy reports plus drain
@@ -426,6 +459,8 @@ class BBManager(threading.Thread):
         self._stage = {"epoch": epoch, "path": msg.payload["path"],
                        "started": self._clock(),
                        "expected": set(ring), "done": set(), "bytes": 0}
+        telemetry.record(self.tname, "stage_begin", epoch=epoch,
+                         path=msg.payload["path"])
         for s in ring:
             self.transport.send(self.tname, s, "stage_begin",
                                 {"epoch": epoch,
@@ -447,6 +482,10 @@ class BBManager(threading.Thread):
             self._stage = None
             self.stage_stats["epochs"] += 1
             self.stage_stats["staged_bytes"] += st["bytes"]
+            if self._tele:
+                self._m_stage_s.observe(self._clock() - st["started"])
+            telemetry.record(self.tname, "stage_complete", epoch=epoch,
+                             nbytes=st["bytes"])
             self._record_stage(epoch, "done", st["bytes"])
 
     def _abort_stage(self, reason: str):
@@ -454,6 +493,9 @@ class BBManager(threading.Thread):
         if st is None:
             return
         self.stage_stats["aborts"] += 1
+        self._m_aborts.inc(label="stage/" + reason.split(":")[0])
+        telemetry.record(self.tname, "stage_abort", epoch=st["epoch"],
+                         reason=reason)
         self._record_stage(st["epoch"], "aborted", st["bytes"])
         for s in sorted(set(self.alive_ring()) | st["expected"]):
             self.transport.send(self.tname, s, "stage_abort",

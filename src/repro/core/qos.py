@@ -38,6 +38,8 @@ import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
+from . import telemetry
+
 # stream classes
 BURSTY = "bursty"            # buffer it: this is what the BB exists for
 SEQUENTIAL = "sequential"    # steady + in-order: bypass to the PFS
@@ -270,12 +272,17 @@ class CongestionWindows:
 
     EWMA = 0.3
 
-    def __init__(self, cfg: QoSConfig):
+    def __init__(self, cfg: QoSConfig, owner: str = ""):
         self.cfg = cfg
         self._occ = 0.0
+        # telemetry (ISSUE 9): the EWMA doubles as the cluster-pressure
+        # gauge, labeled by the owning client (no-op when disabled)
+        self._owner = owner
+        self._g_occ = telemetry.gauge("qos.occupancy_ewma")
 
     def on_pressure(self, occupancy: float):
         self._occ += self.EWMA * (float(occupancy) - self._occ)
+        self._g_occ.set(self._occ, label=self._owner)
 
     def occupancy(self) -> float:
         return self._occ

@@ -33,7 +33,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.core import qos, staging, twophase
+from repro.core import qos, staging, telemetry, twophase
 from repro.core.drain import DrainConfig, DrainEngine
 from repro.core.qos import QoSConfig
 from repro.core.staging import StageConfig
@@ -139,6 +139,14 @@ class BBServer(threading.Thread):
         # kind -> count; surfaced in drain_pressure and stats_query, and the
         # first occurrence of each kind is reported as a server_error
         self.unknown_kinds: Dict[str, int] = {}
+        # telemetry (ISSUE 9): _tele is captured once — when telemetry is
+        # disabled the factories hand back the shared no-op and the guarded
+        # clock stamps below are skipped, so the per-message path is free
+        self._tele = telemetry.enabled()
+        self._m_lane_wait = telemetry.histogram("server.lane_wait_s")
+        self._m_dispatch = telemetry.histogram("server.dispatch_s")
+        self._m_occ = telemetry.ring("server.occupancy")
+        telemetry.poll("server.ops", self._stats_snapshot, label=name)
         # async stabilization state
         self._inflight_pings: Dict[int, tuple] = {}   # nonce -> (peer, deadline)
         self._ping_misses: Dict[str, int] = {}
@@ -219,7 +227,24 @@ class BBServer(threading.Thread):
         try:
             if not queued and self._qos_enqueue(msg):
                 return
-            self._dispatch(msg)
+            if not self._tele:
+                self._dispatch(msg)
+                return
+            lane_name = None
+            if msg.kind in self._LANED_KINDS:
+                lane = msg.payload.get("lane")
+                lane_name = qos.LANES[qos.LANE_INTERACTIVE if lane is None
+                                      else qos.lane_index(lane)]
+                parked = getattr(msg, "_parked_at", 0.0)
+                if parked:
+                    self._m_lane_wait.observe(self._clock() - parked,
+                                              label=lane_name)
+            t0 = self._clock()
+            with telemetry.msg_span("server." + msg.kind, self.tname,
+                                    msg.payload):
+                self._dispatch(msg)
+            if lane_name is not None:
+                self._m_dispatch.observe(self._clock() - t0, label=lane_name)
         except Exception as e:   # pragma: no cover - defensive
             self.transport.send(self.tname, self.manager, "server_error",
                                 {"server": self.tname, "error": repr(e)})
@@ -244,6 +269,8 @@ class BBServer(threading.Thread):
             nbytes = sum(len(it["value"]) for it in p["items"])
         else:
             nbytes = len(p["value"])
+        if self._tele:
+            msg._parked_at = self._clock()
         self._laneq.push(lane, msg, nbytes)
         if msg.kind in ("put", "put_batch"):
             self.stats["puts_by_lane"][lane] += 1
@@ -262,6 +289,8 @@ class BBServer(threading.Thread):
             n = self.unknown_kinds.get(msg.kind, 0) + 1
             self.unknown_kinds[msg.kind] = n
             if n == 1:
+                telemetry.record(self.tname, "unknown_kind",
+                                 kind=msg.kind, src=msg.src)
                 self.transport.send(
                     self.tname, self.manager, "server_error",
                     {"server": self.tname,
@@ -381,6 +410,8 @@ class BBServer(threading.Thread):
             target = self._least_loaded_neighbor(len(value))
             if target is not None:
                 self.stats["redirects"] += 1
+                telemetry.record(self.tname, "redirect", key=key,
+                                 target=target)
                 self.transport.reply(self.tname, msg, "redirect",
                                      {"key": key, "target": target,
                                       "occupancy": self._occupancy_frac()})
@@ -1000,6 +1031,7 @@ class BBServer(threading.Thread):
         occ = self.store.occupancy()
         if now - self._last_pressure >= self.drain_cfg.pressure_interval:
             self._last_pressure = now
+            self._m_occ.note(occ["fraction"], label=self.tname)
             self.transport.send(self.tname, self.manager, "drain_pressure",
                                 {"server": self.tname, **occ,
                                  "draining": eng.draining,
@@ -1024,10 +1056,15 @@ class BBServer(threading.Thread):
             eng.note_scan(now)
             return
         eng.note_requested(now)
-        self.transport.send(self.tname, self.manager, "drain_request",
-                            {"server": self.tname,
-                             "occupancy": occ["fraction"],
-                             "drainable": nbytes})
+        # root the drain-epoch trace here: the request is the first causal
+        # event of the epoch, so every downstream hop (manager planning,
+        # flush fan-out, evict confirms) parents back to this span
+        with telemetry.span("server.drain_request", self.tname,
+                            drainable=nbytes):
+            self.transport.send(self.tname, self.manager, "drain_request",
+                                {"server": self.tname,
+                                 "occupancy": occ["fraction"],
+                                 "drainable": nbytes})
 
     def _drain_select(self, budget: int):
         """Cold, sealed, FILE-ATTRIBUTED chunks in age order up to ``budget``
@@ -1104,6 +1141,8 @@ class BBServer(threading.Thread):
             self.store.compact()
             self.stats["drained_bytes"] += freed
             self.stats["drain_epochs"] += 1
+            telemetry.record(self.tname, "drain_evict", epoch=epoch,
+                             freed=freed, keys=len(msg.payload["keys"]))
         # the shuffle receive-buffers for drained files are durable on the
         # PFS now — dropping them is part of the space this engine reclaims.
         # Never while another epoch is mid-flight and may still need them.
@@ -1343,7 +1382,7 @@ class BBServer(threading.Thread):
             if f.startswith(prefix):
                 del self._files[f]
 
-    def _on_stats_query(self, msg: Message):
+    def _stats_payload(self) -> dict:
         occ = self.store.occupancy()
         payload = {
             **self.stats, "dram_used": self.store.dram_used,
@@ -1354,10 +1393,32 @@ class BBServer(threading.Thread):
             "evicted_keys": len(self._evicted),
             "unknown_kinds": dict(self.unknown_kinds)}
         if self.drainer is not None:
-            payload["drain"] = {**self.drainer.stats,
-                                "draining": self.drainer.draining}
+            payload["drain"] = self.drainer.snapshot()
         if self.arbiter is not None:
             payload["arbiter"] = dict(self.arbiter.stats)
         if self._laneq is not None:
             payload["queued_puts"] = len(self._laneq)
-        self.transport.reply(self.tname, msg, "stats", payload)
+        return payload
+
+    def _stats_snapshot(self) -> dict:
+        """Telemetry poll callback (ISSUE 9): the stats dict is mutated only
+        by this server's own thread with GIL-atomic updates, so a shallow
+        copy — plus the one nested list — is coherent without a lock."""
+        snap = dict(self.stats)
+        snap["puts_by_lane"] = list(self.stats["puts_by_lane"])
+        if self.drainer is not None:
+            snap["drain"] = self.drainer.snapshot()
+        return snap
+
+    def _on_stats_query(self, msg: Message):
+        self.transport.reply(self.tname, msg, "stats", self._stats_payload())
+
+    def _on_metrics_query(self, msg: Message):
+        """Telemetry scrape (ISSUE 9): the stats payload, plus the full
+        registry snapshot when the caller asks for instruments (remote
+        scrapers; BurstBufferSystem.scrape() reads the in-process registry
+        directly and asks each server only for its stats)."""
+        payload = {"server": self.tname, "stats": self._stats_payload()}
+        if msg.payload.get("instruments"):
+            payload["instruments"] = telemetry.snapshot()
+        self.transport.reply(self.tname, msg, "metrics", payload)

@@ -13,6 +13,7 @@ import tempfile
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.core import telemetry
 from repro.core.client import BBClient
 from repro.core.drain import DrainConfig
 from repro.core.filesystem import BBFileSystem
@@ -221,4 +222,24 @@ class BurstBufferSystem:
                 timeout=self.cfg.control_timeout) if probe else None
             if r is not None:
                 out[name] = r.payload
+        return out
+
+    def scrape(self) -> dict:
+        """Telemetry scrape (ISSUE 9): the full in-process registry snapshot
+        plus a metrics_query round-trip to every live server. The registry
+        is read directly (this process owns it), so the per-server probe
+        asks only for the stats payload — ``{"instruments": True}`` would
+        return the same shared registry once per server."""
+        out = {"registry": telemetry.snapshot(), "servers": {}}
+        probe = self.clients[0] if self.clients else None
+        if probe is None:
+            return out
+        for name in self.servers:
+            if not self.transport.alive(name):
+                continue
+            r = self.transport.request(
+                probe.ep, name, "metrics_query", {"instruments": False},
+                timeout=self.cfg.control_timeout)
+            if r is not None:
+                out["servers"][name] = r.payload
         return out

@@ -46,7 +46,7 @@ import zlib
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
-from . import locktrack
+from . import locktrack, telemetry
 
 # SSD log record: header | key bytes | payload bytes. The CRC is computed
 # over the header (with the crc field zeroed) + key + payload, so a torn or
@@ -96,6 +96,13 @@ class LogStore:
         self._append_fh = None   # cached SSD append handle
         self._unsynced = False   # tombstones flushed but not yet fsynced
         self.recovered_keys: List[str] = []
+        # telemetry (ISSUE 9): spill/compact/fsync latencies + CRC-failure
+        # counter; bound before recover() runs so the recovery scan can
+        # count bad records. No-op singletons when telemetry is disabled.
+        self._m_spill = telemetry.histogram("store.spill_s")
+        self._m_fsync = telemetry.histogram("store.fsync_s")
+        self._m_compact = telemetry.histogram("store.compact_s")
+        self._m_crc = telemetry.counter("store.crc_failures")
         if ssd_dir:
             os.makedirs(ssd_dir, exist_ok=True)
             self._ssd_path = os.path.join(ssd_dir, f"{name}.log")
@@ -177,7 +184,9 @@ class LogStore:
             if self._unsynced and self._ssd_path:
                 f = self._append_handle()
                 f.flush()
+                t0 = self._clock()
                 os.fsync(f.fileno())
+                self._m_fsync.observe(self._clock() - t0, label="sync")
             self._unsynced = False
 
     def recover(self):
@@ -209,6 +218,7 @@ class LogStore:
                         _REC_MAGIC, flags, gen, klen, plen, 0))
                     want = zlib.crc32(body, want) & 0xFFFFFFFF
                     if want != crc:
+                        self._m_crc.inc(label=self.name)
                         break
                     key = body[:klen].decode("utf-8", errors="replace")
                     max_gen = max(max_gen, gen)
@@ -219,6 +229,8 @@ class LogStore:
                                      bool(flags & _REC_TOMB))
                     pos = end
             if pos < size:                      # torn tail: truncate it away
+                telemetry.record("store", "torn_tail", store=self.name,
+                                 truncated_at=pos, size=size)
                 with open(self._ssd_path, "r+b") as f:
                     f.truncate(pos)
                     f.flush()
@@ -332,6 +344,7 @@ class LogStore:
         never trusts bytes a crash could lose."""
         if self._dram_bytes <= self.dram_capacity or not self._ssd_path:
             return False
+        t0 = self._clock()
         # spill hysteresis: once over capacity, keep going down to a LOW
         # watermark so the batch's single fsync covers several segments —
         # an fsync per sealed segment serializes the ingest path on the
@@ -363,7 +376,11 @@ class LogStore:
         if not pending:
             return False
         f.flush()
+        t1 = self._clock()
         os.fsync(f.fileno())
+        now = self._clock()
+        self._m_fsync.observe(now - t1, label="spill")
+        self._m_spill.observe(now - t0)
         self._unsynced = False    # the fsync covered any pending tombstones
         self._index.update(pending)
         return True
@@ -466,6 +483,7 @@ class LogStore:
             if live_bytes >= self._ssd_bytes:
                 self.sync()       # nothing dead; harden pending tombstones
                 return
+            t0 = self._clock()
             tmp = self._ssd_path + ".compact"
             new_locs: Dict[str, _Loc] = {}
             src = self._read_handle()
@@ -482,7 +500,9 @@ class LogStore:
                 # old log stays fully valid (live records + dead bytes)
                 # until the rename, so a crash anywhere here replays cleanly
                 dst.flush()
+                t1 = self._clock()
                 os.fsync(dst.fileno())
+                self._m_fsync.observe(self._clock() - t1, label="compact")
             self._drop_handles()
             os.replace(tmp, self._ssd_path)
             # pending tombstones went out with the old file: a removed key
@@ -490,3 +510,4 @@ class LogStore:
             self._unsynced = False
             self._index.update(new_locs)
             self._ssd_bytes = live_bytes
+            self._m_compact.observe(self._clock() - t0)

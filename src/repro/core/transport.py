@@ -18,7 +18,7 @@ import queue
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
-from . import locktrack
+from . import locktrack, telemetry
 
 
 @dataclass
@@ -65,6 +65,8 @@ class Transport:
         self._ids = itertools.count(1)
         self._lock = locktrack.lock("Transport._lock")
         self.bytes_sent: Dict[str, int] = {}
+        # per-kind message counter; the shared no-op when telemetry is off
+        self._m_msgs = telemetry.counter("transport.msgs")
 
     def register(self, name: str) -> Endpoint:
         ep = Endpoint(name, self)
@@ -101,6 +103,11 @@ class Transport:
 
     def send(self, src: str, dst: str, kind: str, payload: Any = None,
              reply_to: Optional[int] = None) -> int:
+        # piggyback the sender's trace context (telemetry.TRACE_KEY) on
+        # dict payloads so the receive-side dispatch loop can re-parent
+        # its span under ours; replies route through here too
+        payload = telemetry.trace_inject(payload)
+        self._m_msgs.inc(label=kind)
         msg_id = next(self._ids)
         with self._lock:
             ep = self._endpoints.get(dst)
@@ -121,6 +128,8 @@ class Transport:
         exactly the client's ACK ledger. The caller owns deadline tracking;
         abandon an id with ``cancel_async`` so a late reply falls through to
         the regular inbox instead of a stale waiter."""
+        payload = telemetry.trace_inject(payload)
+        self._m_msgs.inc(label=kind)
         if sink is None:
             sink = queue.Queue()
         msg_id = next(self._ids)
@@ -143,6 +152,8 @@ class Transport:
     def request(self, src_ep: Endpoint, dst: str, kind: str,
                 payload: Any = None, timeout: float = 2.0) -> Optional[Message]:
         """Blocking RPC: send and wait for the reply (None on timeout)."""
+        payload = telemetry.trace_inject(payload)
+        self._m_msgs.inc(label=kind)
         waiter: "queue.Queue[Message]" = queue.Queue()
         msg_id = next(self._ids)
         with src_ep._lock:

@@ -14,17 +14,23 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 import pytest  # noqa: E402
 
-from repro.core import locktrack  # noqa: E402
+from repro.core import locktrack, telemetry  # noqa: E402
 
 
 @pytest.fixture(scope="session", autouse=True)
 def _lock_order_tracking():
     """Run the whole suite with instrumented locks (bbcheck rule 2's
     runtime half): every lock the core creates during the session records
-    real acquisition orders, and any inversion fails the run."""
+    real acquisition orders, and any inversion fails the run.
+
+    Telemetry rides along (ISSUE 9): the whole suite runs with live
+    instruments — registry, tracer, flight recorder — so its locks join
+    the inversion check and every test failure can dump the flight ring."""
+    telemetry.enable()
     tr = locktrack.enable()
     yield
     locktrack.disable()
+    telemetry.disable()
     if tr.inversions:
         # post-mortem artifact: acquisition digraph, inversion stacks,
         # and every live thread's current stack
@@ -36,3 +42,22 @@ def _lock_order_tracking():
             f"lock-order inversions recorded during test run "
             f"(digraph + thread stacks dumped to {path}): "
             f"{[{k: v for k, v in inv.items() if k != 'stack'} for inv in tr.inversions]}")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    """Flight-recorder post-mortem (ISSUE 9): any failing test phase dumps
+    the bounded per-component event rings to a JSON artifact, next to the
+    lock-order artifact — a red test ships its own recent-event history."""
+    outcome = yield
+    report = outcome.get_result()
+    if report.failed and telemetry.enabled():
+        path = os.environ.get(
+            "BB_FLIGHT_ARTIFACT",
+            os.path.join(tempfile.gettempdir(), "bb-flight.json"))
+        try:
+            telemetry.dump_flight(path, test=item.nodeid, phase=report.when)
+            report.sections.append(
+                ("flight recorder", f"event rings dumped to {path}"))
+        except OSError:
+            pass

@@ -10,6 +10,8 @@ Options:
   --json [PATH]          machine-readable report to PATH ("-" = stdout)
   --emit-protocol PATH   (re)generate the inferred protocol registry
   --check-protocol PATH  fail if PATH differs from the regenerated registry
+  --emit-metrics PATH    (re)generate the instrument-catalog markdown
+  --check-metrics PATH   fail if PATH differs from telemetry.CATALOG
 """
 from __future__ import annotations
 
@@ -20,6 +22,7 @@ import os
 import sys
 
 from . import ALL_RULES
+from . import metrics as metrics_doc
 from . import schema as schema_rule
 from .report import apply_allowlist, load_allowlist
 
@@ -56,6 +59,10 @@ def main(argv=None) -> int:
                     help="write the inferred protocol registry markdown")
     ap.add_argument("--check-protocol", metavar="PATH",
                     help="fail if PATH drifted from the inferred registry")
+    ap.add_argument("--emit-metrics", metavar="PATH",
+                    help="write the instrument-catalog markdown")
+    ap.add_argument("--check-metrics", metavar="PATH",
+                    help="fail if PATH drifted from telemetry.CATALOG")
     args = ap.parse_args(argv)
 
     trees = parse_tree(args.root)
@@ -95,6 +102,24 @@ def main(argv=None) -> int:
             print(f"DRIFT {args.check_protocol} is stale — regenerate with "
                   f"`python -m tools.bbcheck --emit-protocol "
                   f"{args.check_protocol}`")
+
+    if args.emit_metrics or args.check_metrics:
+        metrics_md = metrics_doc.render()
+        if args.emit_metrics:
+            with open(args.emit_metrics, "w") as fh:
+                fh.write(metrics_md)
+            print(f"bbcheck: wrote {args.emit_metrics}")
+        if args.check_metrics:
+            try:
+                with open(args.check_metrics) as fh:
+                    committed_md = fh.read()
+            except FileNotFoundError:
+                committed_md = None
+            if committed_md != metrics_md:
+                drifted = True
+                print(f"DRIFT {args.check_metrics} is stale — regenerate "
+                      f"with `python -m tools.bbcheck --emit-metrics "
+                      f"{args.check_metrics}`")
 
     n_mod = len(trees)
     rule_names = [r.__name__.rsplit(".", 1)[-1] for r in rules]

@@ -214,7 +214,11 @@ def _injected_keys(trees: Dict[str, ast.Module]) -> Set[str]:
     modules: ``x["k"] = v`` subscript assignment, or a dict extension
     literal ``{**base, "k": v}``. Used only to *suppress* typo findings —
     never widens a schema."""
-    keys: Set[str] = set()
+    # telemetry.TRACE_KEY: Transport injects the trace context into dict
+    # payloads at send time (telemetry.trace_inject), and transport.py is a
+    # SKIP_MODULE — declare it here so a handler going through msg_span /
+    # trace_from never trips the typo check on the piggybacked key.
+    keys: Set[str] = {"_trace"}
     for tree in trees.values():
         for node in ast.walk(tree):
             if isinstance(node, ast.Assign):

@@ -1,0 +1,156 @@
+"""bbstat: human-readable view of a telemetry scrape (ISSUE 9).
+
+Reads either a saved ``BurstBufferSystem.scrape()`` JSON document or — with
+``--demo`` — spins up a small live system with telemetry enabled, pushes a
+little traffic through it, and scrapes that. Histograms print count / mean /
+max plus an approximate p50/p99 interpolated from the fixed buckets;
+counters, gauges and poll snapshots print flat.
+
+Usage:
+  python -m tools.bbstat SCRAPE.json            pretty-print a saved scrape
+  python -m tools.bbstat --demo                 live demo system, then scrape
+  python -m tools.bbstat --demo --trace T.json  also export Chrome trace JSON
+  python -m tools.bbstat --demo --json S.json   also save the raw scrape
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _import_repro():
+    try:
+        from repro.core import telemetry     # noqa: F401
+    except ImportError:
+        src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+        sys.path.insert(0, os.path.abspath(src))
+
+
+def _quantile(bounds, buckets, count, q):
+    """Approximate quantile from cumulative bucket counts: linear within
+    the winning bucket, upper bound for the overflow bucket."""
+    target = count * q
+    seen = 0
+    for i, n in enumerate(buckets):
+        if not n:
+            continue
+        if seen + n >= target:
+            if i >= len(bounds):
+                return bounds[-1]
+            lo = bounds[i - 1] if i else 0.0
+            frac = (target - seen) / n
+            return lo + (bounds[i] - lo) * frac
+        seen += n
+    return bounds[-1] if bounds else 0.0
+
+
+def _fmt_s(v: float) -> str:
+    if v >= 1.0:
+        return f"{v:.2f}s"
+    if v >= 1e-3:
+        return f"{v * 1e3:.2f}ms"
+    return f"{v * 1e6:.0f}us"
+
+
+def print_scrape(doc: dict, out=sys.stdout):
+    reg = doc.get("registry", doc)      # accept a bare registry snapshot
+    w = out.write
+    for name, series in sorted(reg.get("counters", {}).items()):
+        w(f"counter   {name}\n")
+        for label, v in sorted(series.items()):
+            w(f"  {label or '-':<28} {v:>12.0f}\n")
+    for name, series in sorted(reg.get("gauges", {}).items()):
+        w(f"gauge     {name}\n")
+        for label, v in sorted(series.items()):
+            w(f"  {label or '-':<28} {v:>12.4f}\n")
+    for name, h in sorted(reg.get("histograms", {}).items()):
+        bounds = h.get("bounds", [])
+        w(f"histogram {name}\n")
+        for label, st in sorted(h.get("series", {}).items()):
+            n = st["count"]
+            mean = st["sum"] / n if n else 0.0
+            p50 = _quantile(bounds, st["buckets"], n, 0.50)
+            p99 = _quantile(bounds, st["buckets"], n, 0.99)
+            w(f"  {label or '-':<28} n={n:<8d} mean={_fmt_s(mean):<10}"
+              f" p50~{_fmt_s(p50):<10} p99~{_fmt_s(p99):<10}"
+              f" max={_fmt_s(st['max'])}\n")
+    for name, samples in sorted(reg.get("rings", {}).items()):
+        w(f"ring      {name}  ({len(samples)} samples)\n")
+        by_label: dict = {}
+        for t, label, v in samples:
+            by_label.setdefault(label, []).append(v)
+        for label, vals in sorted(by_label.items()):
+            w(f"  {label or '-':<28} last={vals[-1]:.4f}"
+              f" min={min(vals):.4f} max={max(vals):.4f}\n")
+    for name, by_label in sorted(reg.get("polls", {}).items()):
+        w(f"poll      {name}\n")
+        for label, snap in sorted(by_label.items()):
+            w(f"  {label or '-':<28} {json.dumps(snap, sort_keys=True, default=repr)}\n")
+    for server, payload in sorted(doc.get("servers", {}).items()):
+        w(f"server    {server}\n")
+        stats = payload.get("stats", payload)
+        w(f"  {json.dumps(stats, sort_keys=True, default=repr)}\n")
+
+
+def _demo(trace_path=None):
+    """Small live system under real traffic, scraped with telemetry on."""
+    _import_repro()
+    from repro.core import telemetry
+    from repro.core.system import BBConfig, BurstBufferSystem
+
+    telemetry.enable()
+    cfg = BBConfig(num_servers=3, num_clients=2, dram_capacity=8 << 20)
+    system = BurstBufferSystem(cfg)
+    system.start()
+    try:
+        fs = system.fs()
+        with telemetry.span("bbstat.demo", "app"):
+            f = fs.open("demo/data", "w", policy="batched",
+                        lane="checkpoint")
+            chunk = os.urandom(64 << 10)
+            for i in range(64):
+                f.pwrite(chunk, i * len(chunk))
+            f.close()
+        system.flush(1)
+        scrape = system.scrape()
+    finally:
+        system.stop()
+    if trace_path:
+        telemetry.export_chrome(trace_path)
+        print(f"bbstat: Chrome trace at {trace_path} "
+              f"(open in https://ui.perfetto.dev)")
+    telemetry.disable()
+    return scrape
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="bbstat", description=__doc__)
+    ap.add_argument("scrape", nargs="?", metavar="SCRAPE.json",
+                    help="saved scrape document to pretty-print")
+    ap.add_argument("--demo", action="store_true",
+                    help="run a small live system and scrape it")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="with --demo: export Chrome trace-event JSON")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write the raw scrape document to PATH")
+    args = ap.parse_args(argv)
+
+    if args.demo:
+        doc = _demo(args.trace)
+    elif args.scrape:
+        with open(args.scrape) as fh:
+            doc = json.load(fh)
+    else:
+        ap.error("either SCRAPE.json or --demo is required")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True, default=repr)
+        print(f"bbstat: scrape saved to {args.json}")
+    print_scrape(doc)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
