@@ -1,6 +1,8 @@
 """Append bench ``--json`` records to a cumulative JSONL history.
 
-Usage: ``python -m benchmarks.history OUT/*.json``
+Usage:
+  python -m benchmarks.history OUT/*.json         append records
+  python -m benchmarks.history trend [--window N] newest vs trailing median
 
 Each input is one ``benchmarks.jsonout`` document (``{"bench",
 "generated", "results"}``). The current commit hash is attached and the
@@ -8,16 +10,29 @@ document appended as one line to ``benchmarks/history/BENCH_history.jsonl``
 — ``scripts/ci.sh --bench-smoke`` calls this after every smoke run, so the
 headline numbers accrete into a greppable per-commit time series instead
 of evaporating with the run's tempdir.
+
+``trend`` (ISSUE 10) compares each bench's newest record against the
+median of its trailing window and prints per-headline-metric deltas. It
+is a warn-only report — always exit 0 — because a noisy shared machine
+swings these numbers run to run; regression *gating* stays with
+``benchmarks.compare`` and its committed baseline floors.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
 import sys
 
+from benchmarks.compare import METRICS
+
 HISTORY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "history", "BENCH_history.jsonl")
+
+# headline metrics per bench: the compare.py gating set, plus benches that
+# have no committed baseline but still deserve a trend line
+TREND_METRICS = dict(METRICS, bench_ingress=["smoke_mbps"])
 
 
 def commit_hash() -> str:
@@ -31,11 +46,60 @@ def commit_hash() -> str:
         return "unknown"
 
 
+def _median(xs):
+    xs = sorted(xs)
+    mid = len(xs) // 2
+    return xs[mid] if len(xs) % 2 else (xs[mid - 1] + xs[mid]) / 2.0
+
+
+def trend(argv=None) -> int:
+    """Newest record per bench vs the trailing-window median, per headline
+    metric. Warn-only: informative output, always exit 0."""
+    ap = argparse.ArgumentParser(prog="history trend")
+    ap.add_argument("--history", default=HISTORY, metavar="PATH")
+    ap.add_argument("--window", type=int, default=8, metavar="N",
+                    help="trailing records per bench for the median")
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.history):
+        print(f"trend: no history at {args.history}")
+        return 0
+    by_bench = {}
+    with open(args.history) as fh:
+        for line in fh:
+            try:
+                doc = json.loads(line)
+            except ValueError:
+                continue                    # torn tail: skip, warn-only
+            if isinstance(doc.get("results"), dict) and doc.get("bench"):
+                by_bench.setdefault(doc["bench"], []).append(doc)
+    for bench in sorted(by_bench):
+        recs = by_bench[bench]
+        newest, prior = recs[-1], recs[-1 - args.window:-1]
+        for metric in TREND_METRICS.get(bench, []):
+            cur = newest["results"].get(metric)
+            vals = [r["results"][metric] for r in prior
+                    if isinstance(r["results"].get(metric), (int, float))]
+            if not isinstance(cur, (int, float)):
+                continue
+            if not vals:
+                print(f"trend: {bench:<16} {metric:<16} {cur:.4g} "
+                      f"(no trailing history)")
+                continue
+            med = _median(vals)
+            delta = (cur - med) / med * 100.0 if med else 0.0
+            flag = "  <-- check" if delta <= -20.0 else ""
+            print(f"trend: {bench:<16} {metric:<16} {cur:.4g} vs "
+                  f"median[{len(vals)}] {med:.4g} ({delta:+.1f}%){flag}")
+    return 0
+
+
 def main(argv=None) -> int:
     paths = list(argv) if argv is not None else sys.argv[1:]
+    if paths and paths[0] == "trend":
+        return trend(paths[1:])
     if not paths:
         print("usage: python -m benchmarks.history BENCH.json "
-              "[BENCH.json ...]")
+              "[BENCH.json ...] | trend [--window N]")
         return 2
     commit = commit_hash()
     os.makedirs(os.path.dirname(HISTORY), exist_ok=True)

@@ -51,6 +51,15 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
+# one collection point for every failure artifact (ISSUE 10): the lock-order
+# inversion digraph, the flight-recorder rings, and the health-engine verdict
+# dump all land under $BB_ARTIFACT_DIR so CI uploads a single folder
+export BB_ARTIFACT_DIR="${BB_ARTIFACT_DIR:-/tmp/bb-artifacts}"
+export BB_LOCK_ARTIFACT="${BB_LOCK_ARTIFACT:-$BB_ARTIFACT_DIR/bb-lock-inversions.json}"
+export BB_FLIGHT_ARTIFACT="${BB_FLIGHT_ARTIFACT:-$BB_ARTIFACT_DIR/bb-flight.json}"
+export BB_HEALTH_ARTIFACT="${BB_HEALTH_ARTIFACT:-$BB_ARTIFACT_DIR/bb-health.json}"
+mkdir -p "$BB_ARTIFACT_DIR"
+
 if [[ "${1:-}" == "--lint" ]]; then
     shift
     report="${BBCHECK_JSON:-/tmp/bbcheck-report.json}"
@@ -106,7 +115,17 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     # telemetry PR (ISSUE 9): every smoke record accretes — with the commit
     # hash — into benchmarks/history/BENCH_history.jsonl for trend-spotting
     python -m benchmarks.history "$out"/*.json
+    # warn-only trend report (ISSUE 10): newest record vs trailing median
+    # per headline metric — flags drifts the lenient compare floors miss,
+    # but never fails the run (noisy shared machines swing these numbers)
+    python -m benchmarks.history trend || true
     exit 0
 fi
 
-exec timeout "${CI_TIMEOUT:-1800}" python -m pytest -q -m "not slow" "$@"
+if ! timeout "${CI_TIMEOUT:-1800}" python -m pytest -q -m "not slow" "$@"; then
+    echo "ci: FAILED — post-mortem artifacts (if written) under $BB_ARTIFACT_DIR:" >&2
+    echo "ci:   lock-order inversions: $BB_LOCK_ARTIFACT" >&2
+    echo "ci:   flight-recorder rings: $BB_FLIGHT_ARTIFACT" >&2
+    echo "ci:   health-engine verdicts: $BB_HEALTH_ARTIFACT" >&2
+    exit 1
+fi

@@ -299,6 +299,7 @@ class BBClient:
             else:
                 if self._tele:
                     op.parked_at = self._clock()
+                    op.trace_ctx = telemetry.current_ctx()
                 self._laneq.push(lane, [[op], target, False], len(value))
                 self._dispatch_locked()
         return fut
@@ -409,9 +410,15 @@ class BBClient:
             lane_name = qos.LANES[ops[0].lane]
             for op in ops:
                 if op.parked_at:       # parked in the lane queue until now
-                    self._m_lane_wait.observe(now - op.parked_at,
-                                              label=lane_name)
+                    wait = now - op.parked_at
+                    self._m_lane_wait.observe(wait, label=lane_name)
+                    # completed-span record under the submitter's trace —
+                    # the health engine's "queue" segment (ISSUE 10)
+                    telemetry.observe_span("client.lane_wait", self.tname,
+                                           op.trace_ctx, op.parked_at,
+                                           wait, lane=lane_name)
                     op.parked_at = 0.0
+                    op.trace_ctx = None
                 op.issued_at = now
         for op in ops:
             op.msg_id = msg_id
@@ -432,8 +439,10 @@ class BBClient:
         else:
             if self._tele:
                 now = self._clock()
+                ctx = telemetry.current_ctx()
                 for op in ops:
                     op.parked_at = now
+                    op.trace_ctx = ctx
             self._laneq.push(lane, [ops, target, True],
                              sum(len(o.value) for o in ops))
             self._dispatch_locked()

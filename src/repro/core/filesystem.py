@@ -202,6 +202,10 @@ class WriteOp:
     # telemetry stamps (ISSUE 9), set only while telemetry is enabled:
     parked_at: float = 0.0           # when the op entered the lane queue
     issued_at: float = 0.0           # when it last went on the wire
+    # trace context captured when the op parked (ISSUE 10): the dispatch
+    # pump runs on another thread with no span of its own, so the lane
+    # wait is attributed back to the submitting span through this
+    trace_ctx: Optional[list] = None
 
 
 class BBFile:

@@ -36,6 +36,7 @@ import time
 from typing import Callable, Dict, List, Optional, Set
 
 from repro.core import locktrack, telemetry
+from repro.core.health import HealthConfig, HealthEngine
 from repro.core.transport import Message, Transport
 
 # drain micro-epochs and stage epochs live in their own id spaces so they
@@ -52,6 +53,7 @@ class BBManager(threading.Thread):
                  flush_poll_interval: float = 0.01,
                  drain_serialize_poll: float = 0.005,
                  journal_path: Optional[str] = None,
+                 health_cfg: Optional[HealthConfig] = None,
                  clock: Callable[[], float] = time.monotonic):
         super().__init__(daemon=True, name=name)
         self.tname = name
@@ -109,6 +111,13 @@ class BBManager(threading.Thread):
         self._m_stage_s = telemetry.histogram("manager.stage_epoch_s")
         self._m_aborts = telemetry.counter("manager.epoch_aborts")
         telemetry.poll("manager.ops", self._ops_snapshot)
+        # health engine (ISSUE 10): constructed only when telemetry is on —
+        # with it off the run loop pays one ``is not None`` check and the
+        # report is a static "disabled" stub
+        self.health_cfg = health_cfg or HealthConfig()
+        self._health: Optional[HealthEngine] = \
+            HealthEngine(self.health_cfg, clock=clock) if self._tele else None
+        self._health_last = 0.0
 
     # ------------------------------------------------------------------ api
     def alive_ring(self) -> List[str]:
@@ -157,6 +166,10 @@ class BBManager(threading.Thread):
                     and now - self._stage["started"] > self.drain_epoch_timeout:
                 self._abort_stage("timeout")
             self._sweep_stale_flushes(now)
+            if self._health is not None and \
+                    now - self._health_last >= self.health_cfg.interval_s:
+                self._health_last = now
+                self._evaluate_health(now)
             if msg is None:
                 continue
             handler = getattr(self, f"_on_{msg.kind}", None)
@@ -404,6 +417,40 @@ class BBManager(threading.Thread):
             self.transport.send(self.tname, s, "flush_abort",
                                 {"epoch": d["epoch"], "reason": reason})
 
+    # health engine (ISSUE 10) ---------------------------------------------
+    def _evaluate_health(self, now: float):
+        """One SLO/watchdog/attribution pass on the run-loop cadence. The
+        engine must never take the manager down: an evaluation error is
+        flight-recorded and the stale report stands until the next tick."""
+        reg = telemetry.registry()
+        if reg is None:
+            return
+        inflight = {}
+        d, st = self._drain, self._stage
+        if d is not None:
+            inflight["drain"] = {"epoch": d["epoch"],
+                                 "started": d["started"]}
+        if st is not None:
+            inflight["stage"] = {"epoch": st["epoch"],
+                                 "started": st["started"]}
+        try:
+            self._health.evaluate(reg.snapshot(), inflight=inflight,
+                                  tracer=reg.tracer, now=now)
+        except Exception as e:      # pragma: no cover - defensive
+            telemetry.record("health", "evaluate_error", error=repr(e))
+
+    def health_report(self) -> dict:
+        """The latest health verdict (``health_query`` payload). A static
+        stub when telemetry (and therefore the engine) is disabled."""
+        if self._health is None:
+            return {"status": "disabled", "evals": 0, "t": 0.0, "slos": [],
+                    "watchdogs": [], "bottlenecks": {"ops": {}, "top": None}}
+        return self._health.report()
+
+    def _on_health_query(self, msg: Message):
+        self.transport.reply(self.tname, msg, "health",
+                             dict(self.health_report()))
+
     def _ops_snapshot(self) -> dict:
         """Telemetry poll callback (ISSUE 9): epoch counters + membership
         summary. Own-thread-mutated dicts of GIL-atomic ints — copies are
@@ -421,6 +468,7 @@ class BBManager(threading.Thread):
                 "drain": dict(self.drain_stats),
                 "stage": dict(self.stage_stats),
                 "qos": self.qos_summary(),
+                "health": self.health_report(),
                 "inflight_epoch": d["epoch"] if d is not None else None,
                 "inflight_stage": st["epoch"] if st is not None else None}
 

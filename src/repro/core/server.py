@@ -237,8 +237,16 @@ class BBServer(threading.Thread):
                                       else qos.lane_index(lane)]
                 parked = getattr(msg, "_parked_at", 0.0)
                 if parked:
-                    self._m_lane_wait.observe(self._clock() - parked,
-                                              label=lane_name)
+                    wait = self._clock() - parked
+                    self._m_lane_wait.observe(wait, label=lane_name)
+                    # a parked message has no thread to hold a span open,
+                    # so the wait is recorded as an already-completed span
+                    # under the put's trace — the health engine's critical-
+                    # path pass reads it as the "queue" segment (ISSUE 10)
+                    telemetry.observe_span(
+                        "server.lane_wait", self.tname,
+                        telemetry.trace_from(msg.payload), parked, wait,
+                        lane=lane_name)
             t0 = self._clock()
             with telemetry.msg_span("server." + msg.kind, self.tname,
                                     msg.payload):
@@ -1408,6 +1416,10 @@ class BBServer(threading.Thread):
         snap["puts_by_lane"] = list(self.stats["puts_by_lane"])
         if self.drainer is not None:
             snap["drain"] = self.drainer.snapshot()
+        if self._laneq is not None:
+            # lane-queue depth rides along for the health engine's
+            # queue-growth watchdog and queue_depth SLO (ISSUE 10)
+            snap["queued_puts"] = len(self._laneq)
         return snap
 
     def _on_stats_query(self, msg: Message):

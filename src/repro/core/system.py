@@ -17,6 +17,7 @@ from repro.core import telemetry
 from repro.core.client import BBClient
 from repro.core.drain import DrainConfig
 from repro.core.filesystem import BBFileSystem
+from repro.core.health import HealthConfig
 from repro.core.manager import BBManager
 from repro.core.qos import QoSConfig
 from repro.core.server import BBServer
@@ -66,6 +67,10 @@ class BBConfig:
     # QoS engine (ISSUE 5): traffic classification, priority lanes,
     # congestion windows, write-through bypass, unified background arbiter
     qos: QoSConfig = field(default_factory=QoSConfig)
+    # health engine (ISSUE 10): SLO rules + stall watchdogs + critical-path
+    # attribution, evaluated on the manager run loop every
+    # ``health.interval_s`` (only when telemetry is enabled)
+    health: HealthConfig = field(default_factory=HealthConfig)
 
 
 class BurstBufferSystem:
@@ -84,7 +89,8 @@ class BurstBufferSystem:
                                  flush_poll_interval=cfg.flush_poll_interval,
                                  drain_serialize_poll=cfg.drain_serialize_poll,
                                  journal_path=os.path.join(
-                                     self.ssd_dir, "manager.journal"))
+                                     self.ssd_dir, "manager.journal"),
+                                 health_cfg=cfg.health)
         self.servers: Dict[str, BBServer] = {}
         for i in range(cfg.num_servers):
             name = f"server/{i}"
@@ -229,17 +235,44 @@ class BurstBufferSystem:
         plus a metrics_query round-trip to every live server. The registry
         is read directly (this process owns it), so the per-server probe
         asks only for the stats payload — ``{"instruments": True}`` would
-        return the same shared registry once per server."""
-        out = {"registry": telemetry.snapshot(), "servers": {}}
+        return the same shared registry once per server.
+
+        Dead servers are skipped via ``transport.alive()`` (the scrape
+        stays bounded by ``control_timeout`` per unreachable survivor) but
+        never silently: ``expected`` lists the configured membership and
+        ``missing`` whoever failed to answer, so bbstat/bbtop — and CI —
+        can alert on a partial scrape (ISSUE 10).
+        """
+        out = {"registry": telemetry.snapshot(), "servers": {},
+               "expected": sorted(self.servers), "missing": []}
         probe = self.clients[0] if self.clients else None
         if probe is None:
+            out["missing"] = sorted(self.servers)
             return out
         for name in self.servers:
-            if not self.transport.alive(name):
-                continue
             r = self.transport.request(
                 probe.ep, name, "metrics_query", {"instruments": False},
-                timeout=self.cfg.control_timeout)
+                timeout=self.cfg.control_timeout) \
+                if self.transport.alive(name) else None
             if r is not None:
                 out["servers"][name] = r.payload
+            else:
+                out["missing"].append(name)
+        out["missing"].sort()
         return out
+
+    def health(self) -> dict:
+        """Latest health-engine report (ISSUE 10) via the ``health_query``
+        protocol round-trip — exactly what a remote operator tool sees.
+        Falls back to the manager's in-process report when there is no
+        client endpoint to probe through (or the RPC times out)."""
+        probe = self.clients[0] if self.clients else None
+        if probe is not None:
+            r = self.transport.request(
+                probe.ep, "manager", "health_query", {},
+                timeout=self.cfg.control_timeout)
+            if r is not None and isinstance(r.payload, dict):
+                report = dict(r.payload)
+                report.pop(telemetry.TRACE_KEY, None)
+                return report
+        return self.manager.health_report()

@@ -73,6 +73,12 @@ CATALOG: Tuple[Tuple[str, str, str, str, str], ...] = (
      "Per-client op counters (BBClient.stats), one label per client."),
     ("fs.bypass", "poll", "count", "filesystem",
      "Write-through bypass counters (BBFileSystem.bypass_stats)."),
+    ("health.anomalies", "counter", "count", "health",
+     "Stall-watchdog anomalies raised by the health engine, keyed by "
+     "anomaly kind (epoch_stall / silent_server / queue_growth)."),
+    ("health.eval_s", "histogram", "seconds", "health",
+     "Wall time of one HealthEngine.evaluate() pass over a registry "
+     "snapshot."),
     ("manager.drain_epoch_s", "histogram", "seconds", "manager",
      "Drain micro-epoch duration, drain_request arrival to the last "
      "flush_done."),
@@ -109,6 +115,11 @@ CATALOG: Tuple[Tuple[str, str, str, str, str], ...] = (
      "fsync."),
     ("transport.msgs", "counter", "count", "transport",
      "Messages accepted by Transport.send/request, keyed by kind."),
+    ("transport.src_msgs", "counter", "count", "transport",
+     "Messages accepted by Transport.send/request, keyed by the sending "
+     "endpoint — the health engine's silent-server watchdog reads this "
+     "to spot a server whose send counter stops advancing while peers' "
+     "advance."),
 )
 
 _CATALOG_BY_NAME = {spec[0]: spec for spec in CATALOG}
@@ -304,6 +315,10 @@ class Tracer:
         self._lock = locktrack.lock("Tracer._lock")
         self._events: collections.deque = collections.deque(
             maxlen=self.MAXLEN)
+        # lifetime count of finished spans — the deque drops its oldest
+        # entries, so incremental consumers (the health engine's critical-
+        # path pass) diff this to know how many tail events are new
+        self._count = 0
 
     def current_ctx(self) -> Optional[List[int]]:
         st = _SPANS.stack
@@ -329,13 +344,33 @@ class Tracer:
 
     def _finish(self, span: Span, t1: float):
         with self._lock:
+            self._count += 1
             self._events.append((span.trace_id, span.span_id,
                                  span.parent_id, span.name, span.component,
                                  span._t0, t1 - span._t0, span.args))
 
+    def observe(self, name: str, component: str, ctx, t0: float,
+                dur: float, **args):
+        """Record an externally-timed, already-completed span parented by
+        an explicit trace context — for wait intervals measured outside a
+        ``with`` block (a message parked in a lane queue has no thread
+        executing it, so nothing could hold a live span open)."""
+        if not (isinstance(ctx, (list, tuple)) and len(ctx) == 2):
+            return
+        with self._lock:
+            self._count += 1
+            self._events.append((ctx[0], next(self._ids), ctx[1], name,
+                                 component, t0, dur, args))
+
     def events(self) -> List[tuple]:
         with self._lock:
             return list(self._events)
+
+    def events_total(self) -> int:
+        """Finished spans over this tracer's lifetime (not bounded by the
+        ring) — the watermark for incremental event consumers."""
+        with self._lock:
+            return self._count
 
     def chrome_events(self) -> List[dict]:
         """Chrome trace-event JSON: one complete ('X') event per span plus
@@ -535,6 +570,34 @@ def span(name: str, component: str = "app", **args):
     if ctx is not None:
         return reg.tracer.span(name, component, ctx=ctx, **args)
     return reg.tracer.root(name, component, **args)
+
+
+def child_span(name: str, component: str, **args):
+    """Open a span ONLY if this thread already has one active — untraced
+    work stays untraced (``span()`` would open a brand-new root). For
+    instrumenting interior segments (an fsync inside a put) without
+    rooting a trace per call."""
+    reg = _registry
+    if reg is None:
+        return NOOP
+    return reg.tracer.span(name, component, **args)
+
+
+def observe_span(name: str, component: str, ctx, t0: float, dur: float,
+                 **args):
+    """Record an externally-timed completed span under an explicit
+    ``[trace_id, parent_span_id]`` context (no-op when ctx is None — the
+    op was untraced). See ``Tracer.observe``."""
+    reg = _registry
+    if reg is not None:
+        reg.tracer.observe(name, component, ctx, t0, dur, **args)
+
+
+def current_ctx() -> Optional[List[int]]:
+    """This thread's current ``[trace_id, span_id]``, or None. For stamping
+    a trace context onto work that will complete on another thread."""
+    reg = _registry
+    return None if reg is None else reg.tracer.current_ctx()
 
 
 def msg_span(name: str, component: str, payload):

@@ -185,7 +185,9 @@ class LogStore:
                 f = self._append_handle()
                 f.flush()
                 t0 = self._clock()
-                os.fsync(f.fileno())
+                with telemetry.child_span("store.fsync", self.name,
+                                          caller="sync"):
+                    os.fsync(f.fileno())
                 self._m_fsync.observe(self._clock() - t0, label="sync")
             self._unsynced = False
 
@@ -377,7 +379,8 @@ class LogStore:
             return False
         f.flush()
         t1 = self._clock()
-        os.fsync(f.fileno())
+        with telemetry.child_span("store.fsync", self.name, caller="spill"):
+            os.fsync(f.fileno())
         now = self._clock()
         self._m_fsync.observe(now - t1, label="spill")
         self._m_spill.observe(now - t0)
@@ -501,7 +504,9 @@ class LogStore:
                 # until the rename, so a crash anywhere here replays cleanly
                 dst.flush()
                 t1 = self._clock()
-                os.fsync(dst.fileno())
+                with telemetry.child_span("store.fsync", self.name,
+                                          caller="compact"):
+                    os.fsync(dst.fileno())
                 self._m_fsync.observe(self._clock() - t1, label="compact")
             self._drop_handles()
             os.replace(tmp, self._ssd_path)

@@ -67,6 +67,10 @@ class Transport:
         self.bytes_sent: Dict[str, int] = {}
         # per-kind message counter; the shared no-op when telemetry is off
         self._m_msgs = telemetry.counter("transport.msgs")
+        # per-SOURCE counter (ISSUE 10): the health engine's silent-server
+        # watchdog flags an endpoint whose send counter stops advancing
+        # while its peers' advance — per-kind totals can't see that
+        self._m_src = telemetry.counter("transport.src_msgs")
 
     def register(self, name: str) -> Endpoint:
         ep = Endpoint(name, self)
@@ -108,6 +112,7 @@ class Transport:
         # its span under ours; replies route through here too
         payload = telemetry.trace_inject(payload)
         self._m_msgs.inc(label=kind)
+        self._m_src.inc(label=src)
         msg_id = next(self._ids)
         with self._lock:
             ep = self._endpoints.get(dst)
@@ -130,6 +135,7 @@ class Transport:
         the regular inbox instead of a stale waiter."""
         payload = telemetry.trace_inject(payload)
         self._m_msgs.inc(label=kind)
+        self._m_src.inc(label=src_ep.name)
         if sink is None:
             sink = queue.Queue()
         msg_id = next(self._ids)
@@ -154,6 +160,7 @@ class Transport:
         """Blocking RPC: send and wait for the reply (None on timeout)."""
         payload = telemetry.trace_inject(payload)
         self._m_msgs.inc(label=kind)
+        self._m_src.inc(label=src_ep.name)
         waiter: "queue.Queue[Message]" = queue.Queue()
         msg_id = next(self._ids)
         with src_ep._lock:

@@ -1,3 +1,4 @@
+import json
 import os
 import sys
 import tempfile
@@ -17,6 +18,22 @@ import pytest  # noqa: E402
 from repro.core import locktrack, telemetry  # noqa: E402
 
 
+def _artifact(env_key: str, filename: str) -> str:
+    """Failure-artifact path resolution (ISSUE 10): each artifact is
+    individually overridable by its own env var, and all of them default
+    under one collection directory ($BB_ARTIFACT_DIR, else the system
+    tempdir) so CI uploads a single folder."""
+    override = os.environ.get(env_key)
+    if override:
+        return override
+    adir = os.environ.get("BB_ARTIFACT_DIR") or tempfile.gettempdir()
+    try:
+        os.makedirs(adir, exist_ok=True)
+    except OSError:
+        adir = tempfile.gettempdir()
+    return os.path.join(adir, filename)
+
+
 @pytest.fixture(scope="session", autouse=True)
 def _lock_order_tracking():
     """Run the whole suite with instrumented locks (bbcheck rule 2's
@@ -34,9 +51,7 @@ def _lock_order_tracking():
     if tr.inversions:
         # post-mortem artifact: acquisition digraph, inversion stacks,
         # and every live thread's current stack
-        path = os.environ.get(
-            "BB_LOCK_ARTIFACT",
-            os.path.join(tempfile.gettempdir(), "bb-lock-inversions.json"))
+        path = _artifact("BB_LOCK_ARTIFACT", "bb-lock-inversions.json")
         tr.dump(path)
         pytest.fail(
             f"lock-order inversions recorded during test run "
@@ -46,18 +61,30 @@ def _lock_order_tracking():
 
 @pytest.hookimpl(hookwrapper=True)
 def pytest_runtest_makereport(item, call):
-    """Flight-recorder post-mortem (ISSUE 9): any failing test phase dumps
-    the bounded per-component event rings to a JSON artifact, next to the
-    lock-order artifact — a red test ships its own recent-event history."""
+    """Failure post-mortems (ISSUES 9/10): any failing test phase dumps
+    the flight recorder's bounded per-component event rings AND a health
+    engine evaluation over the live registry — a red test ships its own
+    recent-event history plus the SLO/watchdog verdicts at death, next to
+    the lock-order artifact under $BB_ARTIFACT_DIR."""
     outcome = yield
     report = outcome.get_result()
     if report.failed and telemetry.enabled():
-        path = os.environ.get(
-            "BB_FLIGHT_ARTIFACT",
-            os.path.join(tempfile.gettempdir(), "bb-flight.json"))
+        path = _artifact("BB_FLIGHT_ARTIFACT", "bb-flight.json")
         try:
             telemetry.dump_flight(path, test=item.nodeid, phase=report.when)
             report.sections.append(
                 ("flight recorder", f"event rings dumped to {path}"))
         except OSError:
+            pass
+        hpath = _artifact("BB_HEALTH_ARTIFACT", "bb-health.json")
+        try:
+            from repro.core.health import HealthEngine
+            verdict = HealthEngine().evaluate(telemetry.snapshot())
+            with open(hpath, "w") as fh:
+                json.dump({"health": verdict, "test": item.nodeid,
+                           "phase": report.when}, fh, indent=2,
+                          sort_keys=True, default=repr)
+            report.sections.append(
+                ("health engine", f"verdicts dumped to {hpath}"))
+        except Exception:
             pass

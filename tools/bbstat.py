@@ -6,9 +6,16 @@ little traffic through it, and scrapes that. Histograms print count / mean /
 max plus an approximate p50/p99 interpolated from the fixed buckets;
 counters, gauges and poll snapshots print flat.
 
+Exit code 3 when any configured server is missing from the scrape (the
+document's ``expected``/``missing`` fields, ISSUE 10) — a dead server is
+skipped by ``transport.alive()``, so without this a partial scrape looks
+exactly like a healthy one to CI.
+
 Usage:
   python -m tools.bbstat SCRAPE.json            pretty-print a saved scrape
+  python -m tools.bbstat SCRAPE.json --watch 5  re-read + re-print loop
   python -m tools.bbstat --demo                 live demo system, then scrape
+  python -m tools.bbstat --demo --watch 1       live demo, periodic re-scrape
   python -m tools.bbstat --demo --trace T.json  also export Chrome trace JSON
   python -m tools.bbstat --demo --json S.json   also save the raw scrape
 """
@@ -18,6 +25,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 
 def _import_repro():
@@ -54,7 +62,8 @@ def _fmt_s(v: float) -> str:
     return f"{v * 1e6:.0f}us"
 
 
-def print_scrape(doc: dict, out=sys.stdout):
+def print_scrape(doc: dict, out=None):
+    out = out or sys.stdout             # resolved late: capture-friendly
     reg = doc.get("registry", doc)      # accept a bare registry snapshot
     w = out.write
     for name, series in sorted(reg.get("counters", {}).items()):
@@ -94,8 +103,23 @@ def print_scrape(doc: dict, out=sys.stdout):
         w(f"  {json.dumps(stats, sort_keys=True, default=repr)}\n")
 
 
-def _demo(trace_path=None):
-    """Small live system under real traffic, scraped with telemetry on."""
+def check_missing(doc: dict, out=None) -> int:
+    """Nonzero (3) when any configured server is absent from the scrape.
+    Pre-ISSUE-10 documents without membership fields fall back to
+    ``expected`` minus the answering set, else pass vacuously."""
+    out = out or sys.stdout
+    missing = doc.get("missing")
+    if missing is None and "expected" in doc:
+        missing = sorted(set(doc["expected"]) - set(doc.get("servers", {})))
+    if missing:
+        out.write(f"bbstat: MISSING servers: {', '.join(missing)}\n")
+        return 3
+    return 0
+
+
+def _demo_start():
+    """Small live system under real traffic, telemetry on. The system is
+    returned running so --watch can re-scrape it; _demo_stop tears down."""
     _import_repro()
     from repro.core import telemetry
     from repro.core.system import BBConfig, BurstBufferSystem
@@ -104,25 +128,26 @@ def _demo(trace_path=None):
     cfg = BBConfig(num_servers=3, num_clients=2, dram_capacity=8 << 20)
     system = BurstBufferSystem(cfg)
     system.start()
-    try:
-        fs = system.fs()
-        with telemetry.span("bbstat.demo", "app"):
-            f = fs.open("demo/data", "w", policy="batched",
-                        lane="checkpoint")
-            chunk = os.urandom(64 << 10)
-            for i in range(64):
-                f.pwrite(chunk, i * len(chunk))
-            f.close()
-        system.flush(1)
-        scrape = system.scrape()
-    finally:
-        system.stop()
+    fs = system.fs()
+    with telemetry.span("bbstat.demo", "app"):
+        f = fs.open("demo/data", "w", policy="batched",
+                    lane="checkpoint")
+        chunk = os.urandom(64 << 10)
+        for i in range(64):
+            f.pwrite(chunk, i * len(chunk))
+        f.close()
+    system.flush(1)
+    return system
+
+
+def _demo_stop(system, trace_path=None):
+    from repro.core import telemetry
+    system.stop()
     if trace_path:
         telemetry.export_chrome(trace_path)
         print(f"bbstat: Chrome trace at {trace_path} "
               f"(open in https://ui.perfetto.dev)")
     telemetry.disable()
-    return scrape
 
 
 def main(argv=None) -> int:
@@ -131,25 +156,49 @@ def main(argv=None) -> int:
                     help="saved scrape document to pretty-print")
     ap.add_argument("--demo", action="store_true",
                     help="run a small live system and scrape it")
+    ap.add_argument("--watch", type=float, metavar="SECS",
+                    help="re-scrape (or re-read the file) every SECS "
+                         "seconds until interrupted")
+    ap.add_argument("--frames", type=int, metavar="N",
+                    help="with --watch: stop after N frames (scripting)")
     ap.add_argument("--trace", metavar="PATH",
                     help="with --demo: export Chrome trace-event JSON")
     ap.add_argument("--json", metavar="PATH",
                     help="also write the raw scrape document to PATH")
     args = ap.parse_args(argv)
-
-    if args.demo:
-        doc = _demo(args.trace)
-    elif args.scrape:
-        with open(args.scrape) as fh:
-            doc = json.load(fh)
-    else:
+    if not args.demo and not args.scrape:
         ap.error("either SCRAPE.json or --demo is required")
-    if args.json:
-        with open(args.json, "w") as fh:
-            json.dump(doc, fh, indent=2, sort_keys=True, default=repr)
-        print(f"bbstat: scrape saved to {args.json}")
-    print_scrape(doc)
-    return 0
+
+    system = _demo_start() if args.demo else None
+    rc = 0
+    try:
+        n = 0
+        while True:
+            if system is not None:
+                doc = system.scrape()
+            else:
+                with open(args.scrape) as fh:
+                    doc = json.load(fh)
+            if args.json:
+                with open(args.json, "w") as fh:
+                    json.dump(doc, fh, indent=2, sort_keys=True,
+                              default=repr)
+                print(f"bbstat: scrape saved to {args.json}")
+            if args.watch:
+                sys.stdout.write("\x1b[2J\x1b[H")       # clear screen
+            print_scrape(doc)
+            # a partial scrape must fail loud, in every mode (ISSUE 10)
+            rc = check_missing(doc) or rc
+            n += 1
+            if not args.watch or (args.frames and n >= args.frames):
+                break
+            time.sleep(args.watch)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        if system is not None:
+            _demo_stop(system, args.trace)
+    return rc
 
 
 if __name__ == "__main__":

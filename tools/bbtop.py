@@ -1,0 +1,187 @@
+"""bbtop: live cluster health dashboard (ISSUE 10).
+
+Renders the health engine's verdict stream — overall status, SLO rule
+verdicts with their offending numbers, stall-watchdog anomalies,
+per-server occupancy / lane-queue depth, and the top critical-path
+bottleneck — either from a saved JSON document or live from a --demo
+system. The machine mode (``--once --json``) prints one frame as JSON to
+stdout for scripting, carrying the engine's verdicts verbatim.
+
+Accepted input documents: a ``BurstBufferSystem.health()`` report, a
+``pressure()`` report (which embeds one under ``"health"``), or a frame
+``{"health": ..., "pressure": ...}`` as emitted by ``--json``.
+
+Usage:
+  python -m tools.bbtop HEALTH.json             render one frame and exit
+  python -m tools.bbtop HEALTH.json --json      machine-readable frame
+  python -m tools.bbtop HEALTH.json --watch 2   re-read + re-render loop
+  python -m tools.bbtop --demo --watch 1        live demo system dashboard
+
+Exit code 4 when the frame's overall status is ``critical`` (scriptable
+alerting), 0 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_MARK = {"ok": " ok ", "warn": "WARN", "critical": "CRIT",
+         "disabled": "off ", "unknown": " ?? "}
+
+
+def _import_repro():
+    try:
+        from repro.core import telemetry     # noqa: F401
+    except ImportError:
+        src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+        sys.path.insert(0, os.path.abspath(src))
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v and abs(v) < 0.1:
+            return f"{v * 1e3:.2f}m"
+        return f"{v:.3g}"
+    return str(v)
+
+
+def as_frame(doc: dict) -> dict:
+    """Normalize any accepted input document into a frame."""
+    if "health" in doc:                     # frame or pressure report
+        return {"health": doc["health"],
+                "pressure": doc.get("pressure",
+                                    doc if "servers" in doc else None)}
+    if "slos" in doc:                       # bare health report
+        return {"health": doc, "pressure": None}
+    raise ValueError("not a health/pressure/frame document "
+                     "(expected a 'health' or 'slos' key)")
+
+
+def render(frame: dict, out=None):
+    w = (out or sys.stdout).write       # resolved late: capture-friendly
+    h = frame.get("health") or {}
+    status = h.get("status", "unknown")
+    w(f"bbtop  status={status.upper():<9} evals={h.get('evals', 0)}"
+      f"  t={_fmt(h.get('t'))}\n")
+    w("slo rules:\n")
+    for s in h.get("slos", []):
+        label = f" [{s['label']}]" if s.get("label") else ""
+        w(f"  [{_MARK.get(s['verdict'], s['verdict'])}] "
+          f"{s['rule']:<24} value={_fmt(s.get('value')):<10}"
+          f" warn={_fmt(s.get('warn'))} crit={_fmt(s.get('critical'))}"
+          f"{label}\n")
+    wds = h.get("watchdogs", [])
+    w(f"watchdogs: {'none firing' if not wds else ''}\n")
+    for a in wds:
+        who = a.get("server") or a.get("phase") or "-"
+        detail = ", ".join(f"{k}={_fmt(v)}" for k, v in sorted(a.items())
+                           if k not in ("kind", "verdict"))
+        w(f"  [{_MARK.get(a['verdict'], a['verdict'])}] "
+          f"{a['kind']:<16} {who}: {detail}\n")
+    pressure = frame.get("pressure") or {}
+    servers = pressure.get("servers", {})
+    if servers:
+        w("servers:\n")
+        for name, p in sorted(servers.items()):
+            occ = p.get("fraction", 0.0)
+            bar = "#" * int(occ * 20.0 + 0.5)
+            w(f"  {name:<12} occ={occ:6.1%} [{bar:<20}]"
+              f" draining={'y' if p.get('draining') else 'n'}\n")
+    top = (h.get("bottlenecks") or {}).get("top")
+    ops = (h.get("bottlenecks") or {}).get("ops", {})
+    w(f"bottleneck: {top['summary'] if top else 'no completed traces yet'}"
+      "\n")
+    for kind, op in sorted(ops.items()):
+        segs = " ".join(
+            f"{seg}={op['segments'][seg]['share']:.0%}"
+            for seg in ("queue", "service", "fsync", "network")
+            if seg in op.get("segments", {}))
+        w(f"  {kind:<24} n={op['count']:<6} p99={_fmt(op['p99_s'])}s"
+          f"  {segs}\n")
+
+
+def _demo_start():
+    """Small live system under a little traffic, telemetry on."""
+    _import_repro()
+    from repro.core import telemetry
+    from repro.core.system import BBConfig, BurstBufferSystem
+
+    telemetry.enable()
+    cfg = BBConfig(num_servers=3, num_clients=2, dram_capacity=8 << 20)
+    system = BurstBufferSystem(cfg)
+    system.start()
+    fs = system.fs()
+    with telemetry.span("bbtop.demo", "app"):
+        f = fs.open("demo/data", "w", policy="batched", lane="checkpoint")
+        chunk = os.urandom(64 << 10)
+        for i in range(64):
+            f.pwrite(chunk, i * len(chunk))
+        f.close()
+    system.flush(1)
+    return system
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="bbtop", description=__doc__)
+    ap.add_argument("doc", nargs="?", metavar="HEALTH.json",
+                    help="saved health / pressure / frame document")
+    ap.add_argument("--demo", action="store_true",
+                    help="run a small live system and watch it")
+    ap.add_argument("--watch", type=float, metavar="SECS",
+                    help="refresh every SECS seconds until interrupted")
+    ap.add_argument("--once", action="store_true",
+                    help="render exactly one frame (the default without "
+                         "--watch)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="print the frame as JSON instead of rendering")
+    ap.add_argument("--frames", type=int, metavar="N",
+                    help="with --watch: stop after N frames (scripting)")
+    args = ap.parse_args(argv)
+    if not args.demo and not args.doc:
+        ap.error("either HEALTH.json or --demo is required")
+
+    system = _demo_start() if args.demo else None
+
+    def frame() -> dict:
+        if system is not None:
+            return {"health": system.health(),
+                    "pressure": system.pressure()}
+        with open(args.doc) as fh:
+            return as_frame(json.load(fh))
+
+    status = "unknown"
+    try:
+        n = 0
+        while True:
+            f = frame()
+            status = (f.get("health") or {}).get("status", "unknown")
+            if args.as_json:
+                json.dump(f, sys.stdout, indent=2, sort_keys=True,
+                          default=repr)
+                sys.stdout.write("\n")
+            else:
+                if args.watch and not args.once:
+                    sys.stdout.write("\x1b[2J\x1b[H")   # clear screen
+                render(f)
+            n += 1
+            if args.once or not args.watch \
+                    or (args.frames and n >= args.frames):
+                break
+            time.sleep(args.watch)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        if system is not None:
+            system.stop()
+            from repro.core import telemetry
+            telemetry.disable()
+    return 4 if status == "critical" else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
